@@ -1,0 +1,61 @@
+"""Shared benchmark scaffolding: strategy evaluation for the Fig. 12/13
+reproduction and CSV emission helpers."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+from repro.core import cost_model as CM
+from repro.core.placement import (Placement, ResourceGraph, Stage, evaluate,
+                                  profiles_from_cnn, solve)
+from repro.core.privacy import resolution_similarity
+from repro.models.cnn import CNN_MODELS
+
+N_FRAMES = 10_800                       # the paper's dataset (Sec. VI)
+DELTA = resolution_similarity(20)       # δ = 20x20 px
+
+
+def tee2():
+    return dataclasses.replace(CM.TEE, name="tee2")
+
+
+def graph(devs) -> ResourceGraph:
+    return ResourceGraph(devs, {}, CM.WAN_30MBPS)
+
+
+def full_graph() -> ResourceGraph:
+    return graph({"tee1": CM.TEE, "tee2": tee2(), "gpu": CM.GPU})
+
+
+def strategy_times(model: str, n: int = N_FRAMES) -> Dict[str, object]:
+    """The five strategies of Sec. VI-C for one CNN model."""
+    profs = profiles_from_cnn(CNN_MODELS[model])
+    M = len(profs)
+    g_all = full_graph()
+    base = evaluate(Placement((Stage("tee1", 0, M),)), profs, g_all, n, DELTA)
+
+    out: Dict[str, object] = {"model": model, "1tee": base}
+    b, _ = solve(profs, graph({"tee1": CM.TEE, "gpu": CM.GPU}), n=n, delta=DELTA)
+    out["1tee+gpu"] = b
+    b, _ = solve(profs, graph({"tee1": CM.TEE, "tee2": tee2()}), n=n, delta=DELTA)
+    out["2tee"] = b
+    b, _ = solve(profs, g_all, n=n, delta=DELTA)
+    out["proposed"] = b
+    b, _ = solve(profs, g_all, n=n, delta=DELTA, pipelined=False)
+    out["no_pipelining"] = evaluate(b.placement, profs, g_all, n, DELTA)
+    return out
+
+
+def emit(rows: List[str]):
+    for r in rows:
+        print(r)
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    fn(*args, **kw)                     # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6                # us per call

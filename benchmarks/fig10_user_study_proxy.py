@@ -1,0 +1,57 @@
+"""Fig. 10/11 proxy: identifiability vs resolution.
+
+The paper's user study measured human object recognition at each
+intermediate resolution (100% above 110px, cliff below 20px). Without human
+subjects we use SSIM of the downsample->upsample reconstruction as the
+identifiability proxy and check the same threshold structure, plus the
+rank-agreement experiment of Fig. 11 (resolution ordering vs SSIM ordering).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.privacy import downsample_similarity
+from repro.data.stream import VideoChunkStream
+
+RESOLUTIONS = [112, 55, 28, 14, 7]
+
+
+def proxy_curve(n_images: int = 12):
+    stream = VideoChunkStream(resolution=224, chunk_size=1, seed=3)
+    scores = {r: [] for r in RESOLUTIONS}
+    for i in range(n_images):
+        img = jnp.asarray(stream.frame(i, 0)[:, :, 0])
+        for r in RESOLUTIONS:
+            scores[r].append(downsample_similarity(img, r))
+    return {r: float(np.mean(v)) for r, v in scores.items()}
+
+
+def rank_agreement(n_images: int = 12):
+    """Fraction of images whose SSIM ordering equals the resolution
+    ordering, per rank position (paper: consensus at the low-res end)."""
+    stream = VideoChunkStream(resolution=224, chunk_size=1, seed=4)
+    agree = np.zeros(len(RESOLUTIONS))
+    for i in range(n_images):
+        img = jnp.asarray(stream.frame(i, 0)[:, :, 0])
+        sims = [downsample_similarity(img, r) for r in RESOLUTIONS]
+        order = np.argsort(np.argsort([-s for s in sims]))
+        for pos in range(len(RESOLUTIONS)):
+            agree[pos] += (order[pos] == pos)
+    return agree / n_images
+
+
+def main():
+    curve = proxy_curve()
+    print("fig10:resolution,identifiability_proxy")
+    for r in RESOLUTIONS:
+        print(f"fig10:{r},{curve[r]:.3f}")
+    assert curve[112] > curve[14], "proxy must fall with resolution"
+    agree = rank_agreement()
+    print("fig11:rank,ssim_agreement")
+    for pos, a in enumerate(agree):
+        print(f"fig11:{pos + 1},{a:.2f}")
+
+
+if __name__ == "__main__":
+    main()

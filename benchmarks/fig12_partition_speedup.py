@@ -1,0 +1,28 @@
+"""Fig. 12: speedup of each partitioning strategy over 1 TEE, 10,800 frames.
+
+Paper bands: 2TEE 1.8-1.95x (GoogLeNet/MobileNet/SqueezeNet), 1TEE+GPU
+2.5-3.1x (AlexNet/ResNet), proposed 3.2-4.7x, no-pipelining == 1TEE+GPU
+decision. Our reproduction bands are asserted in tests/test_placement.py;
+deviations are recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from .common import N_FRAMES, strategy_times
+from repro.models.cnn import CNN_MODELS
+
+STRATEGIES = ["no_pipelining", "1tee+gpu", "2tee", "proposed"]
+
+
+def main():
+    print("fig12:model,strategy,speedup,placement")
+    for model in sorted(CNN_MODELS):
+        r = strategy_times(model)
+        base = r["1tee"].t_chunk
+        for s in STRATEGIES:
+            ev = r[s]
+            print(f"fig12:{model},{s},{base / ev.t_chunk:.2f},"
+                  f"{ev.placement.describe().replace(',', ';')}")
+
+
+if __name__ == "__main__":
+    main()

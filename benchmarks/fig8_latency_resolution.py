@@ -1,0 +1,38 @@
+"""Fig. 8: cumulative inference-time fraction vs intermediate resolution.
+
+For each CNN, walks the layer table accumulating TEE execution time and
+reports the resolution after each layer + the %-of-total-time point where
+the output first drops below the 20x20 privacy threshold.
+"""
+from __future__ import annotations
+
+from repro.core import cost_model as CM
+from repro.core.placement import profiles_from_cnn, Stage, _stage_exec
+from repro.models.cnn import CNN_MODELS
+
+
+def crossing_points():
+    rows = []
+    for model, table in sorted(CNN_MODELS.items()):
+        profs = profiles_from_cnn(table)
+        M = len(profs)
+        total = _stage_exec(profs, Stage("tee1", 0, M), CM.TEE)
+        cum = 0.0
+        crossed_at = 1.0
+        for i, (layer, prof) in enumerate(zip(table, profs)):
+            cum = _stage_exec(profs, Stage("tee1", 0, i + 1), CM.TEE)
+            rows.append((model, layer.name, layer.resolution, cum / total))
+            if layer.resolution < 20 and crossed_at == 1.0:
+                crossed_at = cum / total
+        rows.append((model, "THRESHOLD<20px", 20, crossed_at))
+    return rows
+
+
+def main():
+    print("fig8:model,layer,resolution,cum_time_frac")
+    for model, layer, res, frac in crossing_points():
+        print(f"fig8:{model},{layer},{res},{frac:.3f}")
+
+
+if __name__ == "__main__":
+    main()

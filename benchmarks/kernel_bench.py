@@ -1,0 +1,40 @@
+"""Kernel microbenchmarks: seal/unseal + flash attention vs their oracles
+(interpret mode on CPU — correctness + relative cost, not TPU wall time)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as KR
+from repro.kernels import ops as KO
+from .common import timed
+
+
+def main():
+    print("kernel:name,us_per_call,derived")
+    key, ctr = jnp.uint32(0x1234), jnp.uint32(0)
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 2048), jnp.float32)
+    (c, s), us = timed(lambda: jax.block_until_ready(
+        KO.seal(x, key, ctr, use_kernel=False)))
+    gbps = x.size * 4 / (us / 1e6) / 1e9
+    print(f"kernel:seal_ref_512x2048,{us:.0f},{gbps:.2f}GB/s")
+    wire = c.size + s.size * 4
+    print(f"kernel:seal_compression,{us:.0f},{x.size * 2 / wire:.2f}x_vs_bf16")
+
+    y, us = timed(lambda: jax.block_until_ready(
+        KO.unseal(c, s, key, ctr, jnp.float32, use_kernel=False)))
+    print(f"kernel:unseal_ref_512x2048,{us:.0f},-")
+
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 512, 4, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 512, 2, 64), jnp.float32)
+    _, us = timed(lambda: jax.block_until_ready(
+        KO.flash_attention(q, k, v, causal=True, use_kernel=False)))
+    flops = 4 * 512 * 512 / 2 * 4 * 64
+    print(f"kernel:flash_oracle_512,{us:.0f},{flops / (us / 1e6) / 1e9:.1f}GFLOP/s")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Beyond-paper: Serdab placement applied to the assigned LM architectures
+across TPU trust-domain pods (cost model from core.cost_model TPU profiles).
+
+For each arch: per-block decode profiles + calibrated representation
+similarities -> solver picks stage boundaries across {trusted pod, trusted
+pod 2, untrusted pod}; reports the pipelined speedup over one trusted pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import ARCHS, get_arch
+from repro.core import cost_model as CM
+from repro.core.placement import (Placement, ResourceGraph, Stage, evaluate,
+                                  profiles_from_arch, solve)
+from repro.core.privacy import LM_SIM_DELTA
+
+
+def domains():
+    t2 = dataclasses.replace(CM.TPU_POD_TRUSTED, name="tpu-pod-cc2")
+    return ResourceGraph({"pod0": CM.TPU_POD_TRUSTED, "pod1": t2,
+                          "pod2": CM.TPU_POD}, {}, CM.DCN_LINK)
+
+
+def main():
+    print("lm_placement:arch,stages,speedup_vs_1pod,bottleneck_us,leakage")
+    for name in sorted(ARCHS):
+        cfg = get_arch(name)
+        # a serving "frame" = one 256-token chunk (paper: one video frame)
+        profs = profiles_from_arch(cfg, seq_len=256, bytes_per_el=1)
+        g = domains()
+        M = len(profs)
+        base = evaluate(Placement((Stage("pod0", 0, M),)), profs, g,
+                        100_000, LM_SIM_DELTA)
+        best, _ = solve(profs, g, n=100_000, delta=LM_SIM_DELTA)
+        print(f"lm_placement:{name},{best.placement.describe().replace(',', ';')},"
+              f"{base.t_chunk / best.t_chunk:.2f},"
+              f"{best.bottleneck * 1e6:.1f},{best.max_similarity:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""LM-adapted Fig. 8: per-block representation similarity to the input
+embedding, on real (reduced-config) models with a calibration batch.
+
+This is the empirical grounding for core.privacy.LM_SIM_DELTA: the depth at
+which cos(h_l, h_0) falls below δ is the minimum trusted-prefix depth for
+the Serdab constraint C2 on an LM — analogous to the 20x20 px threshold for
+CNNs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced
+from repro.core.privacy import LM_SIM_DELTA, lm_similarity_profile, private_depth
+from repro.models.api import build_model
+
+ARCHS = ["llama3.2-1b", "glm4-9b", "qwen2-moe-a2.7b", "hymba-1.5b",
+         "xlstm-125m"]
+
+
+def profile(name: str):
+    cfg = reduced(get_arch(name))
+    api = build_model(cfg, max_seq=64)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
+                              cfg.vocab_size, jnp.int32)
+    hs = api.model.hidden_states_fn(params, {"tokens": toks})
+    sims = lm_similarity_profile(hs)
+    return sims, private_depth(sims, LM_SIM_DELTA)
+
+
+def main():
+    print("lm_similarity:arch,block,cos_sim_to_input")
+    for name in ARCHS:
+        cfg = reduced(get_arch(name))
+        try:
+            sims, depth = profile(name)
+        except AttributeError:
+            print(f"lm_similarity:{name},-,unsupported(hidden-states)")
+            continue
+        for i, s in enumerate(sims):
+            print(f"lm_similarity:{name},{i},{s:.3f}")
+        frac = depth / len(sims)
+        print(f"lm_similarity:{name},PRIVATE_DEPTH(δ={LM_SIM_DELTA}),"
+              f"{depth}/{len(sims)}={frac:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Roofline tables from the dry-run artifacts (experiments/dryrun/*.json).
+
+Produces the EXPERIMENTS.md §Dry-run and §Roofline tables: per (arch x shape
+x mesh) the three roofline terms, dominant bottleneck, MODEL_FLOPS ratio,
+bytes/device, and a one-line improvement note.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+NOTES = {
+    ("compute", "train"): "raise per-chip utilization: fuse attn (Pallas), cut remat recompute",
+    ("compute", "prefill"): "flash-attention kernel; shard seq (SP) to cut redundant softmax work",
+    ("memory", "decode"): "KV-cache traffic bound: quantize cache to int8, widen batch per chip",
+    ("memory", "train"): "optimizer-state traffic: fuse update, keep moments in bf16",
+    ("collective", "train"): "overlap grad reduce with bwd; int8 compressed cross-pod exchange",
+    ("collective", "decode"): "seq-sharded softmax psums: batch them across layers",
+}
+
+
+def load(mesh_filter=None, tag=""):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(f))
+        if "roofline" not in r:
+            continue
+        if tag != (r.get("tag") or ""):
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        rows.append(r)
+    return rows
+
+
+def kind_of(shape):
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape]
+
+
+def main():
+    print("roofline:arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,per_dev_gb,note")
+    for r in load():
+        roof = r["roofline"]
+        note = NOTES.get((roof["dominant"], kind_of(r["shape"])), "-")
+        print(f"roofline:{r['arch']},{r['shape']},{r['mesh']},"
+              f"{roof['compute_s']:.3e},{roof['memory_s']:.3e},"
+              f"{roof['collective_s']:.3e},{roof['dominant']},"
+              f"{r['useful_flops_ratio']:.2f},"
+              f"{r['memory']['per_device_gb']:.2f},{note}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV-style lines prefixed per figure.
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from . import (fig8_latency_resolution, fig10_user_study_proxy,
+                   fig12_partition_speedup, fig13_breakdown, lm_placement,
+                   lm_similarity, kernel_bench, roofline)
+    benches = [
+        ("fig8_latency_resolution", fig8_latency_resolution.main),
+        ("fig10_user_study_proxy", fig10_user_study_proxy.main),
+        ("fig12_partition_speedup", fig12_partition_speedup.main),
+        ("fig13_breakdown", fig13_breakdown.main),
+        ("lm_placement", lm_placement.main),
+        ("lm_similarity", lm_similarity.main),
+        ("kernel_bench", kernel_bench.main),
+        ("roofline", roofline.main),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        fn()
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"{name},{us:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

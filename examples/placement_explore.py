@@ -1,0 +1,25 @@
+"""Explore the placement tree for the paper's CNNs: evaluate every path,
+print the Pareto frontier (latency vs privacy leakage) for GoogLeNet.
+
+  PYTHONPATH=src python examples/placement_explore.py
+"""
+from benchmarks.common import DELTA, N_FRAMES, full_graph
+from repro.core.placement import profiles_from_cnn, solve
+from repro.models.cnn import CNN_MODELS
+
+profs = profiles_from_cnn(CNN_MODELS["googlenet"])
+best, evals = solve(profs, full_graph(), n=N_FRAMES, delta=DELTA)
+feasible = [e for e in evals if e.feasible]
+print(f"{len(evals)} paths, {len(feasible)} feasible under δ={DELTA:.3f}")
+print("best:", best.placement.describe())
+
+# Pareto: min completion per leakage bucket
+pareto = {}
+for e in evals:
+    key = round(e.max_similarity, 2)
+    if key not in pareto or e.t_chunk < pareto[key].t_chunk:
+        pareto[key] = e
+print("\nleakage  t_chunk(s)   placement")
+for k in sorted(pareto):
+    e = pareto[k]
+    print(f"{k:7.2f}  {e.t_chunk:10.0f}   {e.placement.describe()}")

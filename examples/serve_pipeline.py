@@ -1,0 +1,17 @@
+"""Serdab pipelined serving across two simulated enclave pods with sealed
+boundaries (run under 4 fake devices).
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python examples/serve_pipeline.py
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "llama3.2-1b", "--reduced", "--mesh", "2x2",
+                "--stages", "2", "--microbatches", "2", "--batch", "4",
+                "--prompt-len", "12", "--requests", "4"])

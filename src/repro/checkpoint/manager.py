@@ -1,0 +1,153 @@
+"""Sharded checkpointing with atomic commit, async save, retention, and
+elastic restore (re-sharding onto a different mesh).
+
+Layout:  <dir>/step_<N>/  arrays.npz + manifest.json  (+ .sha256)
+         <dir>/LATEST     -> committed step number (written last = atomic)
+
+Restore never requires the saving mesh: leaves are materialized host-side
+and ``jax.device_put`` re-shards them onto the target shardings — this is
+what elastic scaling uses when the pod count changes between runs.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _np_dtype(dt):
+    try:
+        return np.dtype(dt)
+    except TypeError:
+        return np.float32                    # extended dtypes restored via jnp
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    named = {}
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        named[name] = leaf
+    return named, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             block: bool = False) -> None:
+        self.wait()
+        named, _ = _flatten_with_names(tree)
+        # numpy cannot serialize bfloat16 — widen to f32 (lossless), the
+        # restore path casts back to the target leaf dtype.
+        def to_host(v):
+            a = np.asarray(v)
+            if a.dtype.kind == "V":          # ml_dtypes (bf16 etc.)
+                return np.asarray(jax.numpy.asarray(v).astype(jax.numpy.float32))
+            return a
+        host = {k: to_host(v) for k, v in named.items()}
+
+        def commit():
+            tmp = os.path.join(self.dir, f".tmp_step_{step}")
+            final = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host)
+            manifest = {
+                "step": step,
+                "time": time.time(),
+                "extra": extra or {},
+                "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                           for k, v in host.items()},
+            }
+            blob = json.dumps(manifest, indent=1).encode()
+            with open(os.path.join(tmp, "manifest.json"), "wb") as f:
+                f.write(blob)
+            with open(os.path.join(tmp, "manifest.sha256"), "w") as f:
+                f.write(hashlib.sha256(blob).hexdigest())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)                      # atomic commit
+            with open(os.path.join(self.dir, "LATEST"), "w") as f:
+                f.write(str(step))
+            self._gc()
+
+        if self.async_save and not block:
+            self._pending = threading.Thread(target=commit, daemon=True)
+            self._pending.start()
+        else:
+            commit()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            s = int(f.read().strip())
+        return s if s in self.all_steps() else (self.all_steps() or [None])[-1]
+
+    def restore(self, step: int, like: Any, shardings: Any = None,
+                verify: bool = True) -> Any:
+        """``like``: pytree (arrays or ShapeDtypeStructs) giving structure.
+        ``shardings``: matching tree of NamedShardings for elastic re-shard."""
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json"), "rb") as f:
+            blob = f.read()
+        if verify:
+            with open(os.path.join(d, "manifest.sha256")) as f:
+                assert hashlib.sha256(blob).hexdigest() == f.read().strip(), \
+                    "checkpoint manifest corrupted"
+        data = np.load(os.path.join(d, "arrays.npz"))
+        named, treedef = _flatten_with_names(like)
+        leaves = []
+        shard_named = None
+        if shardings is not None:
+            shard_named, _ = _flatten_with_names(shardings)
+        for name, leaf in named.items():
+            arr = data[name]
+            want = tuple(leaf.shape)
+            if tuple(arr.shape) != want:
+                raise ValueError(f"{name}: checkpoint shape {arr.shape} != {want}")
+            arr = arr.astype(_np_dtype(leaf.dtype)) \
+                if str(arr.dtype) != str(leaf.dtype) else arr
+            if shard_named is not None:
+                leaves.append(jax.device_put(
+                    jax.numpy.asarray(arr).astype(leaf.dtype),
+                    shard_named[name]))
+            else:
+                leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+        return jax.tree.unflatten(treedef, leaves)
+
+    def manifest(self, step: int) -> Dict:
+        with open(os.path.join(self.dir, f"step_{step}", "manifest.json")) as f:
+            return json.load(f)

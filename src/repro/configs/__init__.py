@@ -1,0 +1,44 @@
+"""Config registry: ``get_arch(name)``, ``list_archs()``, shapes, reductions."""
+from __future__ import annotations
+
+from .base import (ArchConfig, ShapeConfig, SHAPES, reduced, shape_applicable,
+                   DENSE, MOE, SSM, HYBRID, ENCDEC, VLM, CNN)
+
+from .moonshot_v1_16b_a3b import CONFIG as _moonshot
+from .qwen2_moe_a2_7b import CONFIG as _qwen2_moe
+from .whisper_small import CONFIG as _whisper
+from .glm4_9b import CONFIG as _glm4
+from .command_r_35b import CONFIG as _command_r
+from .llama3_2_3b import CONFIG as _llama3b
+from .llama3_2_1b import CONFIG as _llama1b
+from .xlstm_125m import CONFIG as _xlstm
+from .hymba_1_5b import CONFIG as _hymba
+from .qwen2_vl_7b import CONFIG as _qwen2_vl
+
+ARCHS = {c.name: c for c in [
+    _moonshot, _qwen2_moe, _whisper, _glm4, _command_r,
+    _llama3b, _llama1b, _xlstm, _hymba, _qwen2_vl,
+]}
+
+assert len(ARCHS) == 10, "exactly the 10 assigned architectures"
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "ARCHS", "get_arch",
+           "get_shape", "list_archs", "reduced", "shape_applicable",
+           "DENSE", "MOE", "SSM", "HYBRID", "ENCDEC", "VLM", "CNN"]

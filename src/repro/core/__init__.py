@@ -1,0 +1,12 @@
+from .cost_model import (DeviceProfile, LinkProfile, TEE, CPU, GPU,
+                         WAN_30MBPS, TPU_POD, TPU_POD_TRUSTED, DCN_LINK,
+                         EPC_BYTES, layer_exec_time, seal_time, transmit_time,
+                         paging_factor)
+from .placement import (LayerProfile, ResourceGraph, Stage, Placement,
+                        Evaluation, enumerate_placements, evaluate, solve,
+                        profiles_from_cnn, profiles_from_arch)
+from .pipeline_sim import simulate_pipeline, closed_form_completion
+from .privacy import (RESOLUTION_DELTA, LM_SIM_DELTA, resolution_private,
+                      resolution_similarity, pearson, ssim,
+                      downsample_similarity, lm_similarity_profile,
+                      private_depth)

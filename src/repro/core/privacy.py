@@ -1,0 +1,103 @@
+"""Privacy (similarity) metrics for placement constraint C2.
+
+Paper metric (CNNs): the *resolution* of a single feature map in the layer's
+output grid — below δ = 20x20 px, the user study (Fig. 10/11) shows objects
+are no longer identifiable. We keep that metric verbatim, plus SSIM/Pearson
+alternatives used for the Fig. 10 proxy benchmark.
+
+LM adaptation (beyond paper): per-block *representation similarity* — the
+max-over-tokens cosine similarity between layer-l hidden states and the
+input embeddings, computed on a calibration batch. The constraint "may only
+leave the trusted domain once Sim < δ" is the same C2, with δ calibrated so
+the boundary depth fraction is comparable to the CNN case.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESOLUTION_DELTA = 20          # the paper's 20x20 px threshold
+LM_SIM_DELTA = 0.5             # calibrated, see EXPERIMENTS.md
+
+
+# ---------------------------------------------------------------------------
+# Paper metric: resolution
+# ---------------------------------------------------------------------------
+def resolution_private(resolution: int, delta: int = RESOLUTION_DELTA) -> bool:
+    return resolution < delta
+
+
+def resolution_similarity(resolution: int, input_resolution: int = 224) -> float:
+    """Monotone similarity proxy in [0, 1] from the resolution schedule."""
+    return min(1.0, resolution / float(input_resolution))
+
+
+# ---------------------------------------------------------------------------
+# Image-space similarity functions (Fig. 10/11 proxy)
+# ---------------------------------------------------------------------------
+def pearson(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    a = a.reshape(-1).astype(jnp.float32)
+    b = b.reshape(-1).astype(jnp.float32)
+    a = a - a.mean()
+    b = b - b.mean()
+    denom = jnp.sqrt((a * a).sum() * (b * b).sum()) + 1e-9
+    return (a * b).sum() / denom
+
+
+def ssim(a: jnp.ndarray, b: jnp.ndarray, *, c1: float = 0.01 ** 2,
+         c2: float = 0.03 ** 2, win: int = 8) -> jnp.ndarray:
+    """Mean local SSIM over non-overlapping windows. a, b: [H, W] in [0,1]."""
+    H, W = a.shape
+    h = (H // win) * win
+    w = (W // win) * win
+    pa = a[:h, :w].reshape(h // win, win, w // win, win).astype(jnp.float32)
+    pb = b[:h, :w].reshape(h // win, win, w // win, win).astype(jnp.float32)
+    mu_a = pa.mean(axis=(1, 3))
+    mu_b = pb.mean(axis=(1, 3))
+    var_a = pa.var(axis=(1, 3))
+    var_b = pb.var(axis=(1, 3))
+    cov = (pa * pb).mean(axis=(1, 3)) - mu_a * mu_b
+    s = ((2 * mu_a * mu_b + c1) * (2 * cov + c2)) / (
+        (mu_a ** 2 + mu_b ** 2 + c1) * (var_a + var_b + c2))
+    return s.mean()
+
+
+def downsample_similarity(image: jnp.ndarray, resolution: int,
+                          metric: str = "ssim") -> float:
+    """How identifiable a [H, W] image remains after being forced through a
+    ``resolution``-sized representation (downsample → upsample → compare)."""
+    H, W = image.shape
+    small = jax.image.resize(image, (resolution, resolution), "linear")
+    back = jax.image.resize(small, (H, W), "linear")
+    if metric == "ssim":
+        return float(ssim(image, back))
+    return float(pearson(image, back))
+
+
+# ---------------------------------------------------------------------------
+# LM adaptation: representation similarity profile
+# ---------------------------------------------------------------------------
+def lm_similarity_profile(hidden_states: jnp.ndarray) -> np.ndarray:
+    """hidden_states: [L+1, B, S, D] (entry 0 = input embeddings).
+
+    Returns sim[l] = max over tokens of |cos(h_l, h_0)| for l = 1..L —
+    the paper's max-over-dataset aggregation (Sec. IV, NN Layer Profile #4).
+    """
+    h = hidden_states.astype(jnp.float32)
+    h0 = h[0]
+    h0n = h0 / (jnp.linalg.norm(h0, axis=-1, keepdims=True) + 1e-9)
+    hn = h[1:] / (jnp.linalg.norm(h[1:], axis=-1, keepdims=True) + 1e-9)
+    cos = jnp.abs(jnp.einsum("lbsd,bsd->lbs", hn, h0n))
+    return np.asarray(cos.max(axis=(1, 2)))
+
+
+def private_depth(similarities: Sequence[float], delta: float) -> int:
+    """First block index after which the representation is private, i.e. the
+    minimum number of leading blocks that MUST stay in a trusted domain."""
+    for i, s in enumerate(similarities):
+        if s < delta:
+            return i + 1
+    return len(similarities)

@@ -1,0 +1,2 @@
+from .tokens import SyntheticTokenStream, HostShardedStream
+from .stream import VideoChunkStream

@@ -1,0 +1,3 @@
+from .domain import (TrustDomain, ResourceManager, default_two_pod_manager,
+                     two_enclave_manager)
+from . import sealing

@@ -1,0 +1,99 @@
+"""Trust domains: the TPU-scale analogue of the paper's enclave devices.
+
+A TrustDomain is a mesh segment (a pod, or a slice of one) with a trust bit,
+an effective throughput derate (confidential-compute overhead), and a sealing
+key. The Resource Manager mirrors the paper's orchestration component: it
+registers/removes domains dynamically and exports a ``ResourceGraph`` for the
+placement solver.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cost_model import (DeviceProfile, LinkProfile, TPU_POD,
+                                   TPU_POD_TRUSTED, DCN_LINK)
+from repro.core.placement import ResourceGraph
+
+
+@dataclasses.dataclass
+class TrustDomain:
+    name: str
+    trusted: bool
+    num_chips: int
+    pod_index: int                      # mesh coordinate along the pod axis
+    device: DeviceProfile
+    sealing_key: int = 0                # derived at attestation time
+    healthy: bool = True
+    last_heartbeat: float = 0.0
+
+    def derive_key(self, session_nonce: bytes) -> int:
+        h = hashlib.sha256(self.name.encode() + session_nonce).digest()
+        self.sealing_key = int.from_bytes(h[:4], "little")
+        return self.sealing_key
+
+
+class ResourceManager:
+    """Registry of trust domains (paper: 'Resource Manager' in Fig. 2)."""
+
+    def __init__(self):
+        self._domains: Dict[str, TrustDomain] = {}
+        self._links: Dict[Tuple[str, str], LinkProfile] = {}
+
+    # -- registration ------------------------------------------------------
+    def register(self, domain: TrustDomain,
+                 links: Optional[Dict[str, LinkProfile]] = None) -> None:
+        self._domains[domain.name] = domain
+        domain.last_heartbeat = time.monotonic()
+        for peer, link in (links or {}).items():
+            self._links[(domain.name, peer)] = link
+            self._links[(peer, domain.name)] = link
+
+    def remove(self, name: str) -> None:
+        self._domains.pop(name, None)
+
+    def domains(self) -> List[TrustDomain]:
+        return list(self._domains.values())
+
+    def get(self, name: str) -> TrustDomain:
+        return self._domains[name]
+
+    # -- health ------------------------------------------------------------
+    def heartbeat(self, name: str) -> None:
+        d = self._domains.get(name)
+        if d:
+            d.last_heartbeat = time.monotonic()
+            d.healthy = True
+
+    def mark_unhealthy(self, name: str) -> None:
+        if name in self._domains:
+            self._domains[name].healthy = False
+
+    def healthy_domains(self) -> List[TrustDomain]:
+        return [d for d in self._domains.values() if d.healthy]
+
+    # -- solver view -------------------------------------------------------
+    def resource_graph(self, default_link: LinkProfile = DCN_LINK
+                       ) -> ResourceGraph:
+        devices = {d.name: d.device for d in self.healthy_domains()}
+        return ResourceGraph(devices, dict(self._links), default_link)
+
+
+def default_two_pod_manager() -> ResourceManager:
+    """The production dry-run topology: pod0 trusted (confidential-compute
+    derate), pod1 untrusted full-rate — mirroring TEE1/E2 in the paper."""
+    rm = ResourceManager()
+    rm.register(TrustDomain("pod0", True, 256, 0, TPU_POD_TRUSTED))
+    rm.register(TrustDomain("pod1", False, 256, 1, TPU_POD))
+    return rm
+
+
+def two_enclave_manager() -> ResourceManager:
+    """Both pods trusted — the paper's 2-TEE configuration at TPU scale."""
+    rm = ResourceManager()
+    rm.register(TrustDomain("pod0", True, 256, 0, TPU_POD_TRUSTED))
+    rm.register(TrustDomain("pod1", True, 256, 1,
+                            dataclasses.replace(TPU_POD_TRUSTED, name="tpu-pod-cc2")))
+    return rm

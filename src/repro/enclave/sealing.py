@@ -1,0 +1,78 @@
+"""Pytree sealing for stage boundaries + attestation stub.
+
+``seal_tree``/``unseal_tree`` apply the fused quantize+keystream kernel to
+every floating leaf of a boundary activation pytree. Each leaf gets a
+distinct counter (leaf index mixed with the step counter) so keystreams
+never repeat across leaves or steps — the counter-mode discipline AES-CTR
+requires, kept for the ARX keystream.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as K
+
+
+def _leaf_counter(step, leaf_idx: int):
+    return (jnp.uint32(step) * jnp.uint32(65537) + jnp.uint32(leaf_idx))
+
+
+def seal_tree(tree: Any, key: jnp.ndarray, step, *, use_kernel: bool = False):
+    """Returns (sealed tree of (cipher, scales, orig_shape), treedef echo)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    sealed = []
+    for i, leaf in enumerate(leaves):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            sealed.append(("raw", leaf))
+            continue
+        shape = leaf.shape
+        flat = leaf.reshape(-1, shape[-1]) if leaf.ndim > 1 else leaf.reshape(1, -1)
+        cipher, scales = K.seal(flat, key, _leaf_counter(step, i),
+                                use_kernel=use_kernel)
+        sealed.append(("sealed", (cipher, scales, shape, leaf.dtype)))
+    return sealed, treedef
+
+
+def unseal_tree(sealed, treedef, key: jnp.ndarray, step, *,
+                use_kernel: bool = False):
+    leaves = []
+    for i, (tag, payload) in enumerate(sealed):
+        if tag == "raw":
+            leaves.append(payload)
+            continue
+        cipher, scales, shape, dtype = payload
+        flat = K.unseal(cipher, scales, key, _leaf_counter(step, i),
+                        out_dtype=dtype, use_kernel=use_kernel)
+        leaves.append(flat.reshape(shape))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def seal_array(x: jax.Array, key, step, *, use_kernel: bool = False):
+    """Seal a single [..., D] array; returns (cipher, scales) with the
+    leading dims flattened (shape restored by unseal_array)."""
+    flat = x.reshape(-1, x.shape[-1])
+    return K.seal(flat, key, _leaf_counter(step, 0), use_kernel=use_kernel)
+
+
+def unseal_array(cipher, scales, shape, key, step, dtype=jnp.bfloat16, *,
+                 use_kernel: bool = False):
+    flat = K.unseal(cipher, scales, key, _leaf_counter(step, 0),
+                    out_dtype=dtype, use_kernel=use_kernel)
+    return flat.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Attestation stub (the protocol endpoints exist; the quote is a hash chain)
+# ---------------------------------------------------------------------------
+def measure(code: bytes, params_digest: bytes) -> bytes:
+    """Enclave measurement = H(code || params). Stands in for the SGX quote
+    (paper Sec. II: users attest via Intel's remote-attestation service)."""
+    return hashlib.sha256(code + params_digest).digest()
+
+
+def verify(measurement: bytes, expected: bytes) -> bool:
+    return measurement == expected

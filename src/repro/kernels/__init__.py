@@ -1,0 +1,1 @@
+from .ops import seal, unseal, flash_attention

@@ -1,0 +1,103 @@
+"""Blocked causal flash attention (Pallas, TPU target).
+
+Grid: (batch*heads, num_q_blocks). Each program holds one [BLOCK_Q, D] query
+tile in VMEM and streams [BLOCK_K, D] key/value tiles, maintaining the
+online-softmax running (max, sum, acc) in f32 VREGs. Causal masking skips
+fully-masked KV tiles (the loop upper bound is derived from the q-block
+index), giving the ~2x triangular saving. BLOCK sizes default to 128x128 —
+MXU-aligned and ~0.2 MB/tile, so q+k+v+acc stay comfortably inside VMEM.
+
+Supports optional sliding-window masking (Hymba's SWA). The jnp oracle is
+``ref.flash_attention_ref``; ops.flash_attention wraps GQA head-broadcast
+and picks kernel vs oracle.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
+                  seq_k: int, causal: bool, window: int, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale                 # [bQ, D]
+    D = q.shape[-1]
+
+    q_start = qi * block_q
+    q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    num_k = seq_k // block_k
+    if causal:
+        # only stream KV tiles that intersect the causal triangle
+        num_k = jnp.minimum(num_k, (q_start + block_q + block_k - 1) // block_k)
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k_tile = pl.load(k_ref, (0, pl.dslice(ki * block_k, block_k),
+                                 pl.dslice(None)))            # [bK, D]
+        v_tile = pl.load(v_ref, (0, pl.dslice(ki * block_k, block_k),
+                                 pl.dslice(None)))
+        s = jax.lax.dot_general(q, k_tile.astype(jnp.float32),
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [bQ,bK]
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(p, v_tile.astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        return m_new, l_new, acc * corr[:, None] + pv
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    a0 = jnp.zeros((block_q, D), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_k, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                           interpret: bool = True):
+    """q, k, v: [BH, S, D] (batch*heads flattened, MHA). Returns [BH, S, D]."""
+    BH, S, D = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, S)
+    while S % bq:
+        bq //= 2
+    bk = min(block_k, Sk)
+    while Sk % bk:
+        bk //= 2
+    grid = (BH, S // bq)
+    kernel = functools.partial(
+        _flash_kernel, block_q=bq, block_k=bk, seq_k=Sk, causal=causal,
+        window=window, scale=1.0 / math.sqrt(D))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Sk, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Sk, D), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,66 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they execute in
+``interpret=True`` mode — same kernel body, Python-interpreted — which is the
+validation path the tests exercise against the ref.py oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .seal import seal_pallas, unseal_pallas
+from .flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Sealing
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def seal(x, key, counter, use_kernel: bool = False):
+    """Quantize+encrypt a 2D activation. Returns (cipher u8, scales f32)."""
+    if use_kernel:
+        return seal_pallas(x, key, counter, interpret=not _on_tpu())
+    return ref.seal_ref(x, key, counter)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "out_dtype"))
+def unseal(cipher, scales, key, counter, out_dtype=jnp.bfloat16,
+           use_kernel: bool = False):
+    if use_kernel:
+        return unseal_pallas(cipher, scales, key, counter,
+                             out_dtype=out_dtype, interpret=not _on_tpu())
+    return ref.unseal_ref(cipher, scales, key, counter, out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (GQA-aware wrapper)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("causal", "window", "use_kernel"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    use_kernel: bool = False):
+    """q: [B, S, H, D]; k, v: [B, S, KVH, D]. Returns [B, S, H, D]."""
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    rep = H // KVH
+    kk = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vv = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = kk.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    vf = vv.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    if use_kernel:
+        out = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                                     interpret=not _on_tpu())
+    else:
+        out = ref.flash_attention_ref(
+            qf.reshape(B, H, S, D), kf.reshape(B, H, -1, D),
+            vf.reshape(B, H, -1, D), causal=causal, window=window,
+        ).reshape(B * H, S, D)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

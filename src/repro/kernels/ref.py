@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .seal import keystream_u32
+
+
+# ---------------------------------------------------------------------------
+# seal / unseal
+# ---------------------------------------------------------------------------
+def seal_ref(x: jax.Array, key: jax.Array, counter: jax.Array):
+    """Oracle for seal_pallas: int8 quantize + keystream XOR."""
+    rows, cols = x.shape
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int32)
+    idx = (jnp.arange(rows, dtype=jnp.uint32)[:, None] * jnp.uint32(cols)
+           + jnp.arange(cols, dtype=jnp.uint32)[None, :])
+    ks = keystream_u32(key.astype(jnp.uint32).reshape(()),
+                       counter.astype(jnp.uint32).reshape(()), idx)
+    ks8 = (ks >> 24).astype(jnp.int32) & 0xFF
+    cipher = ((q & 0xFF) ^ ks8).astype(jnp.uint8)
+    return cipher, scale
+
+
+def unseal_ref(cipher: jax.Array, scales: jax.Array, key: jax.Array,
+               counter: jax.Array, out_dtype=jnp.bfloat16):
+    rows, cols = cipher.shape
+    idx = (jnp.arange(rows, dtype=jnp.uint32)[:, None] * jnp.uint32(cols)
+           + jnp.arange(cols, dtype=jnp.uint32)[None, :])
+    ks = keystream_u32(key.astype(jnp.uint32).reshape(()),
+                       counter.astype(jnp.uint32).reshape(()), idx)
+    ks8 = (ks >> 24).astype(jnp.int32) & 0xFF
+    q = cipher.astype(jnp.int32) ^ ks8
+    q = jnp.where(q >= 128, q - 256, q).astype(jnp.float32)
+    return (q * scales).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal, optional sliding window) — naive oracle
+# ---------------------------------------------------------------------------
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q, k, v: [B, H, S, D] (MHA; GQA handled by the wrapper). f32 math."""
+    B, H, S, D = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((S, k.shape[2]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,137 @@
+"""Sealing kernel: fused int8 quantization + counter-mode keystream XOR.
+
+This is the TPU-native analogue of the paper's AES-128 boundary encryption
+(Sec. VI-D): every activation tensor crossing a trust-domain boundary is
+(1) quantized to int8 with per-row scales — 4x boundary-traffic compression,
+the distributed-optimization trick the 30 Mbps WAN / DCN link begs for — and
+(2) XORed with a keystream generated in-register from (key, step counter,
+element index) by a squares-RNG/xorshift ARX mix. Fusing both into one
+VMEM pass means the cleartext activation never returns to HBM.
+
+Layout: x [rows, cols] -> cipher uint8 [rows, cols] + scales f32 [rows, 1].
+Grid tiles rows; each tile is a [BLOCK_ROWS, cols] VMEM-resident block
+(cols is typically d_model: 2048-8192 -> 0.5-2 MB per block, well inside
+the ~16 MB VMEM budget with double buffering).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+_M1 = np.uint32(0x9E3779B9)      # golden-ratio odd constants (Weyl / squares)
+_M2 = np.uint32(0x85EBCA6B)
+_M3 = np.uint32(0xC2B2AE35)
+
+
+def keystream_u32(key: jnp.ndarray, counter: jnp.ndarray, idx: jnp.ndarray):
+    """Per-element 32-bit keystream: ARX mix of (key, counter, index).
+
+    key: uint32 scalar; counter: uint32 scalar; idx: uint32 array.
+    Identical code runs inside the Pallas kernel and in the jnp oracle.
+    """
+    x = idx * _M1
+    x = x ^ (key + counter * _M2)
+    x = (x ^ (x >> 16)) * _M2
+    x = (x ^ (x >> 13)) * _M3
+    x = x ^ (x >> 16)
+    # second squares round for diffusion
+    x = x * (key | np.uint32(1)) + counter
+    x = (x ^ (x >> 15)) * _M1
+    return x ^ (x >> 17)
+
+
+def _seal_kernel(x_ref, key_ref, ctr_ref, out_ref, scale_ref, *, cols: int):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)                     # [bR, cols]
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int32)
+
+    rows = x.shape[0]
+    row_idx = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+    col_idx = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    gidx = (jnp.uint32(i) * jnp.uint32(rows) + row_idx) * jnp.uint32(cols) + col_idx
+    ks = keystream_u32(key_ref[0], ctr_ref[0], gidx)
+    ks8 = (ks >> 24).astype(jnp.int32) & 0xFF              # one byte per element
+
+    cipher = (q & 0xFF) ^ ks8
+    out_ref[...] = cipher.astype(jnp.uint8)
+    scale_ref[...] = scale
+
+
+def _unseal_kernel(c_ref, scale_ref, key_ref, ctr_ref, out_ref, *, cols: int,
+                   out_dtype):
+    i = pl.program_id(0)
+    c = c_ref[...].astype(jnp.int32)
+    rows = c.shape[0]
+    row_idx = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+    col_idx = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    gidx = (jnp.uint32(i) * jnp.uint32(rows) + row_idx) * jnp.uint32(cols) + col_idx
+    ks = keystream_u32(key_ref[0], ctr_ref[0], gidx)
+    ks8 = (ks >> 24).astype(jnp.int32) & 0xFF
+    q = c ^ ks8
+    # sign-extend the low byte back to int8 range
+    q = jnp.where(q >= 128, q - 256, q).astype(jnp.float32)
+    out_ref[...] = (q * scale_ref[...]).astype(out_dtype)
+
+
+def _block_rows(rows: int) -> int:
+    b = min(rows, BLOCK_ROWS)
+    while rows % b:
+        b //= 2
+    return max(b, 1)
+
+
+def seal_pallas(x: jax.Array, key: jax.Array, counter: jax.Array,
+                *, interpret: bool = True):
+    """x: [rows, cols] float -> (cipher uint8 [rows, cols], scales [rows, 1])."""
+    rows, cols = x.shape
+    bR = _block_rows(rows)
+    grid = (rows // bR,)
+    kernel = functools.partial(_seal_kernel, cols=cols)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bR, cols), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY if False else None),  # key (full)
+            pl.BlockSpec(memory_space=None),                        # counter
+        ],
+        out_specs=[
+            pl.BlockSpec((bR, cols), lambda i: (i, 0)),
+            pl.BlockSpec((bR, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), jnp.uint8),
+            jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, key.reshape(1).astype(jnp.uint32), counter.reshape(1).astype(jnp.uint32))
+
+
+def unseal_pallas(cipher: jax.Array, scales: jax.Array, key: jax.Array,
+                  counter: jax.Array, *, out_dtype=jnp.bfloat16,
+                  interpret: bool = True):
+    rows, cols = cipher.shape
+    bR = _block_rows(rows)
+    grid = (rows // bR,)
+    kernel = functools.partial(_unseal_kernel, cols=cols, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bR, cols), lambda i: (i, 0)),
+            pl.BlockSpec((bR, 1), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=None),
+            pl.BlockSpec(memory_space=None),
+        ],
+        out_specs=pl.BlockSpec((bR, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), out_dtype),
+        interpret=interpret,
+    )(cipher, scales, key.reshape(1).astype(jnp.uint32),
+      counter.reshape(1).astype(jnp.uint32))

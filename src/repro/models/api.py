@@ -1,0 +1,125 @@
+"""Unified model API: ``build_model(cfg, max_seq)`` returns a ModelAPI with
+loss / prefill / decode closures, parameter specs, cache specs, and
+``input_specs(shape)`` ShapeDtypeStruct stand-ins for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ArchConfig, ShapeConfig, DENSE, MOE, SSM,
+                                HYBRID, ENCDEC, VLM)
+from . import layers as L
+from .transformer import build_dense, build_vlm
+from .moe import build_moe
+from .xlstm import build_xlstm
+from .hymba import build_hymba
+from .whisper import WhisperModel
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ArchConfig
+    max_seq: int
+    model: Any
+
+    # ------------------------------------------------------------------
+    def param_specs(self):
+        return self.model.param_specs()
+
+    def init(self, key):
+        return L.init_params(key, self.param_specs())
+
+    def abstract_params(self):
+        return L.abstract_params(self.param_specs())
+
+    def loss_fn(self, params, batch):
+        return self.model.loss_fn(params, batch)
+
+    def prefill_fn(self, params, batch):
+        return self.model.prefill_fn(params, batch)
+
+    def decode_fn(self, params, cache, batch):
+        return self.model.decode_fn(params, cache, batch)
+
+    def init_cache_specs(self, batch: int, max_seq: Optional[int] = None):
+        return self.model.init_cache_specs(batch, max_seq or self.max_seq)
+
+    def init_cache(self, batch: int, max_seq: Optional[int] = None,
+                   fill_len: int = 0):
+        specs, _ = self.init_cache_specs(batch, max_seq)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+        cache["len"] = jnp.int32(fill_len)
+        return cache
+
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32, bf16 = jnp.int32, L.DEFAULT_DTYPE
+        tok_len = 1 if shape.kind == "decode" else S
+        specs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, tok_len), i32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if c.family == VLM:
+            if shape.kind != "decode":
+                specs["patches"] = jax.ShapeDtypeStruct((B, c.num_patches, c.d_model), bf16)
+            specs["pos3"] = jax.ShapeDtypeStruct((B, tok_len, 3), i32)
+        if c.family == ENCDEC and shape.kind != "decode":
+            specs["frames"] = jax.ShapeDtypeStruct((B, c.encoder_seq, c.d_model), bf16)
+        return specs
+
+    def input_axes(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """Logical axes matching input_specs, for in_shardings."""
+        c = self.cfg
+        axes: Dict[str, Any] = {"tokens": ("act_batch", None)}
+        if shape.kind == "train":
+            axes["labels"] = ("act_batch", None)
+        if c.family == VLM:
+            if shape.kind != "decode":
+                axes["patches"] = ("act_batch", None, "act_embed")
+            axes["pos3"] = ("act_batch", None, None)
+        if c.family == ENCDEC and shape.kind != "decode":
+            axes["frames"] = ("act_batch", None, "act_embed")
+        return axes
+
+    def make_inputs(self, shape: ShapeConfig, key=None) -> Dict[str, Any]:
+        """Concrete (small) inputs matching input_specs, for smoke tests."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        specs = self.input_specs(shape)
+        out = {}
+        for name, s in specs.items():
+            key, sub = jax.random.split(key)
+            if jnp.issubdtype(s.dtype, jnp.integer):
+                maxval = self.cfg.vocab_size if name in ("tokens", "labels") else 4
+                out[name] = jax.random.randint(sub, s.shape, 0, maxval, s.dtype)
+            else:
+                out[name] = jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype)
+        return out
+
+
+BUILDERS: Dict[str, Callable] = {
+    DENSE: lambda cfg, max_seq, remat, q: build_dense(cfg, remat, cache_quant=q),
+    MOE: lambda cfg, max_seq, remat, q: build_moe(cfg, remat, cache_quant=q),
+    SSM: lambda cfg, max_seq, remat, q: build_xlstm(
+        cfg, remat, state_dtype=jnp.bfloat16 if q else jnp.float32),
+    HYBRID: lambda cfg, max_seq, remat, q: build_hymba(cfg, remat),
+    VLM: lambda cfg, max_seq, remat, q: build_vlm(cfg, remat, cache_quant=q),
+    ENCDEC: lambda cfg, max_seq, remat, q: WhisperModel(cfg, max_seq, remat),
+}
+
+
+def build_model(cfg: ArchConfig, max_seq: int = 4096, remat: bool = True,
+                cache_quant: bool = False) -> ModelAPI:
+    """cache_quant: int8 KV cache (dense/MoE/VLM families; xLSTM/Hymba carry
+    recurrent state, Whisper left bf16 — see DESIGN.md perf notes)."""
+    if cfg.family not in BUILDERS:
+        raise ValueError(f"no builder for family {cfg.family!r}")
+    model = BUILDERS[cfg.family](cfg, max_seq, remat, cache_quant)
+    return ModelAPI(cfg, max_seq, model)

@@ -1,0 +1,224 @@
+"""Hymba (NVIDIA, 2024): hybrid blocks with *parallel* attention and Mamba
+(selective SSM) heads reading the same input, outputs fused per block.
+
+Adaptations recorded in DESIGN.md: per-path RMSNorm + learned scalar fusion
+(the paper's per-head β-weighted mean); sliding-window attention everywhere
+(the paper keeps 3 global-attention layers — folded into SWA to keep the
+block stack homogeneous for scan/pipeline partitioning).
+
+Sub-quadratic decode: SSM state + rolling SWA cache -> runs long_500k.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.rules import constrain
+from . import layers as L
+from .layers import ParamSpec
+from .transformer import Segment, StackedLM, default_kv_cache_spec
+
+SSM_CHUNK = 256
+
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return max(8, cfg.d_model // 16)
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) head group
+# ---------------------------------------------------------------------------
+def mamba_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    di = d                     # inner dim (parallel-head budget: attn ∥ ssm)
+    n = cfg.ssm_state
+    r = _dt_rank(cfg)
+    return {
+        "in_x": ParamSpec((d, di), ("embed", "mlp")),
+        "in_z": ParamSpec((d, di), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.conv_kernel, di), ("conv", "mlp")),
+        "conv_b": ParamSpec((di,), ("mlp",), "zeros"),
+        "x_proj": ParamSpec((di, r + 2 * n), ("mlp", None)),
+        "dt_proj": ParamSpec((r, di), (None, "mlp")),
+        "dt_bias": ParamSpec((di,), ("mlp",), "zeros"),
+        "a_log": ParamSpec((di, n), ("mlp", "state"), "zeros"),
+        "d_skip": ParamSpec((di,), ("mlp",), "ones"),
+        "out": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _ssm_scan_chunked(g, u, h0):
+    """h_t = g_t * h_{t-1} + u_t  over time axis=1.
+
+    g, u: [B, S, di, n] (f32); h0: [B, di, n]. Returns (hs [B,S,di,n], h_S).
+    Chunked: sequential over chunks, associative scan within a chunk.
+    """
+    B, S, di, n = g.shape
+    c = L.pick_chunk(S, SSM_CHUNK)
+    nchunks = S // c
+
+    def op(a, b):
+        (ga, ua), (gb, ub) = a, b
+        return (ga * gb, gb * ua + ub)
+
+    def step(h, blk):
+        gb, ub = blk                                   # [B, c, di, n]
+        G, U = jax.lax.associative_scan(op, (gb, ub), axis=1)
+        hs = G * h[:, None] + U
+        return hs[:, -1], hs
+
+    gs = g.reshape(B, nchunks, c, di, n).swapaxes(0, 1)
+    us = u.reshape(B, nchunks, c, di, n).swapaxes(0, 1)
+    hT, hs = jax.lax.scan(step, h0, (gs, us))
+    return hs.swapaxes(0, 1).reshape(B, S, di, n), hT
+
+
+def mamba_apply(cfg: ArchConfig, p, h, *, mode: str, state=None):
+    """h: [B, S, d] (already normed). Returns (y [B,S,d], (conv_state, ssm_state))."""
+    B, S, d = h.shape
+    di, n, k = d, cfg.ssm_state, cfg.conv_kernel
+    x = jnp.einsum("bsd,de->bse", h, p["in_x"])
+    z = jnp.einsum("bsd,de->bse", h, p["in_z"])
+
+    conv_state_new = None
+    if mode == "decode":
+        conv_state, ssm_state = state                  # [B, k-1, di], [B, di, n]
+        window = jnp.concatenate([conv_state, x], axis=1)        # [B, k, di]
+        x = jnp.einsum("bkc,kc->bc", window, p["conv_w"])[:, None] + p["conv_b"]
+        conv_state_new = window[:, 1:]
+    else:
+        ssm_state = None if state is None else state[1]
+        pad = jnp.zeros((B, k - 1, di), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        x = jax.lax.conv_general_dilated(
+            xp, p["conv_w"][:, None, :].astype(x.dtype),
+            window_strides=(1,), padding="VALID",
+            dimension_numbers=("NWC", "WIO", "NWC"),
+            feature_group_count=di) + p["conv_b"]
+        conv_state_new = xp[:, S:]                     # last k-1 inputs
+    x = jax.nn.silu(x)
+
+    proj = jnp.einsum("bse,ef->bsf", x, p["x_proj"]).astype(jnp.float32)
+    r = _dt_rank(cfg)
+    dt_in, Bc, Cc = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt_in, p["dt_proj"].astype(jnp.float32))
+                         + p["dt_bias"].astype(jnp.float32))       # [B,S,di]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                   # [di,n]
+    g = jnp.exp(dt[..., None] * A)                                 # [B,S,di,n]
+    u = (dt * x.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+
+    if mode == "decode":
+        h_new = g[:, 0] * ssm_state + u[:, 0]
+        hs = h_new[:, None]
+        ssm_state_new = h_new
+    else:
+        h0 = jnp.zeros((B, di, n), jnp.float32) if ssm_state is None else ssm_state
+        hs, ssm_state_new = _ssm_scan_chunked(g, u, h0)
+
+    y = jnp.einsum("bsen,bsn->bse", hs, Cc).astype(h.dtype)
+    y = y + x * p["d_skip"]
+    y = y * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", y, p["out"])
+    return y, (conv_state_new, ssm_state_new)
+
+
+# ---------------------------------------------------------------------------
+# Hymba block: x + attn(h) + ssm(h); then MLP
+# ---------------------------------------------------------------------------
+def hymba_block_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln1": ParamSpec((d,), ("embed",), "ones"),
+        "ln2": ParamSpec((d,), ("embed",), "ones"),
+        "ln_attn": ParamSpec((d,), ("embed",), "ones"),
+        "ln_ssm": ParamSpec((d,), ("embed",), "ones"),
+        "attn": L.attn_specs(cfg),
+        "ssm": mamba_specs(cfg),
+        "mlp": {
+            "wi": ParamSpec((d, cfg.d_ff), ("embed", "mlp")),
+            "wg": ParamSpec((d, cfg.d_ff), ("embed", "mlp")),
+            "wo": ParamSpec((cfg.d_ff, d), ("mlp", "embed")),
+        },
+    }
+
+
+def hymba_block_apply(cfg: ArchConfig, p, x, positions, *, mode, cache,
+                      cache_len, pos3=None):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    window = cfg.sliding_window
+
+    kv_cache = ssm_cache = None
+    if cache is not None:
+        kv_cache, ssm_cache = cache
+
+    # --- attention path (SWA) ---
+    q, k, v = L.attn_qkv(p["attn"], h, positions, cfg)
+    new_kv = None
+    if mode == "decode":
+        k_cache, v_cache = kv_cache
+        S = k_cache.shape[2]
+        slot = cache_len % S
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.transpose(0, 2, 1, 3), slot, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.transpose(0, 2, 1, 3), slot, axis=2)
+        ctx = L.decode_attention(q, k_cache, v_cache, cache_len + 1, rolling=True)
+        new_kv = (k_cache, v_cache)
+    else:
+        ctx = L.chunked_attention(q, k, v, causal=True, window=window)
+        if mode == "prefill":
+            keep = min(window, k.shape[1]) if window else k.shape[1]
+            kk = k[:, -keep:].transpose(0, 2, 1, 3)
+            vv = v[:, -keep:].transpose(0, 2, 1, 3)
+            if window:
+                kk = L.roll_into_window(kk, k.shape[1], window)
+                vv = L.roll_into_window(vv, k.shape[1], window)
+            new_kv = (kk, vv)
+    attn_out = L.attn_out(p["attn"], ctx)
+
+    # --- SSM path (parallel heads on the same normed input) ---
+    run_mode = "train" if mode == "prefill" else mode
+    ssm_out, ssm_new = mamba_apply(cfg, p["ssm"], h, mode=run_mode,
+                                   state=ssm_cache)
+
+    # fused update: per-path norm then mean (β-fusion approximation)
+    x = x + 0.5 * (L.rmsnorm(attn_out, p["ln_attn"], cfg.norm_eps) +
+                   L.rmsnorm(ssm_out, p["ln_ssm"], cfg.norm_eps))
+    x = constrain(x, ("act_batch", "act_seq_sp", "act_embed"))
+    h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    m = p["mlp"]
+    x = x + L.swiglu(h2, m["wi"], m["wg"], m["wo"])
+    x = constrain(x, ("act_batch", "act_seq_sp", "act_embed"))
+
+    if mode == "train":
+        return x, None
+    return x, (new_kv, ssm_new)
+
+
+def hymba_cache_spec(cfg: ArchConfig, batch: int, max_seq: int):
+    kv_spec, kv_ax = default_kv_cache_spec(cfg, batch, max_seq)
+    di, n, k = cfg.d_model, cfg.ssm_state, cfg.conv_kernel
+    conv = jax.ShapeDtypeStruct((batch, k - 1, di), L.DEFAULT_DTYPE)
+    ssm = jax.ShapeDtypeStruct((batch, di, n), jnp.float32)
+    ssm_ax = (("act_kv_batch", None, "act_mlp"),
+              ("act_kv_batch", "act_mlp", None))
+    return (kv_spec, (conv, ssm)), (kv_ax, ssm_ax)
+
+
+def build_hymba(cfg: ArchConfig, remat: bool = True) -> StackedLM:
+    def specs():
+        return hymba_block_specs(cfg)
+
+    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3):
+        return hymba_block_apply(cfg, p, x, positions, mode=mode, cache=cache,
+                                 cache_len=cache_len, pos3=pos3)
+
+    def cache_fn(batch, max_seq):
+        return hymba_cache_spec(cfg, batch, max_seq)
+
+    return StackedLM(cfg, [Segment("blocks", cfg.num_layers, specs, apply_fn,
+                                   cache_fn)], remat=remat)

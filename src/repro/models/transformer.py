@@ -1,0 +1,395 @@
+"""Decoder-stack language models: dense (llama/glm/command-r), VLM backbone,
+and the generic scan-over-blocks machinery reused by the MoE family.
+
+Design notes
+------------
+* Block parameters are stacked with a leading ``layers`` dim and executed via
+  ``jax.lax.scan`` — keeps the HLO size O(1) in depth (essential for the
+  512-device dry-run compiles) and gives XLA a natural remat boundary.
+* KV caches are ``[L, B, KVH, S, D]`` head-major: the sharding rules try
+  ``kv_heads -> model`` first and fall back to sequence sharding
+  (distributed flash-decode) when the head count does not divide the axis.
+* The train path never materializes full logits (chunked vocab loss).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.rules import constrain
+from . import layers as L
+from .layers import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Dense block
+# ---------------------------------------------------------------------------
+def dense_block_specs(cfg: ArchConfig, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d = cfg.d_model
+    dff = cfg.d_ff if d_ff is None else d_ff
+    s: Dict[str, Any] = {
+        "ln1": ParamSpec((d,), ("embed",), "ones"),
+        "ln2": ParamSpec((d,), ("embed",), "ones"),
+        "attn": L.attn_specs(cfg),
+        "mlp": {
+            "wi": ParamSpec((d, dff), ("embed", "mlp")),
+            "wg": ParamSpec((d, dff), ("embed", "mlp")),
+            "wo": ParamSpec((dff, d), ("mlp", "embed")),
+        },
+    }
+    return s
+
+
+def quantize_kv(t, scale):
+    """t: [..., D] bf16 -> int8 with per-head scale (broadcast over S, D)."""
+    return jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127
+                    ).astype(jnp.int8)
+
+
+def dequantize_kv(t, scale, dtype=jnp.float32):
+    return (t.astype(jnp.float32) * scale).astype(dtype)
+
+
+def dense_block_apply(cfg: ArchConfig, p, x, positions, *, mode: str,
+                      cache=None, cache_len=None, pos3=None,
+                      mlp_fn: Optional[Callable] = None,
+                      cache_quant: bool = False):
+    """One pre-norm transformer block.
+
+    mode: "train" | "prefill" (returns new kv to cache) | "decode".
+    cache (decode): (k, v) [B, KVH, S, D] — or (k_q8, v_q8, k_scale, v_scale)
+    with int8 payloads and per-head scales when ``cache_quant`` (the cache
+    then costs 1 byte/element of HBM traffic instead of 2).
+    Returns (x, new_kv_or_None).
+    """
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = L.attn_qkv(p["attn"], h, positions, cfg, pos3=pos3)
+    window = cfg.sliding_window
+    new_kv = None
+    if mode == "decode":
+        if cache_quant:
+            k_q, v_q, k_s, v_s = cache
+            sK = k_s[:, None, :]                     # [KVH,1,D]
+            sV = v_s[:, None, :]
+            S = k_q.shape[2]
+            slot = cache_len % S if window else jnp.minimum(cache_len, S - 1)
+            k_q = jax.lax.dynamic_update_slice_in_dim(
+                k_q, quantize_kv(k.transpose(0, 2, 1, 3), sK), slot, axis=2)
+            v_q = jax.lax.dynamic_update_slice_in_dim(
+                v_q, quantize_kv(v.transpose(0, 2, 1, 3), sV), slot, axis=2)
+            ctx = L.decode_attention(q, dequantize_kv(k_q, sK),
+                                     dequantize_kv(v_q, sV), cache_len + 1,
+                                     rolling=bool(window))
+            new_kv = (k_q, v_q, k_s, v_s)
+        else:
+            k_cache, v_cache = cache
+            S = k_cache.shape[2]
+            slot = cache_len % S if window else jnp.minimum(cache_len, S - 1)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k.transpose(0, 2, 1, 3), slot, axis=2)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v.transpose(0, 2, 1, 3), slot, axis=2)
+            ctx = L.decode_attention(q, k_cache, v_cache, cache_len + 1,
+                                     rolling=bool(window))
+            new_kv = (k_cache, v_cache)
+    else:
+        ctx = L.chunked_attention(q, k, v, causal=True, window=window)
+        if mode == "prefill":
+            keep = min(window, k.shape[1]) if window else k.shape[1]
+            kk = k[:, -keep:].transpose(0, 2, 1, 3)
+            vv = v[:, -keep:].transpose(0, 2, 1, 3)
+            if window:
+                kk = L.roll_into_window(kk, k.shape[1], window)
+                vv = L.roll_into_window(vv, k.shape[1], window)
+            if cache_quant:
+                # per-(head, channel) symmetric scales from this prefill
+                k_s = (jnp.max(jnp.abs(kk.astype(jnp.float32)), axis=(0, 2))
+                       / 127.0 + 1e-6)               # [KVH, D]
+                v_s = (jnp.max(jnp.abs(vv.astype(jnp.float32)), axis=(0, 2))
+                       / 127.0 + 1e-6)
+                new_kv = (quantize_kv(kk, k_s[:, None, :]),
+                          quantize_kv(vv, v_s[:, None, :]), k_s, v_s)
+            else:
+                new_kv = (kk, vv)
+    x = x + L.attn_out(p["attn"], ctx)
+    x = constrain(x, ("act_batch", "act_seq_sp", "act_embed"))
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if mlp_fn is not None:
+        x = x + mlp_fn(p, h)
+    else:
+        m = p["mlp"]
+        x = x + L.swiglu(h, m["wi"], m["wg"], m["wo"])
+    x = constrain(x, ("act_batch", "act_seq_sp", "act_embed"))
+    return x, new_kv
+
+
+# ---------------------------------------------------------------------------
+# Generic stacked-LM
+# ---------------------------------------------------------------------------
+def default_kv_cache_spec(cfg: ArchConfig, batch: int, max_seq: int,
+                          quant: bool = False):
+    """Per-layer KV cache spec (no leading layer dim) + logical axes.
+
+    quant=True: int8 payload + per-head f32 scales (half the HBM traffic).
+    SWA buffers are always window-sized (rolling slots = abs index %% window)."""
+    S = cfg.sliding_window if cfg.sliding_window else max_seq
+    dtype = jnp.int8 if quant else L.DEFAULT_DTYPE
+    kv = jax.ShapeDtypeStruct((batch, cfg.num_kv_heads, S, cfg.head_dim), dtype)
+    ax = ("act_kv_batch", "act_kv_heads", "act_kv_seq", None)
+    if quant:
+        sc = jax.ShapeDtypeStruct((cfg.num_kv_heads, cfg.head_dim), jnp.float32)
+        sax = ("act_kv_heads", None)
+        return (kv, kv, sc, sc), (ax, ax, sax, sax)
+    return (kv, kv), (ax, ax)
+
+
+@dataclasses.dataclass
+class Segment:
+    """A homogeneous run of blocks scanned with stacked params."""
+
+    name: str
+    n: int
+    specs_fn: Callable[[], Dict[str, Any]]
+    # (p, x, positions, *, mode, cache, cache_len, pos3) -> (x, new_cache)
+    apply_fn: Callable
+    # (batch, max_seq) -> (per-layer cache specs, per-layer cache axes)
+    cache_spec_fn: Optional[Callable] = None
+
+
+@dataclasses.dataclass
+class StackedLM:
+    """A causal LM whose body is one or more homogeneous scanned segments.
+
+    Each segment's params are stacked along a leading ``layers`` dim and the
+    blocks are executed with ``jax.lax.scan``.
+    """
+
+    cfg: ArchConfig
+    segments: list                        # [Segment]
+    remat: bool = True
+
+    # -- parameter specs ------------------------------------------------
+    def param_specs(self) -> Dict[str, Any]:
+        c = self.cfg
+        specs: Dict[str, Any] = {
+            "embed": ParamSpec((c.vocab_size, c.d_model), ("vocab", "embed"), "embed"),
+            "ln_f": ParamSpec((c.d_model,), ("embed",), "ones"),
+        }
+        if not c.tie_embeddings:
+            specs["head"] = ParamSpec((c.d_model, c.vocab_size), ("embed", "vocab"))
+        for seg in self.segments:
+            specs[seg.name] = jax.tree.map(
+                lambda s: L.stacked(s, seg.n), seg.specs_fn(),
+                is_leaf=lambda x: isinstance(x, ParamSpec))
+        return specs
+
+    # -- embedding / head -------------------------------------------------
+    def embed(self, params, tokens):
+        e = jnp.take(params["embed"], tokens, axis=0)
+        return constrain(e, ("act_batch", "act_seq", "act_embed"))
+
+    def head_weights(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["head"]
+
+    # -- body -------------------------------------------------------------
+    def run_segments(self, params, x, positions, *, mode: str,
+                     caches=None, cache_len=None, pos3=None):
+        """Scan x through every segment. caches: {seg_name: pytree} or None.
+        Returns (x, new_caches)."""
+        new_caches = {}
+        for seg in self.segments:
+            seg_params = params[seg.name]
+            seg_cache = None if caches is None else caches.get(seg.name)
+
+            def step(carry, xs, _apply=seg.apply_fn):
+                xx = carry
+                blk_params, blk_cache = xs
+                out, new_kv = _apply(blk_params, xx, positions, mode=mode,
+                                     cache=blk_cache, cache_len=cache_len,
+                                     pos3=pos3)
+                return out, new_kv
+
+            step_fn = step
+            if self.remat and mode == "train":
+                step_fn = jax.checkpoint(step)
+            x, seg_new = jax.lax.scan(step_fn, x, (seg_params, seg_cache))
+            if mode in ("prefill", "decode") and seg_new is not None:
+                new_caches[seg.name] = seg_new
+        return x, new_caches
+
+    # -- public: loss -------------------------------------------------------
+    def loss_fn(self, params, batch):
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        B, S = tokens.shape
+        positions = batch.get("positions", jnp.arange(S)[None, :])
+        x = self.embed(params, tokens)
+        x = self._fuse_frontend(params, x, batch)
+        x, _ = self.run_segments(params, x, positions, mode="train",
+                                 pos3=batch.get("pos3"))
+        x = L.rmsnorm(x, params["ln_f"], self.cfg.norm_eps)
+        return L.chunked_softmax_xent(x, self.head_weights(params), labels,
+                                      label_mask=batch.get("label_mask"))
+
+    # -- public: per-layer hidden states (privacy profiling) --------------
+    def hidden_states_fn(self, params, batch):
+        """Returns [total_blocks, B, S, D] hidden states after each block
+        (used by core.privacy to build the layer-similarity profile)."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.arange(S)[None, :]
+        x = self.embed(params, tokens)
+        x = self._fuse_frontend(params, x, batch)
+        outs = [x[None]]
+        for seg in self.segments:
+            def step(carry, blk_params, _apply=seg.apply_fn):
+                out, _ = _apply(blk_params, carry, positions, mode="train",
+                                cache=None, cache_len=None,
+                                pos3=batch.get("pos3"))
+                return out, out
+            x, ys = jax.lax.scan(step, x, params[seg.name])
+            outs.append(ys)
+        return jnp.concatenate(outs, axis=0)
+
+    # -- public: prefill ------------------------------------------------
+    def prefill_fn(self, params, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.arange(S)[None, :]
+        x = self.embed(params, tokens)
+        x = self._fuse_frontend(params, x, batch)
+        x, caches = self.run_segments(params, x, positions, mode="prefill",
+                                      pos3=batch.get("pos3"))
+        x = L.rmsnorm(x, params["ln_f"], self.cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], self.head_weights(params),
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, ("act_batch", "act_vocab"))
+        caches = self._constrain_caches(caches)
+        caches["len"] = jnp.int32(S)
+        return logits, caches
+
+    # -- public: decode --------------------------------------------------
+    def decode_fn(self, params, cache, batch):
+        tokens = batch["tokens"]                      # [B, 1]
+        cache_len = cache["len"]
+        positions = jnp.full((1, 1), cache_len, jnp.int32)
+        x = self.embed(params, tokens)
+        pos3 = batch.get("pos3")
+        body = {k: v for k, v in cache.items() if k != "len"}
+        x, new_caches = self.run_segments(params, x, positions, mode="decode",
+                                          caches=body, cache_len=cache_len,
+                                          pos3=pos3)
+        x = L.rmsnorm(x, params["ln_f"], self.cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], self.head_weights(params),
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, ("act_batch", "act_vocab"))
+        new_caches = self._constrain_caches(new_caches)
+        new_caches["len"] = cache_len + 1
+        return logits, new_caches
+
+    # -- caches -----------------------------------------------------------
+    def _segment_cache(self, seg: Segment, batch: int, max_seq: int):
+        fn = seg.cache_spec_fn or (
+            lambda b, s: default_kv_cache_spec(self.cfg, b, s))
+        per_layer, per_axes = fn(batch, max_seq)
+        specs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((seg.n,) + s.shape, s.dtype), per_layer)
+        axes = jax.tree.map(lambda a: ("layers",) + tuple(a), per_axes,
+                            is_leaf=lambda a: isinstance(a, tuple) and
+                            all(x is None or isinstance(x, str) for x in a))
+        return specs, axes
+
+    def init_cache_specs(self, batch_size: int, max_seq: int):
+        specs, axes = {}, {}
+        for seg in self.segments:
+            specs[seg.name], axes[seg.name] = self._segment_cache(
+                seg, batch_size, max_seq)
+        specs["len"] = jax.ShapeDtypeStruct((), jnp.int32)
+        axes["len"] = ()
+        return specs, axes
+
+    def cache_axes(self, batch_size: int, max_seq: int):
+        _, axes = self.init_cache_specs(batch_size, max_seq)
+        return axes
+
+    def _constrain_caches(self, caches):
+        if not caches:
+            return caches
+        out = {}
+        for seg in self.segments:
+            if seg.name not in caches:
+                continue
+            _, axes = self._segment_cache(seg, 1, 1)  # axes are shape-free
+            out[seg.name] = jax.tree.map(
+                lambda a, ax: constrain(a, ax), caches[seg.name], axes,
+                is_leaf=lambda a: isinstance(a, jax.Array) or hasattr(a, "shape"))
+        return out
+
+    # -- frontends (overridden by VLM) ------------------------------------
+    def _fuse_frontend(self, params, x, batch):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Dense family
+# ---------------------------------------------------------------------------
+def build_dense(cfg: ArchConfig, remat: bool = True,
+                cache_quant: bool = False) -> StackedLM:
+    def specs():
+        return dense_block_specs(cfg)
+
+    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3):
+        return dense_block_apply(cfg, p, x, positions, mode=mode, cache=cache,
+                                 cache_len=cache_len, pos3=pos3,
+                                 cache_quant=cache_quant)
+
+    def cache_fn(batch, max_seq):
+        return default_kv_cache_spec(cfg, batch, max_seq, quant=cache_quant)
+
+    return StackedLM(cfg, [Segment("blocks", cfg.num_layers, specs, apply_fn,
+                                   cache_fn)], remat=remat)
+
+
+# ---------------------------------------------------------------------------
+# VLM backbone: dense blocks + patch-embedding fusion + M-RoPE
+# ---------------------------------------------------------------------------
+class VlmLM(StackedLM):
+    def param_specs(self):
+        specs = super().param_specs()
+        c = self.cfg
+        specs["patch_proj"] = ParamSpec((c.d_model, c.d_model), ("embed", None))
+        return specs
+
+    def _fuse_frontend(self, params, x, batch):
+        patches = batch.get("patches")
+        if patches is None:
+            return x
+        # Precomputed patch embeddings [B, P, D] replace the first P slots
+        # (after projection) — the modality frontend itself is a stub.
+        p = jnp.einsum("bpd,de->bpe", patches.astype(x.dtype), params["patch_proj"])
+        P = p.shape[1]
+        return jnp.concatenate([x[:, :P] + p, x[:, P:]], axis=1)
+
+
+def build_vlm(cfg: ArchConfig, remat: bool = True,
+              cache_quant: bool = False) -> VlmLM:
+    def specs():
+        return dense_block_specs(cfg)
+
+    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3):
+        return dense_block_apply(cfg, p, x, positions, mode=mode, cache=cache,
+                                 cache_len=cache_len, pos3=pos3,
+                                 cache_quant=cache_quant)
+
+    def cache_fn(batch, max_seq):
+        return default_kv_cache_spec(cfg, batch, max_seq, quant=cache_quant)
+
+    return VlmLM(cfg, [Segment("blocks", cfg.num_layers, specs, apply_fn,
+                               cache_fn)], remat=remat)

@@ -1,0 +1,222 @@
+"""Whisper-small backbone: 12L encoder + 12L decoder with cross-attention.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, S_enc, d]. Learned positional embeddings
+(sized to the shape cell's max sequence at build time), GELU MLPs, attention
+biases — matching the published architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.rules import constrain
+from . import layers as L
+from .layers import ParamSpec
+
+
+def enc_block_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln1": ParamSpec((d,), ("embed",), "ones"),
+        "ln2": ParamSpec((d,), ("embed",), "ones"),
+        "attn": L.attn_specs(cfg, prefix_bias=True),
+        "mlp": {
+            "wi": ParamSpec((d, cfg.d_ff), ("embed", "mlp")),
+            "bi": ParamSpec((cfg.d_ff,), ("mlp",), "zeros"),
+            "wo": ParamSpec((cfg.d_ff, d), ("mlp", "embed")),
+            "bo": ParamSpec((d,), ("embed",), "zeros"),
+        },
+    }
+
+
+def dec_block_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    s = enc_block_specs(cfg)
+    s["ln_x"] = ParamSpec((cfg.d_model,), ("embed",), "ones")
+    s["xattn"] = L.attn_specs(cfg, prefix_bias=True)
+    return s
+
+
+class WhisperModel:
+    """Uniform ModelAPI surface: loss_fn / prefill_fn / decode_fn."""
+
+    def __init__(self, cfg: ArchConfig, max_seq: int, remat: bool = True):
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self.remat = remat
+
+    # -- specs -------------------------------------------------------------
+    def param_specs(self):
+        c = self.cfg
+        specs = {
+            "embed": ParamSpec((c.vocab_size, c.d_model), ("vocab", "embed"), "embed"),
+            "pos_dec": ParamSpec((self.max_seq, c.d_model), (None, "embed"), "embed"),
+            "pos_enc": ParamSpec((c.encoder_seq, c.d_model), (None, "embed"), "embed"),
+            "ln_f": ParamSpec((c.d_model,), ("embed",), "ones"),
+            "ln_enc": ParamSpec((c.d_model,), ("embed",), "ones"),
+            "enc": jax.tree.map(lambda s: L.stacked(s, c.encoder_layers),
+                                enc_block_specs(c),
+                                is_leaf=lambda x: isinstance(x, ParamSpec)),
+            "dec": jax.tree.map(lambda s: L.stacked(s, c.num_layers),
+                                dec_block_specs(c),
+                                is_leaf=lambda x: isinstance(x, ParamSpec)),
+        }
+        return specs
+
+    # -- encoder -----------------------------------------------------------
+    def encode(self, params, frames):
+        """frames: [B, S_enc, d] precomputed embeddings (stub frontend)."""
+        c = self.cfg
+        S = frames.shape[1]
+        x = frames.astype(L.DEFAULT_DTYPE) + params["pos_enc"][:S]
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+        positions = jnp.arange(S)[None, :]
+
+        def step(xx, p):
+            h = L.rmsnorm(xx, p["ln1"], c.norm_eps)
+            q, k, v = L.attn_qkv(p["attn"], h, positions, c)
+            ctx = L.chunked_attention(q, k, v, causal=False)
+            xx = xx + L.attn_out(p["attn"], ctx)
+            h = L.rmsnorm(xx, p["ln2"], c.norm_eps)
+            m = p["mlp"]
+            xx = xx + L.gelu_mlp(h, m["wi"], m["wo"], m["bi"], m["bo"])
+            return constrain(xx, ("act_batch", "act_seq_sp", "act_embed")), None
+
+        step_fn = jax.checkpoint(step) if self.remat else step
+        x, _ = jax.lax.scan(step_fn, x, params["enc"])
+        return L.rmsnorm(x, params["ln_enc"], c.norm_eps)
+
+    # -- decoder block -----------------------------------------------------
+    def _dec_block(self, p, x, positions, memory, *, mode, cache, cache_len,
+                   xkv=None):
+        c = self.cfg
+        h = L.rmsnorm(x, p["ln1"], c.norm_eps)
+        q, k, v = L.attn_qkv(p["attn"], h, positions, c)
+        new_kv = None
+        if mode == "decode":
+            k_cache, v_cache = cache
+            S = k_cache.shape[2]
+            slot = jnp.minimum(cache_len, S - 1)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k.transpose(0, 2, 1, 3), slot, axis=2)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v.transpose(0, 2, 1, 3), slot, axis=2)
+            ctx = L.decode_attention(q, k_cache, v_cache, cache_len + 1)
+            new_kv = (k_cache, v_cache)
+        else:
+            ctx = L.chunked_attention(q, k, v, causal=True)
+            if mode == "prefill":
+                new_kv = (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+        x = x + L.attn_out(p["attn"], ctx)
+
+        # cross attention
+        h = L.rmsnorm(x, p["ln_x"], c.norm_eps)
+        xp = p["xattn"]
+        qx = jnp.einsum("bsd,dhk->bshk", h, xp["wq"]) + xp["bq"]
+        new_xkv = None
+        if mode == "decode":
+            xk, xv = xkv
+            ctx = L.decode_attention(qx, xk, xv, xk.shape[2])
+            new_xkv = (xk, xv)        # unchanged; keeps cache pytree stable
+        else:
+            xk = jnp.einsum("bsd,dgk->bsgk", memory, xp["wk"]) + xp["bk"]
+            xv = jnp.einsum("bsd,dgk->bsgk", memory, xp["wv"]) + xp["bv"]
+            ctx = L.chunked_attention(qx, xk, xv, causal=False)
+            if mode == "prefill":
+                new_xkv = (xk.transpose(0, 2, 1, 3), xv.transpose(0, 2, 1, 3))
+        x = x + L.attn_out(xp, ctx)
+
+        h = L.rmsnorm(x, p["ln2"], c.norm_eps)
+        m = p["mlp"]
+        x = x + L.gelu_mlp(h, m["wi"], m["wo"], m["bi"], m["bo"])
+        x = constrain(x, ("act_batch", "act_seq_sp", "act_embed"))
+        return x, (new_kv, new_xkv)
+
+    def _run_decoder(self, params, x, positions, memory, *, mode,
+                     caches=None, cache_len=None):
+        def step(xx, blk):
+            p, cache = blk
+            kv = xkv = None
+            if cache is not None:
+                kv, xkv = cache
+            out, new = self._dec_block(p, xx, positions, memory, mode=mode,
+                                       cache=kv, cache_len=cache_len, xkv=xkv)
+            return out, new
+
+        step_fn = jax.checkpoint(step) if (self.remat and mode == "train") else step
+        x, new_caches = jax.lax.scan(step_fn, x, (params["dec"], caches))
+        return x, new_caches
+
+    # -- public API ----------------------------------------------------------
+    def embed_tokens(self, params, tokens, offset=0):
+        c = self.cfg
+        e = jnp.take(params["embed"], tokens, axis=0)
+        if isinstance(offset, int) and offset == 0:
+            pos = params["pos_dec"][:tokens.shape[1]]
+        else:
+            pos = jax.lax.dynamic_slice_in_dim(params["pos_dec"], offset,
+                                               tokens.shape[1], axis=0)
+        return constrain(e + pos, ("act_batch", "act_seq", "act_embed"))
+
+    def loss_fn(self, params, batch):
+        c = self.cfg
+        memory = self.encode(params, batch["frames"])
+        tokens, labels = batch["tokens"], batch["labels"]
+        S = tokens.shape[1]
+        positions = jnp.arange(S)[None, :]
+        x = self.embed_tokens(params, tokens)
+        x, _ = self._run_decoder(params, x, positions, memory, mode="train")
+        x = L.rmsnorm(x, params["ln_f"], c.norm_eps)
+        return L.chunked_softmax_xent(x, params["embed"].T, labels,
+                                      label_mask=batch.get("label_mask"))
+
+    def prefill_fn(self, params, batch):
+        c = self.cfg
+        memory = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        positions = jnp.arange(S)[None, :]
+        x = self.embed_tokens(params, tokens)
+        x, caches = self._run_decoder(params, x, positions, memory,
+                                      mode="prefill")
+        x = L.rmsnorm(x, params["ln_f"], c.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], params["embed"].T,
+                            preferred_element_type=jnp.float32)
+        caches = {"kv": caches[0], "xkv": caches[1], "len": jnp.int32(S)}
+        return constrain(logits, ("act_batch", "act_vocab")), caches
+
+    def decode_fn(self, params, cache, batch):
+        c = self.cfg
+        tokens = batch["tokens"]
+        cache_len = cache["len"]
+        positions = jnp.full((1, 1), cache_len, jnp.int32)
+        x = jnp.take(params["embed"], tokens, axis=0)
+        pos_e = jax.lax.dynamic_slice_in_dim(
+            params["pos_dec"], jnp.minimum(cache_len, self.max_seq - 1), 1, axis=0)
+        x = x + pos_e
+        x, new = self._run_decoder(params, x, positions, None, mode="decode",
+                                   caches=(cache["kv"], cache["xkv"]),
+                                   cache_len=cache_len)
+        x = L.rmsnorm(x, params["ln_f"], c.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], params["embed"].T,
+                            preferred_element_type=jnp.float32)
+        new_cache = {"kv": new[0], "xkv": new[1], "len": cache_len + 1}
+        return constrain(logits, ("act_batch", "act_vocab")), new_cache
+
+    # -- caches ----------------------------------------------------------
+    def init_cache_specs(self, batch_size: int, max_seq: int):
+        c = self.cfg
+        Ldec = c.num_layers
+        kv = jax.ShapeDtypeStruct(
+            (Ldec, batch_size, c.num_kv_heads, max_seq, c.head_dim), L.DEFAULT_DTYPE)
+        xkv = jax.ShapeDtypeStruct(
+            (Ldec, batch_size, c.num_kv_heads, c.encoder_seq, c.head_dim),
+            L.DEFAULT_DTYPE)
+        ax = ("layers", "act_kv_batch", "act_kv_heads", "act_kv_seq", None)
+        specs = {"kv": (kv, kv), "xkv": (xkv, xkv),
+                 "len": jax.ShapeDtypeStruct((), jnp.int32)}
+        axes = {"kv": (ax, ax), "xkv": (ax, ax), "len": ()}
+        return specs, axes

@@ -1,0 +1,253 @@
+"""xLSTM (Beck et al., 2024): alternating sLSTM / mLSTM blocks.
+
+* mLSTM: matrix-memory cell with exponential gating. Training/prefill uses a
+  **chunkwise-parallel** form (stabilized log-space gates, [c, c] intra-chunk
+  decay matrices) so the TPU sees batched matmuls, not a length-S recurrence.
+* sLSTM: scalar cell with head-block-diagonal recurrent weights — inherently
+  sequential, executed as a lax.scan over time (the arch's own property;
+  noted in DESIGN.md).
+
+Decode carries O(1)-size recurrent state — this is why xlstm-125m runs the
+long_500k cell that full-attention archs skip.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.rules import constrain
+from . import layers as L
+from .layers import ParamSpec
+from .transformer import Segment, StackedLM
+
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d, H, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "ln": ParamSpec((d,), ("embed",), "ones"),
+        "wq": ParamSpec((d, H, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, H, dh), ("embed", "heads", "head_dim")),
+        "wv": ParamSpec((d, H, dh), ("embed", "heads", "head_dim")),
+        "wi": ParamSpec((d, H), ("embed", "heads"), "zeros"),
+        "wf": ParamSpec((d, H), ("embed", "heads"), "zeros"),
+        "bf": ParamSpec((H,), ("heads",), "ones"),     # bias>0: remember by default
+        "wz": ParamSpec((d, d), ("embed", None)),
+        "wo": ParamSpec((H, dh, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _mlstm_chunk(qb, kb, vb, logf, logi, state):
+    """One chunk of the stabilized chunkwise-parallel mLSTM.
+
+    qb,kb,vb: [B, c, H, dh] (f32); logf, logi: [B, c, H];
+    state: (C [B,H,dh,dh], n [B,H,dh], m [B,H]). Returns (h [B,c,H,dh], state).
+    """
+    B, c, H, dh = qb.shape
+    C0, n0, m0 = state
+    b = jnp.cumsum(logf, axis=1)                                   # [B,c,H]
+    # intra-chunk log decay D[i,j] = b_i - b_j + a_j  (j <= i)
+    D = b[:, :, None, :] - b[:, None, :, :] + logi[:, None, :, :]  # [B,i,j,H]
+    mask = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])[None, :, :, None]
+    D = jnp.where(mask, D, -jnp.inf)
+    inter = b + m0[:, None, :]                                     # [B,c,H]
+    m_row = jnp.maximum(D.max(axis=2), inter)                      # [B,c,H]
+    m_row = jnp.maximum(m_row, -1e30)
+    scale = 1.0 / math.sqrt(dh)
+    qk = jnp.einsum("bihd,bjhd->bijh", qb, kb) * scale             # [B,i,j,H]
+    w = jnp.exp(D - m_row[:, :, None, :]) * qk                     # weights
+    num_intra = jnp.einsum("bijh,bjhd->bihd", w, vb)
+    den_intra = w.sum(axis=2)                                      # [B,i,H]
+    lam = jnp.exp(inter - m_row)                                   # [B,c,H]
+    # NOTE: C0/n0 already contain the 1/sqrt(dh)-scaled keys — do not
+    # rescale the retrieval (double-scaling broke decode/train equivalence).
+    num_inter = jnp.einsum("bihd,bhde->bihe", qb, C0) * lam[..., None]
+    den_inter = jnp.einsum("bihd,bhd->bih", qb, n0) * lam
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_row))[..., None]
+
+    # end-of-chunk state
+    bc = b[:, -1, :]                                               # [B,H]
+    m_new = jnp.maximum(bc + m0, (bc[:, None, :] - b + logi).max(axis=1))
+    decay_state = jnp.exp(bc + m0 - m_new)                         # [B,H]
+    kv_scale = jnp.exp(bc[:, None, :] - b + logi - m_new[:, None, :])  # [B,c,H]
+    C_new = decay_state[:, :, None, None] * C0 + jnp.einsum(
+        "bjh,bjhd,bjhe->bhde", kv_scale, kb * scale, vb)
+    n_new = decay_state[:, :, None] * n0 + jnp.einsum(
+        "bjh,bjhd->bhd", kv_scale, kb * scale)
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_apply(cfg: ArchConfig, p, x, *, mode: str, state=None):
+    """x: [B, S, d]. Returns (out, new_state)."""
+    B, S, d = x.shape
+    H, dh = cfg.num_heads, cfg.head_dim
+    h_in = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h_in, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", h_in, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", h_in, p["wv"]).astype(jnp.float32)
+    logi = jnp.einsum("bsd,dh->bsh", h_in, p["wi"]).astype(jnp.float32)
+    f_raw = jnp.einsum("bsd,dh->bsh", h_in, p["wf"]).astype(jnp.float32) + \
+        p["bf"].astype(jnp.float32)
+    logf = -jax.nn.softplus(-f_raw)                                # log sigmoid
+
+    if state is None:
+        state = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                 jnp.zeros((B, H, dh), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+
+    if mode == "decode":
+        in_dtypes = [a.dtype for a in state]
+        state32 = tuple(a.astype(jnp.float32) for a in state)
+        hs, new_state = _mlstm_chunk(q, k, v, logf, logi, state32)
+        new_state = tuple(a.astype(dt) for a, dt in zip(new_state, in_dtypes))
+    else:
+        c = L.pick_chunk(S, CHUNK)
+        n = S // c
+
+        def step(st, blk):
+            qb, kb, vb, lf, li = blk
+            h, st = _mlstm_chunk(qb, kb, vb, lf, li, st)
+            return st, h
+
+        blks = [a.reshape(B, n, c, *a.shape[2:]).swapaxes(0, 1)
+                for a in (q, k, v, logf, logi)]
+        new_state, hs = jax.lax.scan(step, state, tuple(blks))
+        hs = hs.swapaxes(0, 1).reshape(B, S, H, dh)
+
+    z = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", h_in, p["wz"]))
+    out = jnp.einsum("bshk,hkd->bsd", hs.astype(x.dtype), p["wo"]) * z
+    return x + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d, H, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ff = int(d * 4 / 3) // 8 * 8
+    return {
+        "ln": ParamSpec((d,), ("embed",), "ones"),
+        "w": ParamSpec((d, 4, H, dh), ("embed", None, "heads", "head_dim")),
+        "r": ParamSpec((4, H, dh, dh), (None, "heads", "head_dim", None)),
+        "b": ParamSpec((4, H, dh), (None, "heads", "head_dim"), "zeros"),
+        "ln_out": ParamSpec((d,), ("embed",), "ones"),
+        "ffn": {
+            "wi": ParamSpec((d, ff), ("embed", "mlp")),
+            "wg": ParamSpec((d, ff), ("embed", "mlp")),
+            "wo": ParamSpec((ff, d), ("mlp", "embed")),
+        },
+    }
+
+
+def slstm_apply(cfg: ArchConfig, p, x, *, mode: str, state=None):
+    """Sequential scalar LSTM with exponential gating. x: [B, S, d]."""
+    B, S, d = x.shape
+    H, dh = cfg.num_heads, cfg.head_dim
+    h_in = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    # pre-activations for all gates: [B, S, 4, H, dh]
+    pre = jnp.einsum("bsd,dghk->bsghk", h_in, p["w"]).astype(jnp.float32)
+
+    if state is None:
+        zeros = jnp.zeros((B, H, dh), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((B, H, dh), -1e30, jnp.float32))
+
+    r = p["r"].astype(jnp.float32)
+    bias = p["b"].astype(jnp.float32)
+
+    def cell(st, pre_t):
+        h_prev, c_prev, n_prev, m_prev = st
+        rec = jnp.einsum("bhk,ghkl->bghl", h_prev, r)
+        g = pre_t + rec + bias                                     # [B,4,H,dh]
+        z_t = jnp.tanh(g[:, 0])
+        i_raw = g[:, 1]
+        f_raw = g[:, 2]
+        o_t = jax.nn.sigmoid(g[:, 3])
+        logf = -jax.nn.softplus(-f_raw)
+        m_t = jnp.maximum(logf + m_prev, i_raw)
+        i_p = jnp.exp(i_raw - m_t)
+        f_p = jnp.exp(logf + m_prev - m_t)
+        c_t = f_p * c_prev + i_p * z_t
+        n_t = f_p * n_prev + i_p
+        h_t = o_t * c_t / jnp.maximum(n_t, 1e-6)
+        return (h_t, c_t, n_t, m_t), h_t
+
+    if mode == "decode":
+        in_dtypes = [a.dtype for a in state]
+        state32 = tuple(a.astype(jnp.float32) for a in state)
+        new_state, h = cell(state32, pre[:, 0])
+        new_state = tuple(a.astype(dt) for a, dt in zip(new_state, in_dtypes))
+        hs = h[:, None]
+    else:
+        new_state, hs = jax.lax.scan(cell, state, pre.swapaxes(0, 1))
+        hs = hs.swapaxes(0, 1)                                     # [B,S,H,dh]
+
+    out = hs.reshape(B, -1, d).astype(x.dtype)
+    x = x + L.rmsnorm(out, p["ln_out"], cfg.norm_eps)
+    f = p["ffn"]
+    x = x + L.swiglu(L.rmsnorm(x, p["ln"], cfg.norm_eps), f["wi"], f["wg"], f["wo"])
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Paired block (sLSTM then mLSTM) — uniform for scan
+# ---------------------------------------------------------------------------
+def pair_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {"slstm": slstm_specs(cfg), "mlstm": mlstm_specs(cfg)}
+
+
+def pair_apply(cfg: ArchConfig, p, x, positions, *, mode, cache, cache_len,
+               pos3=None):
+    s_state = m_state = None
+    if cache is not None:
+        s_state, m_state = cache
+    run_mode = mode if mode != "prefill" else "train"
+    x, s_new = slstm_apply(cfg, p["slstm"], x, mode=run_mode, state=s_state)
+    x, m_new = mlstm_apply(cfg, p["mlstm"], x, mode=run_mode, state=m_state)
+    if mode == "train":
+        return x, None
+    return x, (s_new, m_new)
+
+
+def pair_cache_spec(cfg: ArchConfig, batch: int, max_seq: int,
+                    state_dtype=jnp.float32):
+    """state_dtype=bf16 halves decode state traffic; the stabilizer m stays
+    f32 (it is a log-scale max — bf16 there would break exp() stability)."""
+    H, dh = cfg.num_heads, cfg.head_dim
+    f32 = jnp.float32
+    bhd = jax.ShapeDtypeStruct((batch, H, dh), state_dtype)
+    s_spec = (bhd, bhd, bhd, bhd)
+    m_spec = (jax.ShapeDtypeStruct((batch, H, dh, dh), state_dtype), bhd,
+              jax.ShapeDtypeStruct((batch, H), f32))
+    ax_bhd = ("act_kv_batch", "act_kv_heads", None)
+    s_ax = (ax_bhd,) * 4
+    m_ax = (("act_kv_batch", "act_kv_heads", None, None), ax_bhd,
+            ("act_kv_batch", "act_kv_heads"))
+    return (s_spec, m_spec), (s_ax, m_ax)
+
+
+def build_xlstm(cfg: ArchConfig, remat: bool = True,
+                state_dtype=jnp.float32) -> StackedLM:
+    assert cfg.num_layers % 2 == 0, "xLSTM stack scans (sLSTM, mLSTM) pairs"
+
+    def specs():
+        return pair_specs(cfg)
+
+    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3):
+        return pair_apply(cfg, p, x, positions, mode=mode, cache=cache,
+                          cache_len=cache_len, pos3=pos3)
+
+    def cache_fn(batch, max_seq):
+        return pair_cache_spec(cfg, batch, max_seq, state_dtype=state_dtype)
+
+    return StackedLM(cfg, [Segment("pairs", cfg.num_layers // 2, specs,
+                                   apply_fn, cache_fn)], remat=remat)

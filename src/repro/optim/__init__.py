@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, AdamWState, init, update, schedule, global_norm
+from .compression import compressed_psum_pod, init_error_feedback

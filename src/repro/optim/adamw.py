@@ -1,0 +1,87 @@
+"""AdamW with bf16 params + f32 master/moments, cosine schedule, global-norm
+clipping. Hand-rolled (no optax in this container) but API-compatible in
+spirit: ``init(params) -> state``, ``update(grads, state, params, step)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    master: Any          # f32 copy of params
+    m: Any
+    v: Any
+
+
+def init(params) -> AdamWState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(jax.tree.map(f32, params),
+                      jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params))
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, step):
+    """Returns (new_params_bf16, new_state)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(g, master, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        p_new = master - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                               + cfg.weight_decay * master)
+        return p_new, m_new, v_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_ma = jax.tree.leaves(state.master)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(g, ma, m, v) for g, ma, m, v
+           in zip(flat_g, flat_ma, flat_m, flat_v)]
+    new_master = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree.map(lambda ma, p: ma.astype(p.dtype),
+                              new_master, grads)
+    return new_params, AdamWState(new_master, new_m, new_v), gnorm

@@ -1,0 +1,61 @@
+"""Cross-pod gradient compression with error feedback.
+
+Inside the multi-pod train step the ``pod`` mesh axis is *manual*
+(shard_map): each pod computes gradients over its own batch shard, then
+exchanges int8-quantized gradients over the DCN (1 byte/element on the wire
+instead of 4) and folds the quantization error into an error-feedback buffer
+that is added back before the next step — the standard EF-SGD trick, so the
+compression is unbiased over time.
+
+Two pods exchange via a single ppermute (the production mesh); >2 pods fall
+back to f32 psum (ring-int8 is a TODO recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    absmax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum_pod(grads: Any, ef: Any, axis: str = "pod",
+                        num_pods: int = 2):
+    """grads, ef: pytrees (f32/bf16). Returns (reduced grads, new ef).
+
+    Must run inside a shard_map with ``axis`` manual.
+    """
+    if num_pods != 2:
+        reduced = jax.tree.map(
+            lambda g: jax.lax.psum(g.astype(jnp.float32), axis) / num_pods, grads)
+        return reduced, ef
+
+    perm = [(0, 1), (1, 0)]
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = _quantize(gf)
+        # exchange int8 payload + its scale with the peer pod
+        q_peer = jax.lax.ppermute(q, axis, perm)
+        scale_peer = jax.lax.ppermute(scale, axis, perm)
+        mine = q.astype(jnp.float32) * scale
+        theirs = q_peer.astype(jnp.float32) * scale_peer
+        new_e = gf - mine                      # local quantization residual
+        return (mine + theirs) * 0.5, new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    reduced = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_ef = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return reduced, new_ef
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,6 @@
+from .pipeline import PipelinedDecoder, pipeline_applicable
+from .steps import (make_train_step, make_prefill_step, make_decode_step,
+                    param_shardings, opt_shardings, batch_shardings,
+                    cache_shardings, abstract_inputs)
+from .train_loop import TrainLoop, TrainLoopConfig
+from .ft import HeartbeatMonitor, OnlineReplanner

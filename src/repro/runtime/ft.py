@@ -1,0 +1,75 @@
+"""Fault tolerance for the serving pipeline: heartbeats, straggler
+detection, and Serdab re-planning (the paper's 'online re-partitioning when
+profiling information deviates from predictions', Sec. V).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.placement import (Evaluation, LayerProfile, ResourceGraph,
+                                  solve)
+from repro.enclave.domain import ResourceManager
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    rm: ResourceManager
+    timeout_s: float = 10.0
+
+    def sweep(self, now: Optional[float] = None) -> List[str]:
+        """Marks domains whose heartbeat is stale; returns their names."""
+        now = now if now is not None else time.monotonic()
+        dead = []
+        for d in self.rm.domains():
+            if d.healthy and now - d.last_heartbeat > self.timeout_s:
+                self.rm.mark_unhealthy(d.name)
+                dead.append(d.name)
+        return dead
+
+
+@dataclasses.dataclass
+class OnlineReplanner:
+    """Watches per-stage observed rates and re-runs the placement solver
+    when observation deviates from prediction (or a domain dies)."""
+
+    rm: ResourceManager
+    profiles: Sequence[LayerProfile]
+    n: int
+    delta: float
+    deviation_threshold: float = 1.5
+    current: Optional[Evaluation] = None
+    replans: int = 0
+
+    def plan(self) -> Evaluation:
+        graph = self.rm.resource_graph()
+        best, _ = solve(self.profiles, graph, n=self.n, delta=self.delta)
+        self.current = best
+        return best
+
+    def observe(self, stage_times: Dict[str, float]) -> Optional[Evaluation]:
+        """stage_times: measured per-device stage time. Re-plans when any
+        device is deviation_threshold x slower than the plan predicted, or
+        when the plan references a dead domain."""
+        if self.current is None:
+            return self.plan()
+        predicted = {s.device: t for s, t in
+                     zip(self.current.placement.stages, self.current.stage_times)}
+        healthy = {d.name for d in self.rm.healthy_domains()}
+        needs_replan = any(s.device not in healthy
+                           for s in self.current.placement.stages)
+        for dev, obs in stage_times.items():
+            pred = predicted.get(dev)
+            if pred and obs > self.deviation_threshold * pred:
+                # fold the observation into the device profile (derate it)
+                d = self.rm.get(dev)
+                derate = pred / obs
+                d.device = dataclasses.replace(
+                    d.device, flops_per_s=d.device.flops_per_s * derate,
+                    mem_bw=d.device.mem_bw * derate)
+                needs_replan = True
+        if needs_replan:
+            self.replans += 1
+            return self.plan()
+        return None

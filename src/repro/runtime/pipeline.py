@@ -1,0 +1,240 @@
+"""Serdab pipelined serving over the ``pod`` mesh axis.
+
+This is the paper's core mechanism as a first-class runtime feature: the
+block stack is split into ``num_stages`` contiguous stages (boundaries from
+the placement solver), stage s lives on pod s, and a stream of decode
+microbatches rotates through the stages GPipe-style — while pod 1 decodes
+microbatch m for blocks [B/2, B), pod 0 is already decoding microbatch m+1
+for blocks [0, B/2). Boundary activations are sealed (int8 quantize +
+keystream XOR — kernels/seal.py) before crossing the DCN, exactly the
+paper's enclave-to-enclave discipline, and the quantization doubles as 4x
+boundary compression.
+
+Implementation: ``jax.shard_map`` manual over {pod} only — data/model axes
+stay GSPMD-managed inside each stage, so TP/EP/sequence-sharded caches
+compose with pipelining. The tick loop is a ``lax.scan``; communication is
+one ``ppermute`` ring per tick.
+
+Applicability: any model whose body is ONE homogeneous scanned segment with
+blocks divisible by num_stages (dense, VLM, Qwen-MoE, xLSTM, Hymba).
+Moonshot's dense stem and Whisper's encoder make them two-segment models —
+they serve multi-pod via batch sharding instead (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.enclave import sealing
+from repro.models.api import ModelAPI
+from repro.models import layers as L
+from repro.sharding import rules as R
+
+
+def pipeline_applicable(api: ModelAPI) -> bool:
+    model = api.model
+    return (hasattr(model, "segments") and len(model.segments) == 1)
+
+
+def _batch_slice(tree, start, size, axis=1):
+    return jax.tree.map(
+        lambda x: jax.lax.dynamic_slice_in_dim(x, start, size, axis=axis), tree)
+
+
+def _batch_update(tree, update, start, axis=1):
+    return jax.tree.map(
+        lambda x, u: jax.lax.dynamic_update_slice_in_dim(x, u, start, axis=axis),
+        tree, update)
+
+
+@dataclasses.dataclass
+class PipelinedDecoder:
+    """Builds a jit-able pipelined decode step for one mesh."""
+
+    api: ModelAPI
+    mesh: Mesh
+    num_stages: int
+    num_microbatches: int
+    seal_boundary: bool = True
+    use_kernel: bool = False            # Pallas path on TPU
+
+    def __post_init__(self):
+        model = self.api.model
+        assert pipeline_applicable(self.api), \
+            "pipelined serve needs a single homogeneous segment"
+        self.seg = model.segments[0]
+        assert self.seg.n % self.num_stages == 0, \
+            f"{self.seg.n} blocks not divisible into {self.num_stages} stages"
+        self.bps = self.seg.n // self.num_stages
+
+    # -- parameter / cache reshaping (leading stage dim, sharded over pod) --
+    def stage_params(self, params):
+        """Reshape the segment's stacked [n_blocks, ...] leaves into
+        [num_stages, bps, ...]."""
+        seg = dict(params)
+        seg[self.seg.name] = jax.tree.map(
+            lambda x: x.reshape((self.num_stages, self.bps) + x.shape[1:]),
+            params[self.seg.name])
+        return seg
+
+    def stage_cache(self, cache):
+        body = cache[self.seg.name]
+        return jax.tree.map(
+            lambda x: x.reshape((self.num_stages, self.bps) + x.shape[1:]),
+            body), cache["len"]
+
+    def unstage_cache(self, staged, new_len):
+        body = jax.tree.map(
+            lambda x: x.reshape((self.seg.n,) + x.shape[2:]), staged)
+        return {self.seg.name: body, "len": new_len}
+
+    # -- specs ---------------------------------------------------------------
+    def _param_specs_tree(self, params):
+        def spec(path_has_stage, x):
+            if path_has_stage:
+                return P("pod", *([None] * (x.ndim - 1)))
+            return P(*([None] * x.ndim))
+        staged = self.stage_params(params)
+        return {k: jax.tree.map(functools.partial(spec, k == self.seg.name), v)
+                for k, v in staged.items()}
+
+    # -- the step -------------------------------------------------------------
+    def build(self):
+        api, seg, S = self.api, self.seg, self.num_stages
+        nm, bps = self.num_microbatches, self.bps
+        cfg = api.cfg
+        model = api.model
+        mesh = self.mesh
+        seal_on = self.seal_boundary
+        use_kernel = self.use_kernel
+
+        def stage_run(blk_params, blk_cache, x, cache_len):
+            positions = jnp.full((1, 1), cache_len, jnp.int32)
+            pos3 = None
+            if cfg.pos_type == "mrope":
+                pos3 = jnp.full((x.shape[0], 1, 3), cache_len, jnp.int32)
+
+            def step(carry, xs):
+                p, c = xs
+                out, new_c = seg.apply_fn(p, carry, positions, mode="decode",
+                                          cache=c, cache_len=cache_len,
+                                          pos3=pos3)
+                return out, new_c
+
+            return jax.lax.scan(step, x, (blk_params, blk_cache))
+
+        def pipeline_body(params, staged_cache, tokens, cache_len, key):
+            """Runs manual over pod. tokens: [nm, B_mb, 1] (replicated over
+            pod); staged leaves [1, bps, B, ...] (pod-sharded stage dim)."""
+            s_idx = jax.lax.axis_index("pod")
+            my_params = jax.tree.map(lambda x: x[0], params[seg.name])
+            my_cache = jax.tree.map(lambda x: x[0], staged_cache)
+            B_mb = tokens.shape[1]
+            d = cfg.d_model
+            V = cfg.vocab_size
+
+            def embed(tok):
+                e = jnp.take(params["embed"], tok, axis=0)
+                return e.astype(L.DEFAULT_DTYPE)
+
+            def head(h):
+                hn = L.rmsnorm(h[:, -1], params["ln_f"], cfg.norm_eps)
+                w = (params["embed"].T if cfg.tie_embeddings
+                     else params["head"])
+                return jnp.einsum("bd,dv->bv", hn, w,
+                                  preferred_element_type=jnp.float32)
+
+            # sealed boundary payload carried between ticks
+            zero_h = jnp.zeros((B_mb, 1, d), L.DEFAULT_DTYPE)
+            if seal_on:
+                c0, sc0 = sealing.seal_array(zero_h, jnp.uint32(0), 0,
+                                             use_kernel=use_kernel)
+                recv0 = (c0, sc0)
+            else:
+                recv0 = zero_h
+
+            outputs0 = jnp.zeros((nm, B_mb, V), jnp.float32)
+
+            def tick(carry, t):
+                recv, cache_st, outputs = carry
+                m_my = t - s_idx
+                valid = (m_my >= 0) & (m_my < nm)
+                m_idx = jnp.clip(m_my, 0, nm - 1)
+
+                # stage input: stage 0 embeds its microbatch, others unseal
+                tok = jax.lax.dynamic_index_in_dim(tokens, m_idx, 0,
+                                                   keepdims=False)
+                x0 = embed(tok)
+                if seal_on:
+                    step_ctr = jnp.uint32(t)
+                    h_recv = sealing.unseal_array(
+                        recv[0], recv[1], (B_mb, 1, d), key, step_ctr,
+                        dtype=L.DEFAULT_DTYPE, use_kernel=use_kernel)
+                else:
+                    h_recv = recv
+                x_in = jnp.where(s_idx == 0, x0, h_recv)
+
+                # my stage's cache slice for this microbatch
+                cache_sl = _batch_slice(cache_st, m_idx * B_mb, B_mb)
+                h, new_sl = stage_run(my_params, cache_sl, x_in, cache_len)
+                # only commit the slice when this tick is valid for me
+                new_sl = jax.tree.map(
+                    lambda new, old: jnp.where(valid, new, old), new_sl, cache_sl)
+                cache_st = _batch_update(cache_st, new_sl, m_idx * B_mb)
+
+                # seal + rotate boundary activation to the next stage
+                if seal_on:
+                    payload = sealing.seal_array(h, key, jnp.uint32(t + 1),
+                                                 use_kernel=use_kernel)
+                else:
+                    payload = h
+                perm = [(i, (i + 1) % S) for i in range(S)]
+                recv_next = jax.tree.map(
+                    lambda x: jax.lax.ppermute(x, "pod", perm), payload)
+
+                # last stage emits logits for microbatch t - (S-1)
+                lg = head(h)
+                m_out = jnp.clip(t - (S - 1), 0, nm - 1)
+                write = (s_idx == S - 1) & (t >= S - 1)
+                upd = jax.lax.dynamic_update_slice_in_dim(
+                    outputs, lg[None], m_out, axis=0)
+                outputs = jnp.where(write, upd, outputs)
+                return (recv_next, cache_st, outputs), None
+
+            (_, cache_fin, outputs), _ = jax.lax.scan(
+                tick, (recv0, my_cache, outputs0), jnp.arange(nm + S - 1))
+            cache_out = jax.tree.map(lambda x: x[None], cache_fin)
+            return outputs, cache_out
+
+        # ---- shard_map wrapper ------------------------------------------
+        def step_fn(params, cache, batch, key):
+            tokens = batch["tokens"]                   # [B, 1]
+            B = tokens.shape[0]
+            B_mb = B // nm
+            tok_stream = tokens.reshape(nm, B_mb, 1)
+            staged_params = self.stage_params(params)
+            staged_cache, cache_len = self.stage_cache(cache)
+
+            param_specs = self._param_specs_tree(params)
+            cache_specs = jax.tree.map(
+                lambda x: P("pod", *([None] * (x.ndim - 1))), staged_cache)
+            body = functools.partial(pipeline_body)
+
+            with R.axis_rules(mesh, R.PIPE_RULES):
+                outputs, new_cache = jax.shard_map(
+                    body, mesh=mesh,
+                    in_specs=(param_specs, cache_specs, P(), P(), P()),
+                    out_specs=(P("pod"), cache_specs),
+                    axis_names={"pod"}, check_vma=False,
+                )(staged_params, staged_cache, tok_stream, cache_len, key)
+            # stages stack outputs along dim 0; the last nm rows are real
+            logits = outputs[-nm:].reshape(B, -1)
+            cache_out = self.unstage_cache(new_cache, cache_len + 1)
+            return logits, cache_out
+
+        return step_fn

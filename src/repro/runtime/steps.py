@@ -1,0 +1,200 @@
+"""Step builders: jit-compiled train / prefill / decode steps with logical
+sharding, plus the multi-pod training variant with int8 error-feedback
+gradient exchange across pods (optim/compression.py).
+
+These are what both the launchers and the dry-run lower: the dry-run calls
+``.lower(...).compile()`` on exactly these functions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShapeConfig
+from repro.models.api import ModelAPI
+from repro.models import layers as L
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig, AdamWState
+from repro.optim.compression import compressed_psum_pod, init_error_feedback
+from repro.sharding import rules as R
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+def param_shardings(api: ModelAPI, mesh: Mesh, rules=None):
+    rules = rules or R.PARAM_RULES
+    specs = api.param_specs()
+    return jax.tree.map(
+        lambda s: R.logical_sharding(s.shape, s.axes, mesh, rules), specs,
+        is_leaf=lambda x: isinstance(x, L.ParamSpec))
+
+
+def opt_shardings(api: ModelAPI, mesh: Mesh, rules=None) -> AdamWState:
+    ps = param_shardings(api, mesh, rules)
+    return AdamWState(ps, ps, ps)
+
+
+def batch_shardings(api: ModelAPI, shape: ShapeConfig, mesh: Mesh,
+                    rules=None) -> Dict[str, Any]:
+    rules = rules or R.ACT_RULES
+    axes = api.input_axes(shape)
+    specs = api.input_specs(shape)
+    return {k: R.logical_sharding(specs[k].shape, axes[k], mesh, rules)
+            for k in specs}
+
+
+def cache_shardings(api: ModelAPI, batch: int, mesh: Mesh, rules=None,
+                    max_seq: Optional[int] = None):
+    rules = rules or R.ACT_RULES
+    specs, axes = api.init_cache_specs(batch, max_seq)
+    return jax.tree.map(
+        lambda s, a: R.logical_sharding(s.shape, tuple(a), mesh, rules),
+        specs, axes,
+        is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "dtype"))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Train step (GSPMD; DP over pod+data, TP/EP over model, FSDP over data)
+# ---------------------------------------------------------------------------
+def make_train_step(api: ModelAPI, mesh: Mesh, opt_cfg: AdamWConfig,
+                    shape: ShapeConfig, *, act_rules=None, param_rules=None,
+                    compress_pod_grads: bool = False):
+    act_rules = act_rules or R.ACT_RULES
+    ps = param_shardings(api, mesh, param_rules)
+    os_ = opt_shardings(api, mesh, param_rules)
+    bs = batch_shardings(api, shape, mesh, act_rules)
+    rep = replicated(mesh)
+
+    if compress_pod_grads and "pod" in mesh.axis_names:
+        return _make_train_step_compressed(api, mesh, opt_cfg, shape,
+                                           ps, os_, bs, rep)
+
+    def train_step(params, opt_state, batch, step):
+        with R.axis_rules(mesh, act_rules):
+            loss, grads = jax.value_and_grad(api.loss_fn)(params, batch)
+        new_params, new_opt, gnorm = adamw.update(opt_cfg, grads, opt_state, step)
+        return loss, new_params, new_opt, gnorm
+
+    return jax.jit(
+        train_step,
+        in_shardings=(ps, os_, bs, rep),
+        out_shardings=(rep, ps, os_, rep),
+        donate_argnums=(0, 1),
+    )
+
+
+def _make_train_step_compressed(api, mesh, opt_cfg, shape, ps, os_, bs, rep):
+    """Manual over pod: per-pod grads -> int8 EF exchange -> update.
+
+    The error-feedback buffer rides in an extended opt state tuple.
+    """
+    num_pods = dict(zip(mesh.axis_names, mesh.devices.shape))["pod"]
+
+    def body(params, opt_state, ef, batch, step):
+        with R.axis_rules(mesh, R.PIPE_RULES):
+            loss, grads = jax.value_and_grad(api.loss_fn)(params, batch)
+        grads, ef = compressed_psum_pod(grads, ef, "pod", num_pods)
+        loss = jax.lax.pmean(loss, "pod")
+        new_params, new_opt, gnorm = adamw.update(opt_cfg, grads, opt_state, step)
+        return loss, new_params, new_opt, ef, gnorm
+
+    def specs_of(tree, batch_dim_pod=False):
+        def one(x):
+            if batch_dim_pod:
+                return P("pod", *([None] * (max(x.ndim, 1) - 1)))
+            return P(*([None] * getattr(x, "ndim", 0)))
+        return jax.tree.map(one, tree)
+
+    def train_step(params, opt_state, ef, batch, step):
+        pspec = jax.tree.map(lambda s: P(*([None] * len(s.shape))),
+                             api.param_specs(),
+                             is_leaf=lambda x: isinstance(x, L.ParamSpec))
+        ospec = AdamWState(pspec, pspec, pspec)
+        bspec = {k: P("pod", *([None] * (v.ndim - 1))) for k, v in batch.items()}
+        efspec = pspec
+        fn = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(pspec, ospec, efspec, bspec, P()),
+            out_specs=(P(), pspec, ospec, efspec, P()),
+            axis_names={"pod"}, check_vma=False)
+        return fn(params, opt_state, ef, batch, step)
+
+    ef_shard = ps  # error feedback sharded like params (f32)
+    return jax.jit(
+        train_step,
+        in_shardings=(ps, os_, ef_shard, bs, rep),
+        out_shardings=(rep, ps, os_, ef_shard, rep),
+        donate_argnums=(0, 1, 2),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serve steps (GSPMD)
+# ---------------------------------------------------------------------------
+def _logits_sharding(api: ModelAPI, shape: ShapeConfig, mesh: Mesh, rules,
+                     sharded_logits: bool):
+    if not sharded_logits:
+        return replicated(mesh)
+    return R.logical_sharding((shape.global_batch, api.cfg.vocab_size),
+                              ("act_batch", "act_vocab"), mesh, rules)
+
+
+def make_prefill_step(api: ModelAPI, mesh: Mesh, shape: ShapeConfig, *,
+                      act_rules=None, param_rules=None,
+                      sharded_logits: bool = False):
+    act_rules = act_rules or R.ACT_RULES
+    ps = param_shardings(api, mesh, param_rules)
+    bs = batch_shardings(api, shape, mesh, act_rules)
+    cs = cache_shardings(api, shape.global_batch, mesh, act_rules,
+                         max_seq=shape.seq_len)
+    ls = _logits_sharding(api, shape, mesh, act_rules, sharded_logits)
+
+    def prefill_step(params, batch):
+        with R.axis_rules(mesh, act_rules):
+            return api.prefill_fn(params, batch)
+
+    return jax.jit(prefill_step, in_shardings=(ps, bs),
+                   out_shardings=(ls, cs))
+
+
+def make_decode_step(api: ModelAPI, mesh: Mesh, shape: ShapeConfig, *,
+                     act_rules=None, param_rules=None,
+                     sharded_logits: bool = False):
+    act_rules = act_rules or R.ACT_RULES
+    ps = param_shardings(api, mesh, param_rules)
+    bs = batch_shardings(api, shape, mesh, act_rules)
+    cs = cache_shardings(api, shape.global_batch, mesh, act_rules,
+                         max_seq=shape.seq_len)
+    ls = _logits_sharding(api, shape, mesh, act_rules, sharded_logits)
+
+    def decode_step(params, cache, batch):
+        with R.axis_rules(mesh, act_rules):
+            return api.decode_fn(params, cache, batch)
+
+    return jax.jit(decode_step, in_shardings=(ps, cs, bs),
+                   out_shardings=(ls, cs), donate_argnums=(1,))
+
+
+def abstract_inputs(api: ModelAPI, shape: ShapeConfig):
+    """ShapeDtypeStructs for (params, [opt], batch, cache) used by dryrun."""
+    params = api.abstract_params()
+    batch = api.input_specs(shape)
+    out = {"params": params, "batch": batch}
+    if shape.kind == "train":
+        f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+        out["opt"] = AdamWState(jax.tree.map(f32, params),
+                                jax.tree.map(f32, params),
+                                jax.tree.map(f32, params))
+    if shape.kind == "decode":
+        cache, _ = api.init_cache_specs(shape.global_batch, shape.seq_len)
+        out["cache"] = cache
+    return out

@@ -1,0 +1,3 @@
+from .rules import (PARAM_RULES, ACT_RULES, PIPE_RULES, SP_ACT_RULES, merge_rules,
+                    resolve_spec, logical_sharding, axis_rules, constrain,
+                    current_mesh)

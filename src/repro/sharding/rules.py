@@ -1,0 +1,178 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Arrays are annotated with *logical* axis names; a rule table maps each
+logical name to an ordered list of mesh-axis candidates. ``resolve_spec``
+walks the candidates and picks the first assignment that (a) divides the
+dimension size and (b) does not reuse a mesh axis already claimed by another
+dimension of the same array. This keeps every (arch x shape x mesh) cell
+compilable even when e.g. ``num_kv_heads < model-axis size``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# Candidate lists: tried in order; () = replicate.
+Rules = Dict[str, List[Tuple[str, ...]]]
+
+# ---------------------------------------------------------------------------
+# Default rule tables
+# ---------------------------------------------------------------------------
+# Parameters. "embed"-type dims take FSDP ("data") sharding; head/ffn/expert
+# dims take tensor parallelism ("model"); vocab is tensor-sharded.
+PARAM_RULES: Rules = {
+    "vocab":    [("model",), ()],
+    "embed":    [("data",), ()],          # ZeRO-3 / FSDP axis
+    "heads":    [("model",), ()],
+    "kv_heads": [("model",), ()],
+    "qkv":      [("model",), ()],
+    "mlp":      [("model",), ()],
+    "experts":  [("model",), ()],          # expert parallelism
+    "layers":   [()],                       # scan dim: never shard
+    "stages":   [("pod",), ()],             # pipeline stage dim
+    "conv":     [()],
+    "state":    [()],
+    "head_dim": [()],
+    None:       [()],
+}
+
+# Activations (train / prefill).
+ACT_RULES: Rules = {
+    "act_batch":   [("pod", "data"), ("data",), ()],
+    "act_seq":     [()],                     # SP opt-in via perf rules
+    "act_embed":   [()],
+    "act_heads":   [("model",), ()],
+    "act_kv_heads": [("model",), ()],
+    "act_mlp":     [("model",), ()],
+    "act_vocab":   [("model",), ()],
+    "act_experts": [("model",), ()],
+    "act_kv_seq":  [("model",), ()],         # distributed flash-decode
+    "act_kv_batch": [("pod", "data"), ("data",), ()],
+    "act_state":   [()],
+    "layers":      [()],
+    None:          [()],
+}
+
+
+# Sequence-parallel training rules: the residual stream (block boundaries,
+# the tensors the remat scan SAVES) shards its sequence dim over ``model`` —
+# Megatron-SP. Cuts saved-activation HBM by the TP degree; XLA inserts the
+# all-gather before attention / reduce-scatter after, overlapping with
+# compute. Opt-in: the paper-faithful baseline keeps activations unsharded.
+SP_ACT_RULES: Rules = dict(ACT_RULES)
+SP_ACT_RULES["act_seq_sp"] = [("model",), ()]
+ACT_RULES = dict(ACT_RULES)
+ACT_RULES["act_seq_sp"] = [()]
+PIPE_RULES_SP_PLACEHOLDER = None  # (PIPE_RULES defined below)
+
+
+# Rules for the body of the pipelined serve: the ``pod`` axis is manual
+# (pipeline stages), so activation/cache rules may only use data/model.
+PIPE_RULES: Rules = {
+    "act_batch":   [("data",), ()],
+    "act_seq":     [()],
+    "act_embed":   [()],
+    "act_heads":   [("model",), ()],
+    "act_kv_heads": [("model",), ()],
+    "act_mlp":     [("model",), ()],
+    "act_vocab":   [("model",), ()],
+    "act_experts": [("model",), ()],
+    "act_kv_seq":  [("model",), ()],
+    "act_kv_batch": [("data",), ()],
+    "act_state":   [()],
+    "act_seq_sp":  [()],
+    "layers":      [()],
+    None:          [()],
+}
+
+
+def merge_rules(base: Rules, override: Rules) -> Rules:
+    out = dict(base)
+    out.update(override)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+def resolve_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                 mesh: Mesh, rules: Rules) -> PartitionSpec:
+    """Map logical axes -> PartitionSpec honoring divisibility & axis reuse."""
+    if len(shape) != len(axes):
+        raise ValueError(f"rank mismatch: shape {tuple(shape)} vs axes {tuple(axes)}")
+    used: set = set()
+    entries = []
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, name in zip(shape, axes):
+        cands = rules.get(name, rules.get(None, [()]))
+        chosen: Tuple[str, ...] = ()
+        for cand in cands:
+            cand = tuple(a for a in cand if a in axis_sizes)
+            if not cand:
+                chosen = ()
+                break
+            prod = 1
+            for a in cand:
+                prod *= axis_sizes[a]
+            if any(a in used for a in cand):
+                continue
+            if dim % prod != 0:
+                continue
+            chosen = cand
+            break
+        used.update(chosen)
+        entries.append(chosen if len(chosen) != 1 else chosen[0])
+    # trim trailing replicated entries for tidiness
+    while entries and entries[-1] == ():
+        entries.pop()
+    return PartitionSpec(*[e if e != () else None for e in entries])
+
+
+def logical_sharding(shape: Sequence[int], axes: Sequence[Optional[str]],
+                     mesh: Mesh, rules: Rules) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(shape, axes, mesh, rules))
+
+
+# ---------------------------------------------------------------------------
+# Thread-local rule context so model code can annotate without plumbing.
+# ---------------------------------------------------------------------------
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[Rules] = None
+
+
+_CTX = _Ctx()
+
+
+class axis_rules:
+    """Context manager enabling ``constrain`` inside model code."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Rules] = None):
+        self.mesh = mesh
+        self.rules = rules if rules is not None else ACT_RULES
+
+    def __enter__(self):
+        self._prev = (_CTX.mesh, _CTX.rules)
+        _CTX.mesh, _CTX.rules = self.mesh, self.rules
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.mesh, _CTX.rules = self._prev
+        return False
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """``with_sharding_constraint`` under the active rule context (no-op
+    outside one, so the same model code runs in single-device tests)."""
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None or mesh.size == 1:
+        return x
+    spec = resolve_spec(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,214 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+cost_analysis() provides HLO FLOPs and bytes; collective bytes are NOT in
+cost_analysis, so we parse the (post-SPMD-partitioning) HLO text and sum the
+operand sizes of every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of 'bf16[128,256]{...}' -> 2*128*256. Tuples handled upstream."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+
+def _parse_computations(hlo_text: str):
+    """Split HLO text into {comp_name: [lines]}; returns (comps, entry).
+
+    A computation header is ``name (params...) -> type {`` — params may
+    contain nested parens (tuple types), so detect headers as lines ending
+    in ``{`` with ``->`` and no ``=`` before the arrow (instructions always
+    have ``name = ...``)."""
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        is_header = (s.endswith("{") and "->" in s
+                     and "=" not in s.split("->", 1)[0])
+        m = _COMP_HEAD_RE.match(s) if is_header else None
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+        elif cur is not None:
+            comps[cur].append(s)
+    return comps, entry
+
+
+def _line_collective(line: str):
+    """(op_kind, bytes) for a collective instruction line, else None."""
+    for op in COLLECTIVE_OPS:
+        if re.search(rf"= [^=]*\b{op}(-start)?\(", line):
+            lhs = line.split("=", 1)[1]
+            head = lhs.split(op, 1)[0]
+            b = _shape_bytes(head)
+            if f"{op}-start(" in line:
+                b //= 2                # start op output is (inflight, result)
+            return op, b
+    return None
+
+
+def _trip_count(cond_lines) -> int:
+    """Scan-condition computations compare the induction var to a constant."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def walk_collectives(hlo_text: str) -> Dict[str, int]:
+    """Collective bytes with while-loops multiplied by their trip counts.
+
+    Builds the computation call graph (while/fusion/call/conditional edges),
+    memoizes per-computation collective bytes, and accumulates from ENTRY.
+    """
+    comps, entry = _parse_computations(hlo_text)
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def cost(name: str, stack=()) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {k: 0.0 for k in COLLECTIVE_OPS}
+        total = {k: 0.0 for k in COLLECTIVE_OPS}
+        for line in comps[name]:
+            hit = _line_collective(line)
+            if hit:
+                total[hit[0]] += hit[1]
+            # call edges
+            if " while(" in line:
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                if mb:
+                    trips = _trip_count(comps.get(mc.group(1), [])) if mc else 1
+                    sub = cost(mb.group(1), stack + (name,))
+                    for k in COLLECTIVE_OPS:
+                        total[k] += trips * sub[k]
+            else:
+                for ref in re.finditer(
+                        r"(?:to_apply|calls)=%?([\w\.\-]+)", line):
+                    sub = cost(ref.group(1), stack + (name,))
+                    for k in COLLECTIVE_OPS:
+                        total[k] += sub[k]
+                mb = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if mb:
+                    for branch in mb.group(1).split(","):
+                        sub = cost(branch.strip().lstrip("%"), stack + (name,))
+                        for k in COLLECTIVE_OPS:
+                            total[k] += sub[k]
+        memo[name] = total
+        return total
+
+    if entry is None:
+        entry = next(iter(comps)) if comps else None
+    result = cost(entry) if entry else {k: 0.0 for k in COLLECTIVE_OPS}
+    return {k: int(v) for k, v in result.items()}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Back-compat flat count (no trip multiplication) plus the walked one."""
+    out = walk_collectives(hlo_text)
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        hit = _line_collective(line.strip())
+        if hit:
+            counts[hit[0]] += 1
+    out["_counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    chips: int
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * self.peak_flops)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * self.hbm_bw)
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / (self.chips * self.ici_bw)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+        }
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    """Extract flops + bytes-accessed from compiled.cost_analysis()."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):           # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = 0.0
+    for k, v in ca.items():
+        if k.startswith("bytes accessed") and "{" in k:
+            # per-operand entries; 'bytes accessed' alone is the total
+            continue
+        if k == "bytes accessed":
+            byts = float(v)
+    if byts == 0.0:
+        byts = sum(float(v) for k, v in ca.items()
+                   if k.startswith("bytes accessed"))
+    return {"flops": flops, "bytes": byts}

@@ -1,0 +1,35 @@
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, devices: int = 4, timeout: int = 900) -> str:
+    """Run python code in a fresh process with N fake XLA devices.
+
+    Used by multi-device tests: the main pytest process must keep seeing a
+    single device (smoke tests depend on it), so anything needing a mesh
+    larger than 1 runs out-of-process.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout[-4000:]}\n"
+            f"--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess

@@ -1,0 +1,68 @@
+"""Checkpoint manager: roundtrip, retention, corruption, async."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"w": jax.random.normal(k, (8, 16)),
+            "b": (jnp.arange(4, dtype=jnp.int32), jnp.ones((3,), jnp.bfloat16))}
+
+
+def test_roundtrip(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_save=False)
+    t = tree()
+    m.save(5, t)
+    out = m.restore(5, t)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_and_retention(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        m.save(s, tree(s))
+    assert m.latest_step() == 4
+    assert m.all_steps() == [3, 4]
+
+
+def test_async_save_then_restore(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_save=True)
+    t = tree(7)
+    m.save(1, t)
+    m.wait()
+    out = m.restore(1, t)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(t["w"]))
+
+
+def test_corruption_detected(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_save=False)
+    t = tree()
+    m.save(2, t)
+    p = os.path.join(str(tmp_path), "step_2", "manifest.json")
+    with open(p, "a") as f:
+        f.write(" ")
+    with pytest.raises(AssertionError):
+        m.restore(2, t)
+
+
+def test_shape_mismatch_detected(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_save=False)
+    m.save(3, tree())
+    bad = {"w": jnp.zeros((4, 4)), "b": (jnp.zeros(4, jnp.int32),
+                                         jnp.zeros(3, jnp.bfloat16))}
+    with pytest.raises(ValueError):
+        m.restore(3, bad)
+
+
+def test_extra_metadata(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_save=False)
+    m.save(9, tree(), extra={"data": {"step": 9}})
+    assert m.manifest(9)["extra"]["data"]["step"] == 9

@@ -1,0 +1,71 @@
+"""Assigned-architecture configs: exact dims, param counts, reductions."""
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch, reduced, shape_applicable
+
+EXPECT = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+    "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+    "whisper-small": (12, 768, 12, 12, 3072, 51865),
+    "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+    "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+    "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+    "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+    "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+}
+
+
+def test_ten_archs_present():
+    assert sorted(ARCHS) == sorted(EXPECT)
+
+
+@pytest.mark.parametrize("name", sorted(EXPECT))
+def test_exact_dims(name):
+    c = get_arch(name)
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == EXPECT[name]
+
+
+def test_moe_structure():
+    m = get_arch("moonshot-v1-16b-a3b")
+    assert (m.num_experts, m.num_experts_per_tok) == (64, 6)
+    q = get_arch("qwen2-moe-a2.7b")
+    assert (q.num_experts, q.num_experts_per_tok, q.num_shared_experts) == (60, 4, 4)
+
+
+def test_param_counts_sane():
+    # published totals (qwen2-moe is exactly 14.3B; others within 20%)
+    assert abs(get_arch("qwen2-moe-a2.7b").total_params() / 14.3e9 - 1) < 0.05
+    assert abs(get_arch("glm4-9b").total_params() / 9.4e9 - 1) < 0.15
+    assert abs(get_arch("llama3.2-1b").total_params() / 1.24e9 - 1) < 0.1
+    assert abs(get_arch("xlstm-125m").total_params() / 125e6 - 1) < 0.25
+    # MoE active << total
+    m = get_arch("moonshot-v1-16b-a3b")
+    assert m.total_active_params() < 0.25 * m.total_params()
+
+
+@pytest.mark.parametrize("name", sorted(EXPECT))
+def test_reduced_is_small_and_structured(name):
+    c = get_arch(name)
+    r = reduced(c)
+    assert r.total_params() < 10e6
+    assert r.family == c.family
+    assert (r.num_experts > 0) == (c.num_experts > 0)
+    assert r.num_heads % r.num_kv_heads == 0
+
+
+def test_long_context_skips():
+    long = SHAPES["long_500k"]
+    runs = [n for n in ARCHS if shape_applicable(get_arch(n), long)[0]]
+    assert sorted(runs) == ["hymba-1.5b", "xlstm-125m"]
+
+
+def test_shapes_exact():
+    s = SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)

@@ -1,0 +1,46 @@
+"""Data pipelines: determinism + checkpointable cursor."""
+import numpy as np
+
+from repro.data.stream import VideoChunkStream
+from repro.data.tokens import HostShardedStream, SyntheticTokenStream
+
+
+def test_deterministic_per_step():
+    a = SyntheticTokenStream(512, 4, 16, seed=3)
+    b = SyntheticTokenStream(512, 4, 16, seed=3)
+    for _ in range(3):
+        x, y = next(a), next(b)
+        np.testing.assert_array_equal(x["tokens"], y["tokens"])
+        np.testing.assert_array_equal(x["labels"], y["labels"])
+
+
+def test_resume_reproduces_order():
+    a = SyntheticTokenStream(512, 2, 8, seed=1)
+    seen = [next(a)["tokens"] for _ in range(5)]
+    b = SyntheticTokenStream(512, 2, 8, seed=1)
+    b.load_state_dict({"step": 3, "seed": 1})
+    np.testing.assert_array_equal(next(b)["tokens"], seen[3])
+
+
+def test_labels_learnable_structure():
+    s = SyntheticTokenStream(97, 8, 64, seed=0, structure=1.0)
+    b = next(s)
+    np.testing.assert_array_equal(b["labels"], (b["tokens"] * 31 + 7) % 97)
+
+
+def test_host_sharding_partitions_batch():
+    base = SyntheticTokenStream(512, 8, 4, seed=0)
+    h0 = HostShardedStream(SyntheticTokenStream(512, 8, 4, seed=0), 0, 2)
+    h1 = HostShardedStream(SyntheticTokenStream(512, 8, 4, seed=0), 1, 2)
+    full = next(base)["tokens"]
+    np.testing.assert_array_equal(next(h0)["tokens"], full[:4])
+    np.testing.assert_array_equal(next(h1)["tokens"], full[4:])
+
+
+def test_video_chunks():
+    v = VideoChunkStream(resolution=32, chunk_size=3, seed=5)
+    c0 = next(v)
+    assert len(c0) == 3 and c0[0].shape == (32, 32, 3)
+    v2 = VideoChunkStream(resolution=32, chunk_size=3, seed=5)
+    np.testing.assert_array_equal(c0[0], next(v2)[0])
+    assert not np.array_equal(c0[0], c0[1])

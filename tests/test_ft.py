@@ -1,0 +1,46 @@
+"""Fault tolerance: heartbeats, straggler-driven re-planning."""
+import time
+
+from repro.core.placement import profiles_from_arch
+from repro.configs import get_arch, reduced
+from repro.enclave.domain import two_enclave_manager
+from repro.runtime.ft import HeartbeatMonitor, OnlineReplanner
+
+
+def test_heartbeat_marks_dead():
+    rm = two_enclave_manager()
+    mon = HeartbeatMonitor(rm, timeout_s=0.01)
+    rm.heartbeat("pod0")
+    now = time.monotonic() + 1.0
+    dead = mon.sweep(now)
+    assert set(dead) == {"pod0", "pod1"}
+    rm.heartbeat("pod0")
+    assert [d.name for d in rm.healthy_domains()] == ["pod0"]
+
+
+def test_replanner_replans_on_deviation():
+    rm = two_enclave_manager()
+    cfg = reduced(get_arch("llama3.2-1b"))
+    profs = profiles_from_arch(cfg, seq_len=1)
+    rp = OnlineReplanner(rm, profs, n=1000, delta=0.9)
+    first = rp.plan()
+    assert len(first.placement.stages) >= 1
+    dev = first.placement.stages[0].device
+    obs = {dev: first.stage_times[0] * 10.0}  # 10x slower than predicted
+    second = rp.observe(obs)
+    assert second is not None and rp.replans == 1
+
+
+def test_replanner_handles_dead_domain():
+    rm = two_enclave_manager()
+    cfg = reduced(get_arch("llama3.2-1b"))
+    profs = profiles_from_arch(cfg, seq_len=1)
+    rp = OnlineReplanner(rm, profs, n=1000, delta=0.9)
+    plan = rp.plan()
+    if len(plan.placement.stages) < 2:
+        return  # solver chose a single domain; nothing to kill
+    victim = plan.placement.stages[-1].device
+    rm.mark_unhealthy(victim)
+    new = rp.observe({})
+    assert new is not None
+    assert all(s.device != victim for s in new.placement.stages)

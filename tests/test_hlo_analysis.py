@@ -1,0 +1,48 @@
+"""HLO collective parser: shapes, trip-count multiplication, call graph."""
+from repro.utils.hlo_analysis import (Roofline, _shape_bytes, walk_collectives)
+
+
+HLO = """
+HloModule test
+
+%cond (p: (s32[])) -> pred[] {
+  %p = (s32[]) parameter(0)
+  %c = s32[] constant(12)
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[])) -> (s32[]) {
+  %p = (s32[]) parameter(0)
+  %ag = bf16[4,256]{1,0} all-gather(%x), dimensions={0}
+  ROOT %t = (s32[]) tuple()
+}
+
+ENTRY %main (a: bf16[2,256]) -> bf16[2,256] {
+  %a = bf16[2,256]{1,0} parameter(0)
+  %ar = f32[128]{0} all-reduce(%b), to_apply=%add
+  %w = (s32[]) while(%t0), condition=%cond, body=%body
+  ROOT %r = bf16[2,256]{1,0} copy(%a)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[4,256]") == 2 * 4 * 256
+    assert _shape_bytes("f32[128]") == 512
+    assert _shape_bytes("(bf16[2,2], f32[4])") == 8 + 16
+
+
+def test_walk_multiplies_while_bodies():
+    out = walk_collectives(HLO)
+    assert out["all-reduce"] == 512                 # once in main
+    assert out["all-gather"] == 12 * 2 * 4 * 256    # trip count 12
+
+
+def test_roofline_terms():
+    r = Roofline(flops=197e12 * 256, hbm_bytes=819e9 * 256,
+                 coll_bytes=50e9 * 256, chips=256)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 1.0) < 1e-9
+    assert abs(r.collective_s - 1.0) < 1e-9
+    assert r.dominant in ("compute", "memory", "collective")

@@ -1,0 +1,85 @@
+"""Pallas kernels vs jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as KR
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.seal import seal_pallas, unseal_pallas
+from repro.kernels import ops as KO
+
+
+@pytest.mark.parametrize("shape,dtype", [
+    ((64, 128), jnp.float32),
+    ((256, 512), jnp.bfloat16),
+    ((100, 48), jnp.float32),
+    ((8, 2048), jnp.bfloat16),
+    ((1, 16), jnp.float32),
+])
+def test_seal_kernel_matches_oracle(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32).astype(dtype)
+    key, ctr = jnp.uint32(0xDEADBEEF), jnp.uint32(7)
+    c1, s1 = seal_pallas(x, key, ctr)
+    c2, s2 = KR.seal_ref(x, key, ctr)
+    # identical up to rare round-to-even ties at the quantization boundary
+    assert (np.asarray(c1) != np.asarray(c2)).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    y = unseal_pallas(c1, s1, key, ctr, out_dtype=jnp.float32)
+    xf = np.asarray(x, np.float32)
+    err = np.abs(np.asarray(y) - xf).max() / (np.abs(xf).max() + 1e-9)
+    assert err < 0.01
+
+
+def test_ciphertext_statistics_uniform():
+    x = jax.random.normal(jax.random.PRNGKey(2), (256, 512), jnp.float32)
+    c, _ = KR.seal_ref(x, jnp.uint32(3), jnp.uint32(1))
+    h = np.bincount(np.asarray(c).ravel(), minlength=256)
+    chi2 = ((h - h.mean()) ** 2 / h.mean()).sum()
+    assert chi2 < 400          # ~255 dof; catastrophic non-uniformity fails
+
+
+def test_counter_separation():
+    """Same plaintext under different counters -> unrelated ciphertexts."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, 64), jnp.float32)
+    c1, _ = KR.seal_ref(x, jnp.uint32(9), jnp.uint32(0))
+    c2, _ = KR.seal_ref(x, jnp.uint32(9), jnp.uint32(1))
+    assert (np.asarray(c1) == np.asarray(c2)).mean() < 0.05
+
+
+@pytest.mark.parametrize("B,H,S,D,win,causal", [
+    (2, 4, 256, 64, 0, True),
+    (1, 2, 128, 32, 64, True),
+    (2, 2, 64, 16, 0, True),
+    (1, 1, 512, 64, 0, True),
+    (1, 2, 128, 32, 0, False),
+])
+def test_flash_kernel_matches_oracle(B, H, S, D, win, causal):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B * H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B * H, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B * H, S, D), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=win)
+    ref = KR.flash_attention_ref(
+        q.reshape(B, H, S, D), k.reshape(B, H, S, D), v.reshape(B, H, S, D),
+        causal=causal, window=win).reshape(B * H, S, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_flash_gqa_wrapper():
+    B, S, H, KVH, D = 2, 64, 8, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KVH, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KVH, D), jnp.float32)
+    a = KO.flash_attention(q, k, v, causal=True, use_kernel=True)
+    b = KO.flash_attention(q, k, v, causal=True, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5, rtol=3e-5)
+
+
+def test_seal_bf16_dtypes():
+    x = jax.random.normal(jax.random.PRNGKey(6), (64, 64), jnp.float32)
+    c, s = KR.seal_ref(x.astype(jnp.bfloat16), jnp.uint32(1), jnp.uint32(2))
+    y = KR.unseal_ref(c, s, jnp.uint32(1), jnp.uint32(2), jnp.bfloat16)
+    assert y.dtype == jnp.bfloat16

@@ -1,0 +1,32 @@
+"""Hymba's selective-SSM: chunked scan == stepwise recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models import layers as L
+from repro.models import hymba as Hy
+
+
+def test_mamba_train_equals_decode_chain():
+    cfg = reduced(get_arch("hymba-1.5b"))
+    p = L.init_params(jax.random.PRNGKey(0), Hy.mamba_specs(cfg))
+    p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+    B, S = 2, 12
+    h = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32)
+    full, (conv_f, ssm_f) = Hy.mamba_apply(cfg, p, h, mode="train")
+
+    k = cfg.conv_kernel
+    conv_state = jnp.zeros((B, k - 1, cfg.d_model), jnp.float32)
+    ssm_state = jnp.zeros((B, cfg.d_model, cfg.ssm_state), jnp.float32)
+    outs = []
+    for t in range(S):
+        o, (conv_state, ssm_state) = Hy.mamba_apply(
+            cfg, p, h[:, t:t + 1], mode="decode",
+            state=(conv_state, ssm_state))
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               atol=3e-4, rtol=3e-3)
+    np.testing.assert_allclose(np.asarray(ssm_state), np.asarray(ssm_f),
+                               atol=3e-4, rtol=3e-3)

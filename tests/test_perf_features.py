@@ -1,0 +1,103 @@
+"""Beyond-paper perf features: int8 KV cache, SP rules, rolling windows."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced, ShapeConfig
+from repro.models.api import build_model
+from repro.models.layers import roll_into_window
+from repro.models.transformer import quantize_kv, dequantize_kv
+from repro.sharding.rules import ACT_RULES, SP_ACT_RULES
+from repro.utils.analytic_cost import estimate
+
+
+def test_int8_cache_roundtrip_bounded():
+    k = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 16, 8), jnp.float32)
+    scale = jnp.max(jnp.abs(k), axis=(0, 2)) / 127.0 + 1e-6     # [KVH, D]
+    q = quantize_kv(k, scale[:, None, :])
+    back = dequantize_kv(q, scale[:, None, :])
+    assert q.dtype == jnp.int8
+    err = jnp.abs(back - k) / (jnp.abs(k).max() + 1e-9)
+    assert float(err.max()) < 0.02
+
+
+def test_int8_cache_decode_top1_agrees():
+    cfg = reduced(get_arch("llama3.2-1b"))
+    api_f = build_model(cfg, 32, cache_quant=False)
+    api_q = build_model(cfg, 32, cache_quant=True)
+    params = api_f.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 31), 0,
+                              cfg.vocab_size, jnp.int32)
+    _, cf = jax.jit(api_f.prefill_fn)(params, {"tokens": toks})
+    _, cq = jax.jit(api_q.prefill_fn)(params, {"tokens": toks})
+
+    def pad(c):
+        return {k: (jax.tree.map(
+            lambda a: jnp.pad(a, [(0, 0)] * 3 + [(0, 1)] + [(0, 0)])
+            if a.ndim == 5 else a, v) if k != "len" else v)
+            for k, v in c.items()}
+
+    new = jax.random.randint(jax.random.PRNGKey(2), (4, 1), 0,
+                             cfg.vocab_size, jnp.int32)
+    lf, _ = jax.jit(api_f.decode_fn)(params, pad(cf), {"tokens": new})
+    lq, _ = jax.jit(api_q.decode_fn)(params, pad(cq), {"tokens": new})
+    a, b = np.asarray(lf, np.float32), np.asarray(lq, np.float32)
+    assert (a.argmax(-1) == b.argmax(-1)).all()
+    assert np.abs(a - b).max() / (np.abs(a).max() + 1e-9) < 0.15
+
+
+def test_int8_cache_shrinks_cache_specs():
+    cfg = get_arch("command-r-35b")
+    api_f = build_model(cfg, 1024, cache_quant=False)
+    api_q = build_model(cfg, 1024, cache_quant=True)
+    sf, _ = api_f.init_cache_specs(4)
+    sq, _ = api_q.init_cache_specs(4)
+    bytes_f = sum(np.prod(s.shape) * s.dtype.itemsize
+                  for s in jax.tree.leaves(sf) if hasattr(s, "shape"))
+    bytes_q = sum(np.prod(s.shape) * s.dtype.itemsize
+                  for s in jax.tree.leaves(sq) if hasattr(s, "shape"))
+    assert bytes_q < 0.55 * bytes_f
+
+
+def test_analytic_cost_reflects_quant():
+    cfg = get_arch("command-r-35b")
+    shape = ShapeConfig("d", 32768, 128, "decode")
+    base = estimate(cfg, shape, cache_bytes=2)
+    opt = estimate(cfg, shape, cache_bytes=1)
+    assert opt.hbm_bytes < 0.62 * base.hbm_bytes
+
+
+def test_sp_rules_shard_residual_stream():
+    assert ACT_RULES["act_seq_sp"] == [()]
+    assert SP_ACT_RULES["act_seq_sp"][0] == ("model",)
+
+
+def test_roll_into_window_places_by_absolute_index():
+    B, KVH, D = 1, 1, 2
+    window = 8
+    # 5 tokens (abs 3..7) kept from a total of 8... use total=11, W=8
+    kv = jnp.arange(8, dtype=jnp.float32).reshape(1, 1, 8, 1).repeat(D, -1)
+    out = roll_into_window(kv, total_len=11, window=window)
+    # token with absolute index 3..10 -> slots 3,4,5,6,7,0,1,2
+    slots_expected = [(11 - 8 + j) % window for j in range(8)]
+    for j, slot in enumerate(slots_expected):
+        np.testing.assert_allclose(np.asarray(out[0, 0, slot, 0]), float(j))
+
+
+def test_swa_decode_evicts_oldest():
+    """After prefill + one decode step, the evicted token must be the
+    oldest (absolute index total-window)."""
+    cfg = reduced(get_arch("hymba-1.5b"))     # window = 32
+    api = build_model(cfg, max_seq=48)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
+                              cfg.vocab_size, jnp.int32)
+    _, cache = jax.jit(api.prefill_fn)(params, {"tokens": toks})
+    k_before = np.asarray(cache["blocks"][0][0][0, 0], np.float32)  # [KVH,S,D]
+    new = jax.random.randint(jax.random.PRNGKey(2), (1, 1), 0,
+                             cfg.vocab_size, jnp.int32)
+    _, cache2 = jax.jit(api.decode_fn)(params, cache, {"tokens": new})
+    k_after = np.asarray(cache2["blocks"][0][0][0, 0], np.float32)
+    diff_slots = np.nonzero(np.abs(k_after - k_before).max(axis=(0, 2)) > 1e-6)[0]
+    assert list(diff_slots) == [32 % 32], diff_slots  # slot 0 = abs idx 32

@@ -1,0 +1,131 @@
+"""Serdab placement: tree size, privacy constraint, Eq.1-2 vs the
+discrete-event simulator, and the paper's Fig.12 qualitative claims."""
+import dataclasses
+
+import pytest
+
+from repro.core import cost_model as CM
+from repro.core.pipeline_sim import closed_form_completion, simulate_pipeline
+from repro.core.placement import (Placement, ResourceGraph, Stage,
+                                  enumerate_placements, evaluate,
+                                  profiles_from_cnn, solve)
+from repro.core.privacy import resolution_similarity
+from repro.models.cnn import CNN_MODELS
+
+DELTA = resolution_similarity(20)
+N = 10_800
+
+
+def graph(devs):
+    return ResourceGraph(devs, {}, CM.WAN_30MBPS)
+
+
+def tee2():
+    return dataclasses.replace(CM.TEE, name="tee2")
+
+
+def full_graph():
+    return graph({"tee1": CM.TEE, "tee2": tee2(), "gpu": CM.GPU})
+
+
+def test_tree_size_matches_paper_analysis():
+    """Paper Sec. V: with 2 TEEs + suffix device, N = O(M^2)."""
+    M = 7
+    g = graph({"tee1": CM.TEE, "tee2": tee2(), "e2": CM.CPU})
+    paths = list(enumerate_placements(M, g))
+    # r=1: M prefix ends x (1 + suffix) ; r=2: splits x ends x suffix
+    count_r1 = M - 1 + 1 + (M - 1)  # full + partial x 1 untrusted
+    assert len(paths) > M  # grows superlinearly
+    # every path is a valid contiguous partition covering a prefix
+    for p in paths:
+        assert p.stages[0].start == 0
+        for a, b in zip(p.stages, p.stages[1:]):
+            assert a.end == b.start
+        assert p.stages[-1].end == M
+
+
+def test_first_stage_always_trusted():
+    profs = profiles_from_cnn(CNN_MODELS["alexnet"])
+    g = full_graph()
+    bad = Placement((Stage("gpu", 0, len(profs)),))
+    ev = evaluate(bad, profs, g, N, DELTA)
+    assert not ev.feasible
+
+
+def test_privacy_constraint_enforced():
+    profs = profiles_from_cnn(CNN_MODELS["alexnet"])
+    g = full_graph()
+    _, evals = solve(profs, g, n=N, delta=DELTA)
+    for ev in evals:
+        if ev.feasible:
+            assert ev.max_similarity < DELTA
+
+
+def test_closed_form_matches_discrete_event_sim():
+    stage_times = [0.4, 0.25, 0.05]
+    link_times = [0.08, 0.02]
+    for n in (1, 2, 10, 500):
+        sim = simulate_pipeline(stage_times, link_times, n)
+        cf = closed_form_completion(stage_times, link_times, n)
+        assert abs(sim.completion_time - cf) / cf < 1e-9
+
+
+def test_evaluation_matches_simulator():
+    profs = profiles_from_cnn(CNN_MODELS["googlenet"])
+    g = full_graph()
+    best, _ = solve(profs, g, n=N, delta=DELTA)
+    sim = simulate_pipeline(best.stage_times, best.link_times, N)
+    assert abs(sim.completion_time - best.t_chunk) / best.t_chunk < 1e-9
+
+
+def speedups(model):
+    profs = profiles_from_cnn(CNN_MODELS[model])
+    M = len(profs)
+    g_all = full_graph()
+    base = evaluate(Placement((Stage("tee1", 0, M),)), profs, g_all, N, DELTA)
+    out = {}
+    b, _ = solve(profs, graph({"tee1": CM.TEE, "gpu": CM.GPU}), n=N, delta=DELTA)
+    out["tee+gpu"] = base.t_chunk / b.t_chunk
+    b, _ = solve(profs, graph({"tee1": CM.TEE, "tee2": tee2()}), n=N, delta=DELTA)
+    out["2tee"] = base.t_chunk / b.t_chunk
+    b, _ = solve(profs, g_all, n=N, delta=DELTA)
+    out["proposed"] = base.t_chunk / b.t_chunk
+    b, _ = solve(profs, g_all, n=N, delta=DELTA, pipelined=False)
+    out["nopipe"] = base.t_chunk / evaluate(b.placement, profs, g_all, N, DELTA).t_chunk
+    return out
+
+
+def test_paper_claim_2tee_beats_gpu_for_back_heavy_models():
+    """Fig. 12: GoogLeNet/MobileNet/SqueezeNet gain more from 2 TEEs than
+    from TEE+GPU (their privacy boundary sits deep in the network)."""
+    for m in ("googlenet", "mobilenet", "squeezenet"):
+        s = speedups(m)
+        assert s["2tee"] > s["tee+gpu"], (m, s)
+        assert 1.5 < s["2tee"] < 2.1, (m, s)
+
+
+def test_paper_claim_gpu_beats_2tee_for_front_light_models():
+    """Fig. 12: AlexNet reaches the privacy threshold early -> TEE+GPU wins."""
+    s = speedups("alexnet")
+    assert s["tee+gpu"] > s["2tee"], s
+    assert 2.2 <= s["tee+gpu"] <= 3.6, s
+
+
+def test_paper_claim_proposed_best_and_headline():
+    best = 0.0
+    for m in CNN_MODELS:
+        s = speedups(m)
+        assert s["proposed"] >= s["2tee"] - 1e-9, (m, s)
+        assert s["proposed"] >= s["tee+gpu"] - 1e-9, (m, s)
+        best = max(best, s["proposed"])
+    assert 3.5 < best < 5.5, best   # paper headline: up to 4.7x
+
+
+def test_paper_claim_nopipe_equals_teegpu_decision():
+    """Fig. 12 note: the single-frame objective picks the TEE+GPU split."""
+    for m in CNN_MODELS:
+        profs = profiles_from_cnn(CNN_MODELS[m])
+        g = full_graph()
+        b, _ = solve(profs, g, n=N, delta=DELTA, pipelined=False)
+        devs = {s.device for s in b.placement.stages}
+        assert "tee2" not in devs or len(b.placement.stages) <= 2, (m, b.placement)

@@ -1,0 +1,52 @@
+"""Privacy metrics: resolution threshold behavior, SSIM proxy, LM profile."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import privacy as P
+from repro.data.stream import VideoChunkStream
+from repro.models.cnn import CNN_MODELS, TinyCNN
+
+
+def test_downsample_similarity_monotone():
+    img = jnp.asarray(VideoChunkStream(resolution=112).frame(0, 0)[:, :, 0])
+    sims = [P.downsample_similarity(img, r) for r in (112, 56, 28, 14, 7)]
+    assert all(a >= b - 0.02 for a, b in zip(sims, sims[1:])), sims
+    assert sims[0] > 0.95            # full res ~ identical
+    assert sims[-1] < sims[0] - 0.2  # 7px loses most structure
+
+
+def test_threshold_20px_separates():
+    """The paper's δ=20x20: below it, reconstructions lose most structure."""
+    img = jnp.asarray(VideoChunkStream(resolution=112).frame(1, 0)[:, :, 0])
+    hi = P.downsample_similarity(img, 28)
+    lo = P.downsample_similarity(img, 12)
+    assert hi > lo
+
+
+def test_resolution_similarity_and_private():
+    assert P.resolution_private(14)
+    assert not P.resolution_private(28)
+    assert P.resolution_similarity(224) == 1.0
+
+
+def test_tinycnn_resolution_schedule():
+    table = CNN_MODELS["alexnet"]
+    cnn = TinyCNN(table, channels=4)
+    img = jnp.asarray(VideoChunkStream(resolution=224).frame(0, 0))
+    outs = cnn.intermediates(img)
+    assert len(outs) == len(table)
+    for o, l in zip(outs, table):
+        assert o.shape[0] == max(2, l.resolution)
+
+
+def test_lm_similarity_profile_shapes_and_range():
+    h = jax.random.normal(jax.random.PRNGKey(0), (5, 2, 8, 16))
+    sims = P.lm_similarity_profile(h)
+    assert sims.shape == (4,)
+    assert (sims >= 0).all() and (sims <= 1.0 + 1e-6).all()
+
+
+def test_private_depth():
+    assert P.private_depth([0.9, 0.6, 0.4, 0.2], 0.5) == 3
+    assert P.private_depth([0.9, 0.9], 0.5) == 2  # never private -> all layers

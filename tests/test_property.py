@@ -1,0 +1,75 @@
+"""Hypothesis property tests on system invariants."""
+import dataclasses
+
+import hypothesis
+from hypothesis import given, settings, strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model as CM
+from repro.core.pipeline_sim import closed_form_completion, simulate_pipeline
+from repro.core.placement import (LayerProfile, ResourceGraph, evaluate,
+                                  Placement, Stage, solve)
+from repro.kernels import ref as KR
+from repro.sharding.rules import ACT_RULES, PARAM_RULES, resolve_spec
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+@given(st.lists(st.floats(1e-4, 10.0), min_size=1, max_size=6),
+       st.integers(1, 200))
+def test_pipeline_closed_form_is_exact(stages, n):
+    links = [s / 7 for s in stages[1:]]
+    sim = simulate_pipeline(stages, links, n)
+    cf = closed_form_completion(stages, links, n)
+    assert abs(sim.completion_time - cf) <= 1e-6 * max(cf, 1.0)
+
+
+@given(st.integers(2, 12), st.floats(0.01, 0.99), st.integers(1, 5000))
+def test_solver_never_worse_than_single_tee(m, delta, n):
+    rng = np.random.default_rng(m * 1000 + n)
+    profs = [LayerProfile(f"l{i}", float(rng.uniform(1e6, 5e8)),
+                          float(rng.uniform(1e4, 1e6)),
+                          similarity=float(max(0.0, 1.0 - (i + 1) / m)))
+             for i in range(m)]
+    g = ResourceGraph({"tee1": CM.TEE,
+                       "tee2": dataclasses.replace(CM.TEE, name="t2"),
+                       "gpu": CM.GPU}, {}, CM.WAN_30MBPS)
+    best, _ = solve(profs, g, n=n, delta=delta)
+    single = evaluate(Placement((Stage("tee1", 0, m),)), profs, g, n, delta)
+    assert best.t_chunk <= single.t_chunk + 1e-9
+
+
+@given(st.integers(1, 64), st.integers(1, 64))
+def test_resolve_spec_always_divides(rows, cols):
+    import jax as _jax
+    mesh = _jax.make_mesh((1,), ("data",),
+                          axis_types=(_jax.sharding.AxisType.Auto,))
+    spec = resolve_spec((rows, cols), ("act_batch", "act_mlp"), mesh, ACT_RULES)
+    # on a 1-device mesh everything resolves (possibly fully replicated)
+    assert spec is not None
+
+
+@given(st.integers(1, 8), st.integers(8, 128), st.integers(0, 2 ** 31 - 1))
+def test_seal_roundtrip_bounded_error(rows, cols, key):
+    x = np.random.default_rng(key % 1000).normal(size=(rows, cols)).astype(np.float32)
+    k = jnp.uint32(key)
+    c, s = KR.seal_ref(jnp.asarray(x), k, jnp.uint32(1))
+    y = np.asarray(KR.unseal_ref(c, s, k, jnp.uint32(1), jnp.float32))
+    scale = np.abs(x).max(axis=1, keepdims=True) + 1e-9
+    assert (np.abs(y - x) / scale).max() < 0.005   # < half a quant level
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_seal_wrong_key_garbles(key):
+    x = np.random.default_rng(1).normal(size=(4, 64)).astype(np.float32)
+    c, s = KR.seal_ref(jnp.asarray(x), jnp.uint32(key), jnp.uint32(0))
+    y = np.asarray(KR.unseal_ref(c, s, jnp.uint32(key ^ 0x5A5A5A5A),
+                                 jnp.uint32(0), jnp.float32))
+    # wrong key must NOT reconstruct: correlation near zero
+    corr = np.corrcoef(x.ravel(), y.ravel())[0, 1]
+    assert abs(corr) < 0.3

@@ -1,0 +1,41 @@
+"""Pytree sealing + attestation stub."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.enclave import sealing
+
+
+def test_tree_roundtrip():
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (4, 32)),
+            "b": (jax.random.normal(jax.random.PRNGKey(1), (2, 3, 16)),
+                  jnp.arange(5, dtype=jnp.int32))}
+    key = jnp.uint32(0xABCD)
+    sealed, treedef = sealing.seal_tree(tree, key, 3)
+    out = sealing.unseal_tree(sealed, treedef, key, 3)
+    np.testing.assert_allclose(np.asarray(out["a"], np.float32),
+                               np.asarray(tree["a"], np.float32), atol=0.05)
+    np.testing.assert_array_equal(np.asarray(out["b"][1]),
+                                  np.asarray(tree["b"][1]))  # ints pass raw
+
+
+def test_leaf_counters_differ():
+    x = jnp.ones((2, 16), jnp.float32)
+    sealed, _ = sealing.seal_tree({"a": x, "b": x}, jnp.uint32(1), 0)
+    ca = np.asarray(sealed[0][1][0])
+    cb = np.asarray(sealed[1][1][0])
+    assert (ca == cb).mean() < 0.1     # same plaintext, different keystream
+
+
+def test_array_roundtrip_3d():
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 5, 64))
+    c, s = sealing.seal_array(x, jnp.uint32(7), 11)
+    y = sealing.unseal_array(c, s, x.shape, jnp.uint32(7), 11, jnp.float32)
+    assert y.shape == x.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x, np.float32), atol=0.05)
+
+
+def test_attestation_stub():
+    m = sealing.measure(b"code", b"params")
+    assert sealing.verify(m, sealing.measure(b"code", b"params"))
+    assert not sealing.verify(m, sealing.measure(b"code2", b"params"))
