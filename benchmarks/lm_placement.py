@@ -11,8 +11,8 @@ import dataclasses
 
 from repro.configs import ARCHS, get_arch
 from repro.core import cost_model as CM
-from repro.core.placement import (Placement, ResourceGraph, Stage, evaluate,
-                                  profiles_from_arch, solve)
+from repro.core.planner import (Placement, ResourceGraph, Stage, evaluate,
+                                profiles_from_arch, solve)
 from repro.core.privacy import LM_SIM_DELTA
 
 
@@ -23,7 +23,8 @@ def domains():
 
 
 def main():
-    print("lm_placement:arch,stages,speedup_vs_1pod,bottleneck_us,leakage")
+    print("lm_placement:arch,stages,speedup_vs_1pod,bottleneck_us,leakage,"
+          "solver_ms,n_feasible,n_pruned")
     for name in sorted(ARCHS):
         cfg = get_arch(name)
         # a serving "frame" = one 256-token chunk (paper: one video frame)
@@ -32,10 +33,12 @@ def main():
         M = len(profs)
         base = evaluate(Placement((Stage("pod0", 0, M),)), profs, g,
                         100_000, LM_SIM_DELTA)
-        best, _ = solve(profs, g, n=100_000, delta=LM_SIM_DELTA)
+        res = solve(profs, g, n=100_000, delta=LM_SIM_DELTA, solver="dp")
+        best = res.best
         print(f"lm_placement:{name},{best.placement.describe().replace(',', ';')},"
               f"{base.t_chunk / best.t_chunk:.2f},"
-              f"{best.bottleneck * 1e6:.1f},{best.max_similarity:.3f}")
+              f"{best.bottleneck * 1e6:.1f},{best.max_similarity:.3f},"
+              f"{res.wall_time_s * 1e3:.1f},{res.n_feasible},{res.n_pruned}")
 
 
 if __name__ == "__main__":

@@ -10,13 +10,14 @@ import time
 def main() -> None:
     from . import (fig8_latency_resolution, fig10_user_study_proxy,
                    fig12_partition_speedup, fig13_breakdown, lm_placement,
-                   lm_similarity, kernel_bench, roofline)
+                   lm_similarity, kernel_bench, roofline, solver_scaling)
     benches = [
         ("fig8_latency_resolution", fig8_latency_resolution.main),
         ("fig10_user_study_proxy", fig10_user_study_proxy.main),
         ("fig12_partition_speedup", fig12_partition_speedup.main),
         ("fig13_breakdown", fig13_breakdown.main),
         ("lm_placement", lm_placement.main),
+        ("solver_scaling", solver_scaling.main),
         ("lm_similarity", lm_similarity.main),
         ("kernel_bench", kernel_bench.main),
         ("roofline", roofline.main),

@@ -5,6 +5,9 @@ from .cost_model import (DeviceProfile, LinkProfile, TEE, CPU, GPU,
 from .placement import (LayerProfile, ResourceGraph, Stage, Placement,
                         Evaluation, enumerate_placements, evaluate, solve,
                         profiles_from_cnn, profiles_from_arch)
+from .planner import (BeamSolver, CostTables, DPSolver, ExhaustiveSolver,
+                      PlacementProblem, SolveResult, Solver, get_solver)
+from .planner import solve as planner_solve
 from .pipeline_sim import simulate_pipeline, closed_form_completion
 from .privacy import (RESOLUTION_DELTA, LM_SIM_DELTA, resolution_private,
                       resolution_similarity, pearson, ssim,

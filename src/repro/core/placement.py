@@ -1,247 +1,41 @@
-"""Privacy-aware placement (Sec. IV–V): placement-tree enumeration with the
-pipelined chunk-completion cost model.
+"""Backward-compatible shim over :mod:`repro.core.planner`.
 
-A placement assigns contiguous layer ranges (stages) to devices: trusted
-devices first (processing must start in a trusted domain — C1), optionally
-followed by one untrusted suffix once the boundary activation is
-sufficiently dissimilar (C2). Enumeration is O(M^R * |U|) with R trusted
-devices, exactly the paper's tree (Fig. 7).
-
-Cost model (Eq. 1–2): with per-frame stage times e_s and boundary transfer
-times tr_s, a chunk of n frames completes in
-
-    t_chunk(n, P) = Σ_s e_s + Σ_s tr_s + (n-1) * max(max_s e_s, max_s tr_s)
-
-— for n=1 this is single-frame latency (the Neurosurgeon objective, our
-"no-pipelining" baseline); for large n it is dominated by the bottleneck
-stage, the paper's key observation.
+The placement machinery (paper Sec. IV–V: placement-tree enumeration with the
+pipelined chunk-completion cost model) now lives in the layered planner
+package — ``planner.profiling`` (profiles + O(1) cost tables),
+``planner.solvers`` (exhaustive/DP/beam behind the ``Solver`` protocol) and
+``planner.evaluation`` (Eq. 1–2 cost + result types). This module keeps the
+original import surface and the original ``solve()`` signature; new code
+should call ``planner.solve(..., solver="dp")`` and use the richer
+``SolveResult`` it returns.
 """
 from __future__ import annotations
 
-import dataclasses
-import itertools
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
-from .cost_model import (RUNTIME_FOOTPRINT, DeviceProfile, LinkProfile,
-                         layer_exec_time, seal_time, transmit_time)
-
-
-@dataclasses.dataclass(frozen=True)
-class LayerProfile:
-    """Per-layer profile (paper Sec. IV 'NN Layer Profile')."""
-    name: str
-    flops: float
-    out_bytes: float
-    similarity: float          # Sim(input of next layer, original input)
-    params_bytes: float = 0.0
-    act_bytes: float = 0.0     # activation traffic (defaults to out_bytes)
-    eff: float = 1.0           # CPU/TEE execution efficiency
-
-    def traffic(self) -> float:
-        return self.act_bytes if self.act_bytes else self.out_bytes
+from .cost_model import DeviceProfile
+from .planner import (Evaluation, LayerProfile, Placement,  # noqa: F401
+                      ResourceGraph, Stage, enumerate_placements, evaluate,
+                      profiles_from_arch, profiles_from_cnn,
+                      stage_exec_direct)
+from .planner import solve as _planner_solve
 
 
-@dataclasses.dataclass(frozen=True)
-class ResourceGraph:
-    """Devices + links. Trusted devices are pipeline-stage candidates in
-    order; untrusted devices compete for the suffix."""
-    devices: Dict[str, DeviceProfile]
-    links: Dict[Tuple[str, str], LinkProfile]
-    default_link: LinkProfile
-
-    def trusted(self) -> List[str]:
-        return [n for n, d in self.devices.items() if d.trusted]
-
-    def untrusted(self) -> List[str]:
-        return [n for n, d in self.devices.items() if not d.trusted]
-
-    def link(self, a: str, b: str) -> LinkProfile:
-        return self.links.get((a, b), self.default_link)
-
-
-@dataclasses.dataclass(frozen=True)
-class Stage:
-    device: str
-    start: int                 # inclusive layer index
-    end: int                   # exclusive
-
-
-@dataclasses.dataclass(frozen=True)
-class Placement:
-    stages: Tuple[Stage, ...]
-
-    def device_of(self, layer: int) -> str:
-        for s in self.stages:
-            if s.start <= layer < s.end:
-                return s.device
-        raise IndexError(layer)
-
-    def describe(self) -> str:
-        return " | ".join(f"L{s.start}..L{s.end - 1}@{s.device}"
-                          for s in self.stages)
-
-
-@dataclasses.dataclass(frozen=True)
-class Evaluation:
-    placement: Placement
-    stage_times: Tuple[float, ...]
-    link_times: Tuple[float, ...]
-    bottleneck: float
-    t_chunk: float             # for the requested n
-    t_frame: float             # n = 1 latency
-    max_similarity: float      # privacy leakage over untrusted inputs
-    feasible: bool
-
-
-# ---------------------------------------------------------------------------
-# Cost evaluation
-# ---------------------------------------------------------------------------
 def _stage_exec(profiles: Sequence[LayerProfile], stage: Stage,
                 device: DeviceProfile) -> float:
-    layers = profiles[stage.start:stage.end]
-    working_set = sum(l.params_bytes for l in layers) + \
-        max((l.traffic() for l in layers), default=0.0)
-    if device.trusted:
-        working_set += RUNTIME_FOOTPRINT
-    return device.per_frame_overhead + sum(
-        layer_exec_time(l.flops, l.traffic(), device, working_set, l.eff)
-        for l in layers)
-
-
-def evaluate(placement: Placement, profiles: Sequence[LayerProfile],
-             graph: ResourceGraph, n: int, delta: float,
-             input_similarity: float = 1.0) -> Evaluation:
-    stage_times: List[float] = []
-    link_times: List[float] = []
-    max_sim = 0.0
-    feasible = True
-
-    for idx, stage in enumerate(placement.stages):
-        dev = graph.devices[stage.device]
-        t = _stage_exec(profiles, stage, dev)
-        # sealing: TEE seals its boundary output; receiving TEE unseals.
-        if idx + 1 < len(placement.stages):
-            nxt = graph.devices[placement.stages[idx + 1].device]
-            boundary = profiles[stage.end - 1]
-            if dev.trusted and nxt.trusted:
-                t += seal_time(boundary.out_bytes, dev)
-        if idx > 0:
-            prev = graph.devices[placement.stages[idx - 1].device]
-            boundary = profiles[stage.start - 1]
-            if prev.trusted and dev.trusted:
-                t += seal_time(boundary.out_bytes, dev)
-        stage_times.append(t)
-        if idx + 1 < len(placement.stages):
-            nxt_stage = placement.stages[idx + 1]
-            boundary = profiles[stage.end - 1]
-            link_times.append(transmit_time(
-                boundary.out_bytes, graph.link(stage.device, nxt_stage.device)))
-
-        # privacy: every layer on an untrusted device needs dissimilar input
-        if not dev.trusted:
-            for x in range(stage.start, stage.end):
-                sim = input_similarity if x == 0 else profiles[x - 1].similarity
-                max_sim = max(max_sim, sim)
-                if sim >= delta:
-                    feasible = False
-        # C1 start rule: the first stage must be trusted
-        if idx == 0 and not dev.trusted:
-            feasible = False
-
-    bottleneck = max(stage_times + (link_times or [0.0]))
-    total = sum(stage_times) + sum(link_times)
-    t_chunk = total + (n - 1) * bottleneck
-    return Evaluation(placement, tuple(stage_times), tuple(link_times),
-                      bottleneck, t_chunk, total, max_sim, feasible)
-
-
-# ---------------------------------------------------------------------------
-# Placement-tree enumeration (Fig. 7)
-# ---------------------------------------------------------------------------
-def enumerate_placements(num_layers: int, graph: ResourceGraph,
-                         max_trusted: Optional[int] = None,
-                         ) -> Iterable[Placement]:
-    """All tree paths: 1..R trusted prefix stages (contiguous, in device
-    order) optionally followed by one untrusted suffix device."""
-    M = num_layers
-    trusted = graph.trusted()
-    if max_trusted is not None:
-        trusted = trusted[:max_trusted]
-    untrusted = graph.untrusted()
-    R = len(trusted)
-
-    for r in range(1, R + 1):
-        # boundaries 0 < b1 < ... < b_{r-1} < M split the prefix among the
-        # r trusted devices; b_r in (b_{r-1}, M] ends the trusted prefix.
-        for cuts in itertools.combinations(range(1, M), r - 1):
-            starts = (0,) + cuts
-            for last_end in range(starts[-1] + 1, M + 1):
-                ends = cuts + (last_end,)
-                stages = tuple(Stage(d, s, e) for d, s, e
-                               in zip(trusted, starts, ends))
-                if last_end == M:
-                    yield Placement(stages)
-                else:
-                    for u in untrusted:
-                        yield Placement(stages + (Stage(u, last_end, M),))
+    """Legacy helper (benchmarks use it for per-stage breakdowns)."""
+    return stage_exec_direct(profiles, stage.start, stage.end, device)
 
 
 def solve(profiles: Sequence[LayerProfile], graph: ResourceGraph, *,
           n: int, delta: float, max_trusted: Optional[int] = None,
           pipelined: bool = True) -> Tuple[Evaluation, List[Evaluation]]:
-    """Step 1–3 of the algorithm: enumerate, evaluate, argmin subject to C2.
+    """Legacy entry point: exhaustive enumerate/evaluate/argmin.
 
     pipelined=False reproduces the 'No pipelining' baseline (optimizes n=1
     latency, then pays n * t_frame on a stream).
     """
-    evals: List[Evaluation] = []
-    best: Optional[Evaluation] = None
-    for p in enumerate_placements(len(profiles), graph, max_trusted):
-        ev = evaluate(p, profiles, graph, n, delta)
-        evals.append(ev)
-        if not ev.feasible:
-            continue
-        key = ev.t_chunk if pipelined else ev.t_frame
-        best_key = None if best is None else (
-            best.t_chunk if pipelined else best.t_frame)
-        if best is None or key < best_key:
-            best = ev
-    if best is None:
-        raise ValueError("no feasible placement (privacy threshold too strict)")
-    return best, evals
-
-
-# ---------------------------------------------------------------------------
-# Convenience: profiles from CNN tables / LM configs
-# ---------------------------------------------------------------------------
-def profiles_from_cnn(table, input_resolution: int = 224) -> List[LayerProfile]:
-    from repro.models.cnn import CnnLayer  # local import, avoids jax at import
-    from .privacy import resolution_similarity
-    out = []
-    for l in table:
-        out.append(LayerProfile(
-            name=l.name, flops=l.flops, out_bytes=l.out_bytes,
-            similarity=resolution_similarity(l.resolution, input_resolution),
-            params_bytes=l.params_bytes, act_bytes=l.out_bytes, eff=l.eff))
-    return out
-
-
-def profiles_from_arch(cfg, seq_len: int, similarities: Optional[Sequence[float]]
-                       = None, bytes_per_el: int = 1) -> List[LayerProfile]:
-    """Per-block profiles for an assigned LM arch (decode-token costs).
-
-    similarities: per-block representation similarity (from
-    privacy.lm_similarity_profile); defaults to a geometric decay fit.
-    """
-    out = []
-    for i in range(cfg.num_layers):
-        sim = (similarities[i] if similarities is not None
-               else max(0.05, 0.985 ** (i + 1) - 0.0))
-        flops = 2.0 * cfg.block_active_params(i) * seq_len
-        out_bytes = float(cfg.d_model * seq_len * bytes_per_el * 2)
-        out.append(LayerProfile(
-            name=f"block{i}", flops=flops, out_bytes=out_bytes,
-            similarity=float(sim),
-            params_bytes=cfg.block_params(i) * 2.0,
-            act_bytes=out_bytes))
-    return out
+    res = _planner_solve(profiles, graph, n=n, delta=delta,
+                         max_trusted=max_trusted, pipelined=pipelined,
+                         solver="exhaustive")
+    return res.as_tuple()

@@ -1,0 +1,31 @@
+"""Layered placement planner (DESIGN.md §Planner).
+
+Three decoupled layers:
+
+1. **profiling** — ``LayerProfile``/``ResourceGraph`` plus ``CostTables``
+   (prefix-sum / range-max structure making stage cost, EPC working set and
+   seal/transfer times O(1) per candidate);
+2. **candidate generation** — the ``Solver`` protocol with
+   ``ExhaustiveSolver`` (paper Fig. 7 tree, correctness oracle),
+   ``DPSolver`` (optimal interval DP) and ``BeamSolver`` (approximate);
+3. **re-planning** — ``ResourceManager.plan()/replan_on_failure()``
+   (enclave.domain) re-solves over the surviving domains, reusing cached
+   tables, and feeds uneven stage boundaries into the pipelined runtime.
+
+``repro.core.placement`` remains as a thin backward-compatible shim.
+"""
+from .evaluation import (Evaluation, Placement, SolveResult, Stage, evaluate)
+from .profiling import (CostTables, DeviceTable, LayerProfile, ResourceGraph,
+                        profiles_from_arch, profiles_from_cnn,
+                        stage_exec_direct)
+from .solvers import (BeamSolver, DPSolver, ExhaustiveSolver,
+                      InfeasibleError, PlacementProblem, Solver,
+                      enumerate_placements, get_solver, solve)
+
+__all__ = [
+    "BeamSolver", "CostTables", "DPSolver", "DeviceTable", "Evaluation",
+    "ExhaustiveSolver", "InfeasibleError", "LayerProfile", "Placement",
+    "PlacementProblem", "ResourceGraph", "SolveResult", "Solver", "Stage",
+    "enumerate_placements", "evaluate", "get_solver", "profiles_from_arch",
+    "profiles_from_cnn", "solve", "stage_exec_direct",
+]

@@ -1,0 +1,334 @@
+"""Planner layer 2 — candidate generation behind a ``Solver`` protocol.
+
+Three interchangeable search strategies over the same placement space
+(contiguous trusted prefix stages in device order, optional single untrusted
+suffix — the paper's Fig. 7 tree):
+
+* ``ExhaustiveSolver`` — literal tree enumeration with per-layer cost
+  evaluation. O(M^R · |U|) candidates, O(M) each. Kept verbatim as the
+  correctness oracle; every other solver is property-tested against it.
+* ``DPSolver`` — optimal interval DP. State = (trusted stages used, layers
+  covered) → Pareto frontier of (closed total, closed bottleneck, open-stage
+  time); the open component exists because a stage's seal cost depends on
+  whether its successor is trusted, which is only known at the next
+  transition. Dominance pruning is safe because the t_chunk objective
+  (Σ + (n-1)·max) is monotone in all three components. O(R·M²·|frontier|)
+  with O(1) stage costs from ``CostTables`` — orders of magnitude faster
+  than exhaustive at LM depth (benchmarks/solver_scaling.py).
+* ``BeamSolver`` — the same recurrence with each frontier truncated to
+  ``width`` states by optimistic completion cost. Not guaranteed optimal;
+  use when M·R makes even the DP frontier large.
+
+``solve(..., solver="dp")`` is the front door; ``core.placement.solve``
+remains as a thin shim with the original signature and semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import (Iterable, List, Optional, Protocol, Sequence, Tuple,
+                    Union, runtime_checkable)
+
+from .evaluation import Evaluation, Placement, SolveResult, Stage, evaluate
+from .profiling import CostTables, LayerProfile, ResourceGraph
+
+
+@dataclasses.dataclass
+class PlacementProblem:
+    """One solver invocation: workload, topology, objective."""
+    profiles: Sequence[LayerProfile]
+    graph: ResourceGraph
+    n: int
+    delta: float
+    max_trusted: Optional[int] = None
+    pipelined: bool = True
+    input_similarity: float = 1.0
+    tables: Optional[CostTables] = None
+
+    def trusted(self) -> List[str]:
+        t = self.graph.trusted()
+        return t[:self.max_trusted] if self.max_trusted is not None else t
+
+    def untrusted(self) -> List[str]:
+        return self.graph.untrusted()
+
+    def get_tables(self) -> CostTables:
+        if self.tables is None:
+            self.tables = CostTables(self.profiles, self.graph,
+                                     self.input_similarity)
+        return self.tables
+
+    def objective(self, ev: Evaluation) -> float:
+        return ev.t_chunk if self.pipelined else ev.t_frame
+
+
+@runtime_checkable
+class Solver(Protocol):
+    name: str
+
+    def solve(self, problem: PlacementProblem) -> SolveResult: ...
+
+
+class InfeasibleError(ValueError):
+    pass
+
+
+def _no_feasible() -> InfeasibleError:
+    return InfeasibleError(
+        "no feasible placement (privacy threshold too strict)")
+
+
+# ---------------------------------------------------------------------------
+# Placement-tree enumeration (Fig. 7)
+# ---------------------------------------------------------------------------
+def enumerate_placements(num_layers: int, graph: ResourceGraph,
+                         max_trusted: Optional[int] = None,
+                         ) -> Iterable[Placement]:
+    """All tree paths: 1..R trusted prefix stages (contiguous, in device
+    order) optionally followed by one untrusted suffix device."""
+    M = num_layers
+    trusted = graph.trusted()
+    if max_trusted is not None:
+        trusted = trusted[:max_trusted]
+    untrusted = graph.untrusted()
+    R = len(trusted)
+
+    for r in range(1, R + 1):
+        # boundaries 0 < b1 < ... < b_{r-1} < M split the prefix among the
+        # r trusted devices; b_r in (b_{r-1}, M] ends the trusted prefix.
+        for cuts in itertools.combinations(range(1, M), r - 1):
+            starts = (0,) + cuts
+            for last_end in range(starts[-1] + 1, M + 1):
+                ends = cuts + (last_end,)
+                stages = tuple(Stage(d, s, e) for d, s, e
+                               in zip(trusted, starts, ends))
+                if last_end == M:
+                    yield Placement(stages)
+                else:
+                    for u in untrusted:
+                        yield Placement(stages + (Stage(u, last_end, M),))
+
+
+@dataclasses.dataclass
+class ExhaustiveSolver:
+    """Enumerate, evaluate, argmin subject to C2 — the correctness oracle.
+
+    ``use_tables=True`` swaps the O(M) per-candidate evaluation for O(1)
+    CostTables queries (same numbers modulo float association).
+    """
+    name: str = "exhaustive"
+    use_tables: bool = False
+
+    def solve(self, problem: PlacementProblem) -> SolveResult:
+        t0 = time.perf_counter()
+        tables = problem.get_tables() if self.use_tables else None
+        evals: List[Evaluation] = []
+        best: Optional[Evaluation] = None
+        best_key: Optional[float] = None
+        n_feasible = 0
+        for p in enumerate_placements(len(problem.profiles), problem.graph,
+                                      problem.max_trusted):
+            ev = evaluate(p, problem.profiles, problem.graph, problem.n,
+                          problem.delta,
+                          input_similarity=problem.input_similarity,
+                          tables=tables)
+            evals.append(ev)
+            if not ev.feasible:
+                continue
+            n_feasible += 1
+            key = problem.objective(ev)
+            if best_key is None or key < best_key:
+                best, best_key = ev, key
+        if best is None:
+            raise _no_feasible()
+        return SolveResult(best, evals, len(evals), n_feasible,
+                           len(evals) - n_feasible, self.name,
+                           time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Interval DP / beam over Pareto frontiers
+# ---------------------------------------------------------------------------
+# A partial state covers layers [0, b) with r trusted stages, the last of
+# which is still "open" (its outgoing seal cost depends on the successor):
+#   (closed_total, closed_bottleneck, open_time, bounds)
+# bounds = (0, b1, ..., b) reconstructs the placement.
+_State = Tuple[float, float, float, Tuple[int, ...]]
+
+
+def _dominates(a: _State, b: _State) -> bool:
+    return a[0] <= b[0] and a[1] <= b[1] and a[2] <= b[2]
+
+
+def _pareto(states: List[_State]) -> Tuple[List[_State], int]:
+    """Keep the non-dominated states; returns (kept, n_pruned)."""
+    states.sort(key=lambda s: (s[0], s[1], s[2]))
+    kept: List[_State] = []
+    for s in states:
+        if not any(_dominates(k, s) for k in kept):
+            kept.append(s)
+    return kept, len(states) - len(kept)
+
+
+@dataclasses.dataclass
+class _FrontierSolver:
+    """Shared recurrence for DPSolver (unbounded frontier) and BeamSolver
+    (frontier truncated to ``width`` by optimistic completion cost)."""
+    name: str = "dp"
+    width: Optional[int] = None
+
+    def solve(self, problem: PlacementProblem) -> SolveResult:
+        t0 = time.perf_counter()
+        tables = problem.get_tables()
+        M = len(problem.profiles)
+        trusted = problem.trusted()
+        untrusted = problem.untrusted()
+        if not trusted or M == 0:   # C1: processing must start in a TEE
+            raise _no_feasible()
+        n, delta = problem.n, problem.delta
+        pipelined = problem.pipelined
+        n_pruned = 0
+        n_candidates = 0
+        n_feasible = 0
+        truncated = False
+        best_key: Optional[float] = None
+        best_bounds: Optional[Tuple] = None   # (bounds, suffix_device|None)
+
+        def complete_key(ct: float, cb: float, open_t: float) -> float:
+            total = ct + open_t
+            return total + (n - 1) * max(cb, open_t) if pipelined else total
+
+        def optimistic(s: _State) -> float:
+            return complete_key(s[0], s[1], s[2])
+
+        def finalize(states: List[_State], r: int) -> None:
+            """Close every state either at b == M or with an untrusted
+            suffix over [b, M)."""
+            nonlocal best_key, best_bounds, n_candidates, n_feasible, n_pruned
+            last_dev = trusted[r - 1]
+            for ct, cb, open_t, bounds in states:
+                b = bounds[-1]
+                if b == M:
+                    n_candidates += 1
+                    n_feasible += 1
+                    key = complete_key(ct, cb, open_t)
+                    if best_key is None or key < best_key:
+                        best_key, best_bounds = key, (bounds, None)
+                    continue
+                if tables.max_sim(b, M) >= delta:
+                    n_pruned += len(untrusted)   # privacy-infeasible suffixes
+                    continue
+                suffix_t = {u: tables.stage_time(u, b, M) for u in untrusted}
+                for u in untrusted:
+                    n_candidates += 1
+                    n_feasible += 1
+                    link = tables.link_time(last_dev, u, b)
+                    total = ct + open_t + link + suffix_t[u]
+                    key = (total + (n - 1) * max(cb, open_t, link, suffix_t[u])
+                           if pipelined else total)
+                    if best_key is None or key < best_key:
+                        best_key, best_bounds = key, (bounds, u)
+
+        # r = 1: trusted[0] owns [0, b)
+        frontier = {b: [(0.0, 0.0, tables.stage_time(trusted[0], 0, b),
+                         (0, b))] for b in range(1, M + 1)}
+        for r in range(1, len(trusted) + 1):
+            for states in frontier.values():
+                finalize(states, r)
+            if r == len(trusted):
+                break
+            nxt_dev, prev_dev = trusted[r], trusted[r - 1]
+            nxt: dict = {}
+            for b, states in frontier.items():
+                if b >= M:
+                    continue
+                # boundary costs and candidate stage times depend only on
+                # (b, e), not on the state — compute once per cell
+                seal_out = tables.seal(prev_dev, b)
+                link = tables.link_time(prev_dev, nxt_dev, b)
+                unseal = tables.seal(nxt_dev, b)
+                opens = [unseal + tables.stage_time(nxt_dev, b, e)
+                         for e in range(b + 1, M + 1)]
+                for ct, cb, open_t, bounds in states:
+                    # branch-and-bound: the optimistic completion key only
+                    # grows along any extension, so states already worse than
+                    # the incumbent (set by finalize) cannot win
+                    if (best_key is not None
+                            and complete_key(ct, cb, open_t) >= best_key):
+                        n_pruned += 1
+                        continue
+                    # close the open stage: it seals for its trusted successor
+                    closed = open_t + seal_out
+                    ct2 = ct + closed + link
+                    cb2 = max(cb, closed, link)
+                    for i, open2 in enumerate(opens):
+                        e = b + 1 + i
+                        nxt.setdefault(e, []).append(
+                            (ct2, cb2, open2, bounds + (e,)))
+            frontier = {}
+            for e, states in nxt.items():
+                kept, pruned = _pareto(states)
+                n_pruned += pruned
+                if self.width is not None and len(kept) > self.width:
+                    kept.sort(key=optimistic)
+                    n_pruned += len(kept) - self.width
+                    kept = kept[:self.width]
+                    truncated = True
+                frontier[e] = kept
+
+        if best_bounds is None:
+            raise _no_feasible()
+        bounds, suffix = best_bounds
+        stages = tuple(Stage(d, s, e) for d, s, e
+                       in zip(trusted, bounds, bounds[1:]))
+        if suffix is not None:
+            stages += (Stage(suffix, bounds[-1], M),)
+        # re-evaluate the winner with the oracle path for exact parity
+        best = evaluate(Placement(stages), problem.profiles, problem.graph,
+                        n, delta, input_similarity=problem.input_similarity)
+        return SolveResult(best, [best], n_candidates, n_feasible, n_pruned,
+                           self.name, time.perf_counter() - t0,
+                           truncated=truncated)
+
+
+@dataclasses.dataclass
+class DPSolver(_FrontierSolver):
+    """Optimal contiguous partition via interval DP with Pareto pruning."""
+    name: str = "dp"
+    width: Optional[int] = None
+
+
+@dataclasses.dataclass
+class BeamSolver(_FrontierSolver):
+    """DP recurrence with frontiers truncated to ``width`` — approximate,
+    for very deep stacks × many domains."""
+    name: str = "beam"
+    width: Optional[int] = 8
+
+
+_SOLVERS = {"exhaustive": ExhaustiveSolver, "dp": DPSolver, "beam": BeamSolver}
+
+
+def get_solver(spec: Union[str, Solver, None]) -> Solver:
+    if spec is None:
+        return ExhaustiveSolver()
+    if isinstance(spec, str):
+        try:
+            return _SOLVERS[spec]()
+        except KeyError:
+            raise ValueError(f"unknown solver {spec!r}; "
+                             f"expected one of {sorted(_SOLVERS)}")
+    return spec
+
+
+def solve(profiles: Sequence[LayerProfile], graph: ResourceGraph, *,
+          n: int, delta: float, max_trusted: Optional[int] = None,
+          pipelined: bool = True, input_similarity: float = 1.0,
+          solver: Union[str, Solver, None] = None,
+          tables: Optional[CostTables] = None) -> SolveResult:
+    """Plan a placement. ``solver``: "exhaustive" (default; the oracle),
+    "dp" (optimal, fast), "beam" (approximate, fastest), or a Solver."""
+    problem = PlacementProblem(profiles, graph, n, delta, max_trusted,
+                               pipelined, input_similarity, tables)
+    return get_solver(solver).solve(problem)

@@ -11,11 +11,13 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from repro.core.cost_model import (DeviceProfile, LinkProfile, TPU_POD,
                                    TPU_POD_TRUSTED, DCN_LINK)
-from repro.core.placement import ResourceGraph
+from repro.core.planner import (CostTables, ExhaustiveSolver, ResourceGraph,
+                                SolveResult, get_solver,
+                                solve as planner_solve)
 
 
 @dataclasses.dataclass
@@ -41,6 +43,10 @@ class ResourceManager:
     def __init__(self):
         self._domains: Dict[str, TrustDomain] = {}
         self._links: Dict[Tuple[str, str], LinkProfile] = {}
+        # per-device cost tables survive domain failures (see CostTables)
+        self._planner_cache: dict = {}
+        self._last_plan_args: Optional[dict] = None
+        self.last_plan: Optional[SolveResult] = None
 
     # -- registration ------------------------------------------------------
     def register(self, domain: TrustDomain,
@@ -79,6 +85,51 @@ class ResourceManager:
                        ) -> ResourceGraph:
         devices = {d.name: d.device for d in self.healthy_domains()}
         return ResourceGraph(devices, dict(self._links), default_link)
+
+    # -- planning (paper Fig. 2: Resource Manager drives the partitioner) --
+    def plan(self, profiles: Sequence, *, n: int, delta: float,
+             solver: str = "dp", pipelined: bool = True,
+             max_trusted: Optional[int] = None,
+             input_similarity: float = 1.0,
+             default_link: LinkProfile = DCN_LINK) -> SolveResult:
+        """Solve placement over the currently healthy domains.
+
+        Per-device cost tables are cached on the manager, so repeated plans
+        (and failure-driven re-plans over a shrunk graph) only pay for the
+        search, not re-profiling. The plain exhaustive oracle evaluates
+        per-layer and never reads the tables, so none are built for it.
+        """
+        graph = self.resource_graph(default_link)
+        sv = get_solver(solver)
+        tables = None
+        if not isinstance(sv, ExhaustiveSolver) or sv.use_tables:
+            tables = CostTables(profiles, graph, input_similarity,
+                                cache=self._planner_cache)
+        res = planner_solve(profiles, graph, n=n, delta=delta, solver=sv,
+                            pipelined=pipelined, max_trusted=max_trusted,
+                            input_similarity=input_similarity, tables=tables)
+        self._last_plan_args = dict(
+            profiles=profiles, n=n, delta=delta, solver=solver,
+            pipelined=pipelined, max_trusted=max_trusted,
+            input_similarity=input_similarity, default_link=default_link)
+        self.last_plan = res
+        return res
+
+    def replan_on_failure(self, failed: Union[str, Iterable[str]],
+                          **overrides) -> SolveResult:
+        """Mark domain(s) unhealthy and incrementally re-solve with the
+        arguments of the last ``plan()`` (overridable per call)."""
+        if self._last_plan_args is None and \
+                not {"profiles", "n", "delta"} <= overrides.keys():
+            raise RuntimeError("replan_on_failure before any plan() "
+                               "(or pass profiles, n and delta)")
+        names = [failed] if isinstance(failed, str) else list(failed)
+        for name in names:
+            self.mark_unhealthy(name)
+        args = dict(self._last_plan_args or {})
+        args.update(overrides)
+        profiles = args.pop("profiles")
+        return self.plan(profiles, **args)
 
 
 def default_two_pod_manager() -> ResourceManager:

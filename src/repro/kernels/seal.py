@@ -99,8 +99,8 @@ def seal_pallas(x: jax.Array, key: jax.Array, counter: jax.Array,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bR, cols), lambda i: (i, 0)),
-            pl.BlockSpec(memory_space=pl.ANY if False else None),  # key (full)
-            pl.BlockSpec(memory_space=None),                        # counter
+            pl.BlockSpec(memory_space=None),   # key (full)
+            pl.BlockSpec(memory_space=None),   # counter
         ],
         out_specs=[
             pl.BlockSpec((bR, cols), lambda i: (i, 0)),

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced as reduce_cfg
-from repro.core.placement import profiles_from_arch, solve
+from repro.core.planner import profiles_from_arch
 from repro.core.privacy import LM_SIM_DELTA
 from repro.enclave.domain import two_enclave_manager
 from repro.launch.mesh import make_mesh
@@ -36,6 +36,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--requests", type=int, default=4, help="decode steps")
     ap.add_argument("--no-seal", action="store_true")
+    ap.add_argument("--solver", default="dp",
+                    choices=["dp", "exhaustive", "beam"])
+    ap.add_argument("--even-stages", action="store_true",
+                    help="ignore planned boundaries; split blocks evenly")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -46,9 +50,20 @@ def main(argv=None):
     # --- Serdab plan over the trust domains -----------------------------
     rm = two_enclave_manager()
     profiles = profiles_from_arch(cfg, seq_len=1)
-    best, _ = solve(profiles, rm.resource_graph(), n=10_000, delta=LM_SIM_DELTA)
+    res = rm.plan(profiles, n=10_000, delta=LM_SIM_DELTA, solver=args.solver)
+    best = res.best
     print("placement:", best.placement.describe(),
-          f"(bottleneck {best.bottleneck * 1e6:.1f} us/frame)")
+          f"(bottleneck {best.bottleneck * 1e6:.1f} us/frame, "
+          f"{res.solver}: {res.n_feasible} feasible / {res.n_pruned} pruned "
+          f"in {res.wall_time_s * 1e3:.1f} ms)")
+    stage_blocks = None
+    planned = best.placement.stage_sizes()
+    if not args.even_stages and len(planned) == args.stages:
+        stage_blocks = planned
+        print("stage boundaries from plan:", "/".join(map(str, planned)))
+    elif not args.even_stages:
+        print(f"plan wants {len(planned)} stages but --stages={args.stages}; "
+              f"falling back to even split")
 
     dims = tuple(int(x) for x in args.mesh.split("x"))
     mesh = make_mesh(dims, ("pod", "data")[:len(dims)])
@@ -72,13 +87,20 @@ def main(argv=None):
 
         dec = PipelinedDecoder(api, mesh, num_stages=args.stages,
                                num_microbatches=args.microbatches,
-                               seal_boundary=not args.no_seal)
-        step = jax.jit(dec.build())
+                               seal_boundary=not args.no_seal,
+                               stage_blocks=stage_blocks)
+        # stage params AND cache once outside the decode loop (uneven
+        # staging is a gather; the cache would round-trip twice per token)
+        staged_params = dec.stage_params(params)
+        staged_cache = dec.stage_cache(cache)
+        step = jax.jit(dec.build(prestaged_params=True,
+                                 prestaged_cache=True))
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         generated = [tok]
         t0 = time.time()
         for i in range(args.requests):
-            logits, cache = step(params, cache, {"tokens": tok}, key + i)
+            logits, staged_cache = step(staged_params, staged_cache,
+                                        {"tokens": tok}, key + i)
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
             generated.append(tok)
         jax.block_until_ready(tok)

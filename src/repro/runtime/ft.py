@@ -1,15 +1,20 @@
 """Fault tolerance for the serving pipeline: heartbeats, straggler
 detection, and Serdab re-planning (the paper's 'online re-partitioning when
 profiling information deviates from predictions', Sec. V).
+
+Planning goes through ``ResourceManager.plan()/replan_on_failure()`` (the
+planner's re-planning layer, DESIGN.md §Planner): cost tables are cached on
+the manager, so a failure-driven re-solve only pays for the solver pass, and
+the resulting (possibly uneven) stage boundaries feed straight into
+``PipelinedDecoder(stage_blocks=evaluation.placement.stage_sizes())``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
-from repro.core.placement import (Evaluation, LayerProfile, ResourceGraph,
-                                  solve)
+from repro.core.planner import Evaluation, LayerProfile, SolveResult
 from repro.enclave.domain import ResourceManager
 
 
@@ -39,14 +44,17 @@ class OnlineReplanner:
     n: int
     delta: float
     deviation_threshold: float = 1.5
+    solver: str = "dp"
     current: Optional[Evaluation] = None
+    last_result: Optional[SolveResult] = None
     replans: int = 0
 
     def plan(self) -> Evaluation:
-        graph = self.rm.resource_graph()
-        best, _ = solve(self.profiles, graph, n=self.n, delta=self.delta)
-        self.current = best
-        return best
+        res = self.rm.plan(self.profiles, n=self.n, delta=self.delta,
+                           solver=self.solver)
+        self.last_result = res
+        self.current = res.best
+        return res.best
 
     def observe(self, stage_times: Dict[str, float]) -> Optional[Evaluation]:
         """stage_times: measured per-device stage time. Re-plans when any
@@ -57,8 +65,9 @@ class OnlineReplanner:
         predicted = {s.device: t for s, t in
                      zip(self.current.placement.stages, self.current.stage_times)}
         healthy = {d.name for d in self.rm.healthy_domains()}
-        needs_replan = any(s.device not in healthy
-                           for s in self.current.placement.stages)
+        dead = [s.device for s in self.current.placement.stages
+                if s.device not in healthy]
+        needs_replan = bool(dead)
         for dev, obs in stage_times.items():
             pred = predicted.get(dev)
             if pred and obs > self.deviation_threshold * pred:
@@ -71,5 +80,12 @@ class OnlineReplanner:
                 needs_replan = True
         if needs_replan:
             self.replans += 1
+            if dead:
+                res = self.rm.replan_on_failure(
+                    dead, profiles=self.profiles, n=self.n, delta=self.delta,
+                    solver=self.solver)
+                self.last_result = res
+                self.current = res.best
+                return res.best
             return self.plan()
         return None

@@ -15,19 +15,26 @@ stay GSPMD-managed inside each stage, so TP/EP/sequence-sharded caches
 compose with pipelining. The tick loop is a ``lax.scan``; communication is
 one ``ppermute`` ring per tick.
 
-Applicability: any model whose body is ONE homogeneous scanned segment with
-blocks divisible by num_stages (dense, VLM, Qwen-MoE, xLSTM, Hymba).
-Moonshot's dense stem and Whisper's encoder make them two-segment models —
-they serve multi-pod via batch sharding instead (DESIGN.md §Arch-applicability).
+Applicability: any model whose body is ONE homogeneous scanned segment
+(dense, VLM, Qwen-MoE, xLSTM, Hymba). Moonshot's dense stem and Whisper's
+encoder make them two-segment models — they serve multi-pod via batch
+sharding instead (DESIGN.md §Arch-applicability).
+
+Stage boundaries need not be even: ``stage_blocks`` takes the solver's
+per-stage block counts (e.g. 28 blocks as 10/9/9). Uneven stages are padded
+to the widest stage; padded slots replicate a real block's params/cache and
+are masked out of the scan, so logits match the unpipelined decode path
+exactly (DESIGN.md §Planner).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.enclave import sealing
@@ -62,49 +69,85 @@ class PipelinedDecoder:
     num_microbatches: int
     seal_boundary: bool = True
     use_kernel: bool = False            # Pallas path on TPU
+    stage_blocks: Optional[Sequence[int]] = None   # per-stage block counts
 
     def __post_init__(self):
         model = self.api.model
         assert pipeline_applicable(self.api), \
             "pipelined serve needs a single homogeneous segment"
         self.seg = model.segments[0]
-        assert self.seg.n % self.num_stages == 0, \
-            f"{self.seg.n} blocks not divisible into {self.num_stages} stages"
-        self.bps = self.seg.n // self.num_stages
+        S = self.num_stages
+        if self.stage_blocks is None:
+            assert self.seg.n % S == 0, \
+                f"{self.seg.n} blocks not divisible into {S} stages; " \
+                f"pass stage_blocks= for uneven boundaries"
+            counts = (self.seg.n // S,) * S
+        else:
+            counts = tuple(int(c) for c in self.stage_blocks)
+            assert len(counts) == S, (counts, S)
+            assert all(c > 0 for c in counts), counts
+            assert sum(counts) == self.seg.n, (counts, self.seg.n)
+        self.stage_counts = counts
+        self.bps = max(counts)          # padded per-stage block count
+        self.uniform = len(set(counts)) == 1
+        starts = np.concatenate([[0], np.cumsum(counts)])
+        # gather: staged slot (s, j) holds block starts[s] + min(j, c_s - 1);
+        # padded slots replicate the stage's last block (finite values, then
+        # masked out of the scan)
+        self._gather_idx = np.stack(
+            [starts[s] + np.minimum(np.arange(self.bps), counts[s] - 1)
+             for s in range(S)]).reshape(-1)
+        # scatter: block i lives at staged slot stage(i) * bps + offset
+        self._scatter_idx = np.concatenate(
+            [s * self.bps + np.arange(counts[s]) for s in range(S)])
+        self._mask = np.stack(
+            [np.arange(self.bps) < counts[s] for s in range(S)])
 
     # -- parameter / cache reshaping (leading stage dim, sharded over pod) --
+    def _stage_tree(self, tree):
+        """[n_blocks, ...] leaves -> [num_stages, bps, ...] (gather-padded
+        when stages are uneven, plain reshape when even)."""
+        S, bps = self.num_stages, self.bps
+        if self.uniform:
+            return jax.tree.map(
+                lambda x: x.reshape((S, bps) + x.shape[1:]), tree)
+        idx = jnp.asarray(self._gather_idx)
+        return jax.tree.map(
+            lambda x: jnp.take(x, idx, axis=0).reshape(
+                (S, bps) + x.shape[1:]), tree)
+
     def stage_params(self, params):
-        """Reshape the segment's stacked [n_blocks, ...] leaves into
-        [num_stages, bps, ...]."""
         seg = dict(params)
-        seg[self.seg.name] = jax.tree.map(
-            lambda x: x.reshape((self.num_stages, self.bps) + x.shape[1:]),
-            params[self.seg.name])
+        seg[self.seg.name] = self._stage_tree(params[self.seg.name])
         return seg
 
     def stage_cache(self, cache):
-        body = cache[self.seg.name]
-        return jax.tree.map(
-            lambda x: x.reshape((self.num_stages, self.bps) + x.shape[1:]),
-            body), cache["len"]
+        return self._stage_tree(cache[self.seg.name]), cache["len"]
 
     def unstage_cache(self, staged, new_len):
-        body = jax.tree.map(
-            lambda x: x.reshape((self.seg.n,) + x.shape[2:]), staged)
+        S, bps = self.num_stages, self.bps
+        if self.uniform:
+            body = jax.tree.map(
+                lambda x: x.reshape((self.seg.n,) + x.shape[2:]), staged)
+        else:
+            idx = jnp.asarray(self._scatter_idx)
+            body = jax.tree.map(
+                lambda x: jnp.take(
+                    x.reshape((S * bps,) + x.shape[2:]), idx, axis=0), staged)
         return {self.seg.name: body, "len": new_len}
 
     # -- specs ---------------------------------------------------------------
-    def _param_specs_tree(self, params):
+    def _param_specs_tree(self, staged):
         def spec(path_has_stage, x):
             if path_has_stage:
                 return P("pod", *([None] * (x.ndim - 1)))
             return P(*([None] * x.ndim))
-        staged = self.stage_params(params)
         return {k: jax.tree.map(functools.partial(spec, k == self.seg.name), v)
                 for k, v in staged.items()}
 
     # -- the step -------------------------------------------------------------
-    def build(self):
+    def build(self, prestaged_params: bool = False,
+              prestaged_cache: bool = False):
         api, seg, S = self.api, self.seg, self.num_stages
         nm, bps = self.num_microbatches, self.bps
         cfg = api.cfg
@@ -113,27 +156,35 @@ class PipelinedDecoder:
         seal_on = self.seal_boundary
         use_kernel = self.use_kernel
 
-        def stage_run(blk_params, blk_cache, x, cache_len):
+        def stage_run(blk_params, blk_cache, blk_mask, x, cache_len):
             positions = jnp.full((1, 1), cache_len, jnp.int32)
             pos3 = None
             if cfg.pos_type == "mrope":
                 pos3 = jnp.full((x.shape[0], 1, 3), cache_len, jnp.int32)
 
             def step(carry, xs):
-                p, c = xs
+                p, c, m = xs
                 out, new_c = seg.apply_fn(p, carry, positions, mode="decode",
                                           cache=c, cache_len=cache_len,
                                           pos3=pos3)
+                # padded slots (uneven stages) pass the carry through and
+                # leave their (replicated) cache untouched
+                out = jnp.where(m, out, carry)
+                new_c = jax.tree.map(lambda a, b: jnp.where(m, a, b),
+                                     new_c, c)
                 return out, new_c
 
-            return jax.lax.scan(step, x, (blk_params, blk_cache))
+            return jax.lax.scan(step, x, (blk_params, blk_cache, blk_mask))
 
-        def pipeline_body(params, staged_cache, tokens, cache_len, key):
+        def pipeline_body(params, staged_cache, stage_mask, tokens, cache_len,
+                          key):
             """Runs manual over pod. tokens: [nm, B_mb, 1] (replicated over
-            pod); staged leaves [1, bps, B, ...] (pod-sharded stage dim)."""
+            pod); staged leaves [1, bps, B, ...] (pod-sharded stage dim);
+            stage_mask [1, bps] marks real (non-padding) block slots."""
             s_idx = jax.lax.axis_index("pod")
             my_params = jax.tree.map(lambda x: x[0], params[seg.name])
             my_cache = jax.tree.map(lambda x: x[0], staged_cache)
+            my_mask = stage_mask[0]
             B_mb = tokens.shape[1]
             d = cfg.d_model
             V = cfg.vocab_size
@@ -181,7 +232,8 @@ class PipelinedDecoder:
 
                 # my stage's cache slice for this microbatch
                 cache_sl = _batch_slice(cache_st, m_idx * B_mb, B_mb)
-                h, new_sl = stage_run(my_params, cache_sl, x_in, cache_len)
+                h, new_sl = stage_run(my_params, cache_sl, my_mask, x_in,
+                                      cache_len)
                 # only commit the slice when this tick is valid for me
                 new_sl = jax.tree.map(
                     lambda new, old: jnp.where(valid, new, old), new_sl, cache_sl)
@@ -217,10 +269,19 @@ class PipelinedDecoder:
             B = tokens.shape[0]
             B_mb = B // nm
             tok_stream = tokens.reshape(nm, B_mb, 1)
-            staged_params = self.stage_params(params)
-            staged_cache, cache_len = self.stage_cache(cache)
+            # uneven stages make staging a real gather (not a free reshape);
+            # serving loops should stage params/cache once outside the loop
+            # (stage_params/stage_cache + prestaged_*=True) rather than
+            # re-gather per token — the cache round-trips twice otherwise
+            staged_params = params if prestaged_params \
+                else self.stage_params(params)
+            if prestaged_cache:
+                staged_cache, cache_len = cache
+            else:
+                staged_cache, cache_len = self.stage_cache(cache)
+            stage_mask = jnp.asarray(self._mask)
 
-            param_specs = self._param_specs_tree(params)
+            param_specs = self._param_specs_tree(staged_params)
             cache_specs = jax.tree.map(
                 lambda x: P("pod", *([None] * (x.ndim - 1))), staged_cache)
             body = functools.partial(pipeline_body)
@@ -228,13 +289,18 @@ class PipelinedDecoder:
             with R.axis_rules(mesh, R.PIPE_RULES):
                 outputs, new_cache = jax.shard_map(
                     body, mesh=mesh,
-                    in_specs=(param_specs, cache_specs, P(), P(), P()),
+                    in_specs=(param_specs, cache_specs, P("pod", None),
+                              P(), P(), P()),
                     out_specs=(P("pod"), cache_specs),
                     axis_names={"pod"}, check_vma=False,
-                )(staged_params, staged_cache, tok_stream, cache_len, key)
+                )(staged_params, staged_cache, stage_mask, tok_stream,
+                  cache_len, key)
             # stages stack outputs along dim 0; the last nm rows are real
             logits = outputs[-nm:].reshape(B, -1)
-            cache_out = self.unstage_cache(new_cache, cache_len + 1)
+            if prestaged_cache:
+                cache_out = (new_cache, cache_len + 1)
+            else:
+                cache_out = self.unstage_cache(new_cache, cache_len + 1)
             return logits, cache_out
 
         return step_fn

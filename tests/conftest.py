@@ -33,3 +33,29 @@ def run_subprocess(code: str, devices: int = 4, timeout: int = 900) -> str:
 @pytest.fixture(scope="session")
 def subproc():
     return run_subprocess
+
+
+def random_placement_instance(rng, m, r, u):
+    """Random placement problem (m layers, r TEEs, u untrusted devices) —
+    shared by the solver-equivalence tests in test_planner.py and
+    test_property.py so both suites fuzz the same instance space."""
+    import dataclasses
+
+    from repro.core import cost_model as CM
+    from repro.core.planner import LayerProfile, ResourceGraph
+
+    devs = {}
+    for i in range(r):
+        devs[f"t{i}"] = dataclasses.replace(
+            CM.TEE, name=f"t{i}", flops_per_s=float(rng.uniform(5e8, 5e9)),
+            mem_bw=float(rng.uniform(1e9, 8e9)))
+    for i in range(u):
+        devs[f"u{i}"] = dataclasses.replace(
+            CM.CPU, name=f"u{i}", flops_per_s=float(rng.uniform(5e9, 9e10)))
+    profs = [LayerProfile(f"l{i}", float(rng.uniform(1e6, 5e8)),
+                          float(rng.uniform(1e4, 1e6)),
+                          similarity=float(rng.uniform(0, 1)),
+                          params_bytes=float(rng.uniform(0, 8e7)),
+                          eff=float(rng.uniform(0.5, 1.0)))
+             for i in range(m)]
+    return profs, ResourceGraph(devs, {}, CM.WAN_30MBPS)

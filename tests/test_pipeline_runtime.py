@@ -1,6 +1,11 @@
 """Pipelined serve (shard_map over pod) vs sequential decode — multi-device,
 run in subprocesses so the main process keeps 1 device."""
+import jax
 import pytest
+
+pytestmark = pytest.mark.skipif(
+    not (hasattr(jax, "shard_map") and hasattr(jax, "set_mesh")),
+    reason="needs jax.shard_map/jax.set_mesh (jax >= 0.6)")
 
 
 PIPE_CODE = """
@@ -30,11 +35,16 @@ ref_logits, ref_cache = jax.jit(api.decode_fn)(params, cache, {{'tokens': new_to
 mesh = jax.make_mesh((2, 2), ('pod', 'data'), axis_types=(AxisType.Auto,)*2)
 with jax.set_mesh(mesh):
     dec = PipelinedDecoder(api, mesh, num_stages=2, num_microbatches=4,
-                           seal_boundary={seal})
+                           seal_boundary={seal}, stage_blocks={blocks})
     lg, nc = jax.jit(dec.build())(params, cache, {{'tokens': new_tok}}, jnp.uint32(7))
 err = np.abs(np.asarray(lg) - np.asarray(ref_logits)).max()
 rel = err / (np.abs(np.asarray(ref_logits)).max() + 1e-9)
 assert int(nc['len']) == int(ref_cache['len'])
+# uneven boundaries: padded slots must not corrupt the unstaged cache
+for a, b in zip(jax.tree.leaves(nc[seg]), jax.tree.leaves(ref_cache[seg])):
+    ca, cb = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    cerr = np.abs(ca - cb).max() / (np.abs(cb).max() + 1e-9)
+    assert cerr < {tol}, cerr
 print('REL_ERR', rel)
 assert rel < {tol}, rel
 print('OK')
@@ -43,14 +53,26 @@ print('OK')
 
 @pytest.mark.parametrize("arch", ["llama3.2-1b", "hymba-1.5b"])
 def test_pipelined_decode_exact_f32(subproc, arch):
-    out = subproc(PIPE_CODE.format(arch=arch, seal="False", tol=1e-5),
+    out = subproc(PIPE_CODE.format(arch=arch, seal="False", tol=1e-5,
+                                   blocks="None"),
+                  devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.parametrize("blocks", ["[3, 1]", "[1, 3]"])
+def test_pipelined_decode_uneven_stages_exact_f32(subproc, blocks):
+    """Solver-produced uneven boundaries (reduced cfg: 4 blocks as 3/1 or
+    1/3) must reproduce the unpipelined decode logits exactly."""
+    out = subproc(PIPE_CODE.format(arch="llama3.2-1b", seal="False", tol=1e-5,
+                                   blocks=blocks),
                   devices=4)
     assert "OK" in out
 
 
 def test_pipelined_decode_with_sealing(subproc):
     """Sealed boundaries add int8 quantization noise — bounded, not exact."""
-    out = subproc(PIPE_CODE.format(arch="llama3.2-1b", seal="True", tol=0.05),
+    out = subproc(PIPE_CODE.format(arch="llama3.2-1b", seal="True", tol=0.05,
+                                   blocks="None"),
                   devices=4)
     assert "OK" in out
 
