@@ -15,15 +15,16 @@ Three decoupled layers:
 ``repro.core.placement`` remains as a thin backward-compatible shim.
 """
 from .evaluation import (Evaluation, Placement, SolveResult, Stage, evaluate)
-from .profiling import (CostTables, DeviceTable, LayerProfile, ResourceGraph,
-                        profiles_from_arch, profiles_from_cnn,
+from .profiling import (BoundedCache, CostTables, DeviceTable, LayerProfile,
+                        ResourceGraph, profiles_from_arch, profiles_from_cnn,
                         stage_exec_direct)
 from .solvers import (BeamSolver, DPSolver, ExhaustiveSolver,
                       InfeasibleError, PlacementProblem, Solver,
                       enumerate_placements, get_solver, solve)
 
 __all__ = [
-    "BeamSolver", "CostTables", "DPSolver", "DeviceTable", "Evaluation",
+    "BeamSolver", "BoundedCache", "CostTables", "DPSolver", "DeviceTable",
+    "Evaluation",
     "ExhaustiveSolver", "InfeasibleError", "LayerProfile", "Placement",
     "PlacementProblem", "ResourceGraph", "SolveResult", "Solver", "Stage",
     "enumerate_placements", "evaluate", "get_solver", "profiles_from_arch",

@@ -26,6 +26,7 @@ stages; with these tables each costs O(1) instead of O(layers).
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..cost_model import (RUNTIME_FOOTPRINT, DeviceProfile, LinkProfile,
@@ -85,6 +86,31 @@ class _RangeMax:
         k = (e - s).bit_length() - 1
         lvl = self._levels[k]
         return max(lvl[s], lvl[e - (1 << k)])
+
+
+class BoundedCache(OrderedDict):
+    """LRU-bounded memo for planner tables (ROADMAP follow-up (c)).
+
+    Every telemetry-driven derate mints a fresh ``DeviceProfile``, and the
+    per-device table key includes the profile — so under repeated straggler
+    observations an unbounded cache gains one ``DeviceTable`` per observe().
+    Capping with least-recently-used eviction keeps re-plan storms bounded
+    while still serving the common hit (same profiles, surviving devices)."""
+
+    def __init__(self, max_entries: int = 64):
+        super().__init__()
+        self.max_entries = max_entries
+
+    def get(self, key, default=None):
+        if key in self:
+            self.move_to_end(key)
+            return self[key]
+        return default
+
+    def __setitem__(self, key, value):
+        if key not in self and len(self) >= self.max_entries:
+            self.popitem(last=False)
+        super().__setitem__(key, value)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,13 +231,67 @@ def profiles_from_cnn(table, input_resolution: int = 224) -> List[LayerProfile]:
     return out
 
 
+def hlo_calibration(cfg, seq_len: int, compiled,
+                    compiled_batch: int = 1) -> Optional[Tuple[float, float]]:
+    """(eff, act_scale) for ``profiles_from_arch`` from a compiled artifact.
+
+    Compares the analytic per-sequence FLOP/byte model against the compiled
+    HLO's ``cost_analysis()`` (ROADMAP follow-up (d)): when XLA reports more
+    FLOPs than the analytic count, the device's *effective* efficiency on
+    this model is proportionally lower (eff < 1), and activation traffic is
+    rescaled by the measured bytes-to-analytic ratio. ``compiled_batch``
+    must name the artifact's batch size — the HLO totals cover the whole
+    batch while the profile models one sequence. Returns None — callers
+    fall back to the constant defaults — when no artifact is given or the
+    analysis is unavailable/degenerate."""
+    if compiled is None:
+        return None
+    try:
+        from repro.utils.hlo_analysis import cost_summary
+        cs = cost_summary(compiled)
+    except Exception:
+        return None
+    analytic_flops = sum(2.0 * cfg.block_active_params(i) * seq_len
+                         for i in range(cfg.num_layers))
+    analytic_bytes = sum(cfg.block_params(i) * 2.0 + cfg.d_model * seq_len * 2
+                         for i in range(cfg.num_layers))
+    batch = max(1, compiled_batch)
+    measured_flops = cs.get("flops", 0.0) / batch
+    measured_bytes = cs.get("bytes", 0.0) / batch
+    if measured_flops <= 0.0 or analytic_flops <= 0.0:
+        return None
+    # eff multiplies flops_per_s in the roofline, so extra measured work
+    # (beyond the embed/head share the block model ignores) lowers it
+    eff = min(1.0, max(0.05, analytic_flops / measured_flops))
+    act_scale = 1.0
+    if measured_bytes > 0.0 and analytic_bytes > 0.0:
+        act_scale = min(100.0, max(0.1, measured_bytes / analytic_bytes))
+    return eff, act_scale
+
+
 def profiles_from_arch(cfg, seq_len: int, similarities: Optional[Sequence[float]]
-                       = None, bytes_per_el: int = 1) -> List[LayerProfile]:
+                       = None, bytes_per_el: int = 1, *,
+                       calibrate_from_hlo: bool = False,
+                       compiled=None,
+                       compiled_batch: int = 1) -> List[LayerProfile]:
     """Per-block profiles for an assigned LM arch (decode-token costs).
 
     similarities: per-block representation similarity (from
     privacy.lm_similarity_profile); defaults to a geometric decay fit.
+    calibrate_from_hlo: with ``compiled`` (a compiled decode step, e.g. from
+    ``jax.jit(api.decode_fn).lower(...).compile()``), ``LayerProfile.eff``
+    and activation traffic come from the HLO cost analysis instead of
+    constants; silently falls back to the defaults when unavailable.
+    ``compiled_batch`` must name the artifact's batch size (batch-1
+    artifacts calibrate most faithfully — weight traffic amortizes over a
+    larger batch, which the per-sequence division can only approximate).
     """
+    eff, act_scale = 1.0, 1.0
+    if calibrate_from_hlo:
+        calib = hlo_calibration(cfg, seq_len, compiled,
+                                compiled_batch=compiled_batch)
+        if calib is not None:
+            eff, act_scale = calib
     out = []
     for i in range(cfg.num_layers):
         sim = (similarities[i] if similarities is not None
@@ -222,7 +302,7 @@ def profiles_from_arch(cfg, seq_len: int, similarities: Optional[Sequence[float]
             name=f"block{i}", flops=flops, out_bytes=out_bytes,
             similarity=float(sim),
             params_bytes=cfg.block_params(i) * 2.0,
-            act_bytes=out_bytes))
+            act_bytes=out_bytes * act_scale, eff=eff))
     return out
 
 

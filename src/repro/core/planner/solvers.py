@@ -36,7 +36,11 @@ from .profiling import CostTables, LayerProfile, ResourceGraph
 
 @dataclasses.dataclass
 class PlacementProblem:
-    """One solver invocation: workload, topology, objective."""
+    """One solver invocation: workload, topology, objective.
+
+    min_stages: require at least this many stages (serving: the pipelined
+    mesh has a fixed pod count, so the engine asks for a placement using
+    every pod even when a shorter placement would score better)."""
     profiles: Sequence[LayerProfile]
     graph: ResourceGraph
     n: int
@@ -45,6 +49,7 @@ class PlacementProblem:
     pipelined: bool = True
     input_similarity: float = 1.0
     tables: Optional[CostTables] = None
+    min_stages: Optional[int] = None
 
     def trusted(self) -> List[str]:
         t = self.graph.trusted()
@@ -127,6 +132,7 @@ class ExhaustiveSolver:
         best: Optional[Evaluation] = None
         best_key: Optional[float] = None
         n_feasible = 0
+        min_stages = problem.min_stages or 0
         for p in enumerate_placements(len(problem.profiles), problem.graph,
                                       problem.max_trusted):
             ev = evaluate(p, problem.profiles, problem.graph, problem.n,
@@ -134,7 +140,7 @@ class ExhaustiveSolver:
                           input_similarity=problem.input_similarity,
                           tables=tables)
             evals.append(ev)
-            if not ev.feasible:
+            if not ev.feasible or len(p.stages) < min_stages:
                 continue
             n_feasible += 1
             key = problem.objective(ev)
@@ -202,6 +208,8 @@ class _FrontierSolver:
         def optimistic(s: _State) -> float:
             return complete_key(s[0], s[1], s[2])
 
+        min_stages = problem.min_stages or 0
+
         def finalize(states: List[_State], r: int) -> None:
             """Close every state either at b == M or with an untrusted
             suffix over [b, M)."""
@@ -210,12 +218,16 @@ class _FrontierSolver:
             for ct, cb, open_t, bounds in states:
                 b = bounds[-1]
                 if b == M:
+                    if r < min_stages:
+                        continue        # too few stages; extensions may pass
                     n_candidates += 1
                     n_feasible += 1
                     key = complete_key(ct, cb, open_t)
                     if best_key is None or key < best_key:
                         best_key, best_bounds = key, (bounds, None)
                     continue
+                if r + 1 < min_stages:
+                    continue            # even with a suffix, too few stages
                 if tables.max_sim(b, M) >= delta:
                     n_pruned += len(untrusted)   # privacy-infeasible suffixes
                     continue
@@ -326,9 +338,11 @@ def solve(profiles: Sequence[LayerProfile], graph: ResourceGraph, *,
           n: int, delta: float, max_trusted: Optional[int] = None,
           pipelined: bool = True, input_similarity: float = 1.0,
           solver: Union[str, Solver, None] = None,
-          tables: Optional[CostTables] = None) -> SolveResult:
+          tables: Optional[CostTables] = None,
+          min_stages: Optional[int] = None) -> SolveResult:
     """Plan a placement. ``solver``: "exhaustive" (default; the oracle),
     "dp" (optimal, fast), "beam" (approximate, fastest), or a Solver."""
     problem = PlacementProblem(profiles, graph, n, delta, max_trusted,
-                               pipelined, input_similarity, tables)
+                               pipelined, input_similarity, tables,
+                               min_stages)
     return get_solver(solver).solve(problem)

@@ -15,8 +15,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from repro.core.cost_model import (DeviceProfile, LinkProfile, TPU_POD,
                                    TPU_POD_TRUSTED, DCN_LINK)
-from repro.core.planner import (CostTables, ExhaustiveSolver, ResourceGraph,
-                                SolveResult, get_solver,
+from repro.core.planner import (BoundedCache, CostTables, ExhaustiveSolver,
+                                ResourceGraph, SolveResult, get_solver,
                                 solve as planner_solve)
 
 
@@ -30,21 +30,46 @@ class TrustDomain:
     sealing_key: int = 0                # derived at attestation time
     healthy: bool = True
     last_heartbeat: float = 0.0
+    base_device: Optional[DeviceProfile] = None   # pre-derate profile
+
+    def __post_init__(self):
+        if self.base_device is None:
+            self.base_device = self.device
 
     def derive_key(self, session_nonce: bytes) -> int:
         h = hashlib.sha256(self.name.encode() + session_nonce).digest()
         self.sealing_key = int.from_bytes(h[:4], "little")
         return self.sealing_key
 
+    # -- telemetry-driven throughput derating ------------------------------
+    @property
+    def derate_factor(self) -> float:
+        """Cumulative derate applied so far (1.0 = at base profile)."""
+        return self.device.flops_per_s / self.base_device.flops_per_s
+
+    def derate(self, factor: float, floor: float = 0.05) -> float:
+        """Fold an observed slowdown into the profile, multiplicatively but
+        floored: repeated straggler observations converge to ``floor`` x the
+        base profile instead of compounding ``flops_per_s`` toward zero."""
+        f = max(floor, self.derate_factor * min(1.0, factor))
+        self.device = dataclasses.replace(
+            self.base_device, flops_per_s=self.base_device.flops_per_s * f,
+            mem_bw=self.base_device.mem_bw * f)
+        return f
+
+    def reset_derate(self) -> None:
+        self.device = self.base_device
+
 
 class ResourceManager:
     """Registry of trust domains (paper: 'Resource Manager' in Fig. 2)."""
 
-    def __init__(self):
+    def __init__(self, planner_cache_entries: int = 64):
         self._domains: Dict[str, TrustDomain] = {}
         self._links: Dict[Tuple[str, str], LinkProfile] = {}
-        # per-device cost tables survive domain failures (see CostTables)
-        self._planner_cache: dict = {}
+        # per-device cost tables survive domain failures (see CostTables);
+        # LRU-bounded because every derate keys a fresh table
+        self._planner_cache: BoundedCache = BoundedCache(planner_cache_entries)
         self._last_plan_args: Optional[dict] = None
         self.last_plan: Optional[SolveResult] = None
 
@@ -80,6 +105,12 @@ class ResourceManager:
     def healthy_domains(self) -> List[TrustDomain]:
         return [d for d in self._domains.values() if d.healthy]
 
+    def derate(self, name: str, factor: float, floor: float = 0.05) -> float:
+        """Telemetry hook: fold an observed slowdown of ``name`` into its
+        device profile (bounded — see TrustDomain.derate). Returns the new
+        cumulative derate factor."""
+        return self._domains[name].derate(factor, floor=floor)
+
     # -- solver view -------------------------------------------------------
     def resource_graph(self, default_link: LinkProfile = DCN_LINK
                        ) -> ResourceGraph:
@@ -91,7 +122,8 @@ class ResourceManager:
              solver: str = "dp", pipelined: bool = True,
              max_trusted: Optional[int] = None,
              input_similarity: float = 1.0,
-             default_link: LinkProfile = DCN_LINK) -> SolveResult:
+             default_link: LinkProfile = DCN_LINK,
+             min_stages: Optional[int] = None) -> SolveResult:
         """Solve placement over the currently healthy domains.
 
         Per-device cost tables are cached on the manager, so repeated plans
@@ -107,11 +139,13 @@ class ResourceManager:
                                 cache=self._planner_cache)
         res = planner_solve(profiles, graph, n=n, delta=delta, solver=sv,
                             pipelined=pipelined, max_trusted=max_trusted,
-                            input_similarity=input_similarity, tables=tables)
+                            input_similarity=input_similarity, tables=tables,
+                            min_stages=min_stages)
         self._last_plan_args = dict(
             profiles=profiles, n=n, delta=delta, solver=solver,
             pipelined=pipelined, max_trusted=max_trusted,
-            input_similarity=input_similarity, default_link=default_link)
+            input_similarity=input_similarity, default_link=default_link,
+            min_stages=min_stages)
         self.last_plan = res
         return res
 

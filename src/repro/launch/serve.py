@@ -1,115 +1,167 @@
-"""Serving launcher: Serdab pipelined decode across trust-domain pods.
+"""Serving launcher: continuous-batching Serdab engine over trust-domain pods.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \\
-      --mesh 2x2 --stages 2 --microbatches 4 --requests 3
+      --mesh 2x2 --stages 2 --microbatches 2 --slots 4 --requests 6
 
-Plans stage boundaries with the placement solver over the registered trust
-domains, prefills a batch of requests, then streams pipelined decode steps
-with sealed stage boundaries.
+Thin CLI over ``repro.serving.ServingEngine`` (DESIGN.md §Serving engine):
+plans stage boundaries over the registered trust domains, serves a synthetic
+stream of heterogeneous requests with continuous batching, and optionally
+injects a straggler stage (``--inject-straggler STAGE:FACTOR``) to
+demonstrate telemetry-driven live re-planning with stage-layout cache
+migration. ``--verify-swap`` runs the same request stream twice — with and
+without the injected straggler — and asserts the decoded token streams are
+identical across the live swap (requires ``--no-seal``: boundary sealing
+quantizes whichever activation crosses the cut, so moving the cut moves the
+quantization noise).
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced as reduce_cfg
-from repro.core.planner import profiles_from_arch
-from repro.core.privacy import LM_SIM_DELTA
-from repro.enclave.domain import two_enclave_manager
 from repro.launch.mesh import make_mesh
 from repro.models.api import build_model
-from repro.runtime.pipeline import PipelinedDecoder, pipeline_applicable
+from repro.serving import (EngineConfig, ServingEngine,
+                           pipelined_backend_available)
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--mesh", default="2x1", help="pod x data")
     ap.add_argument("--stages", type=int, default=2)
     ap.add_argument("--microbatches", type=int, default=2)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--requests", type=int, default=4, help="decode steps")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV-cache slots == decode batch")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=8,
+                    help="max synthetic prompt length (uniform 2..N)")
+    ap.add_argument("--max-new", type=int, default=8,
+                    help="tokens to generate per request")
+    ap.add_argument("--arrival-every", type=int, default=2,
+                    help="submit one request every K engine steps")
+    ap.add_argument("--max-seq", type=int, default=0,
+                    help="engine timeline horizon (0 = auto-size)")
     ap.add_argument("--no-seal", action="store_true")
     ap.add_argument("--solver", default="dp",
                     choices=["dp", "exhaustive", "beam"])
-    ap.add_argument("--even-stages", action="store_true",
-                    help="ignore planned boundaries; split blocks evenly")
-    args = ap.parse_args(argv)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "local", "pipelined"])
+    ap.add_argument("--telemetry-interval", type=int, default=4)
+    ap.add_argument("--inject-straggler", default=None, metavar="STAGE:FACTOR",
+                    help="multiply stage STAGE's measured time by FACTOR")
+    ap.add_argument("--verify-swap", action="store_true",
+                    help="run twice (with/without straggler) and assert "
+                         "identical token streams across the live swap")
+    ap.add_argument("--f32", action="store_true",
+                    help="run in float32 (used with --verify-swap)")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
 
+
+def _make_engine(api, params, mesh, args) -> ServingEngine:
+    max_seq = args.max_seq or (
+        args.prompt_len + args.requests * args.arrival_every
+        + args.max_new * args.requests // args.slots + args.max_new + 16)
+    ec = EngineConfig(
+        num_slots=args.slots, num_stages=args.stages,
+        num_microbatches=args.microbatches, max_seq=max_seq,
+        prompt_capacity=args.prompt_len,
+        seal_boundary=not args.no_seal, solver=args.solver,
+        telemetry_interval=args.telemetry_interval)
+    backend = None if args.backend == "auto" else args.backend
+    return ServingEngine(api, mesh=mesh, config=ec, params=params,
+                         backend=backend)
+
+
+def _serve_stream(eng: ServingEngine, args, cfg):
+    """Submit a deterministic synthetic arrival stream and drain it."""
+    rng = np.random.RandomState(args.seed)
+    prompts = [rng.randint(0, cfg.vocab_size,
+                           size=int(rng.randint(2, args.prompt_len + 1))
+                           ).tolist()
+               for _ in range(args.requests)]
+    reqs = []
+    k = 0
+    while k < len(prompts) or eng.scheduler.has_work():
+        if k < len(prompts) and eng.steps % args.arrival_every == 0:
+            reqs.append(eng.submit(prompts[k], args.max_new))
+            k += 1
+        moved = eng.step()
+        if k < len(prompts) and not moved and not eng.scheduler.has_work():
+            # idle tick with arrivals pending: admit next immediately
+            reqs.append(eng.submit(prompts[k], args.max_new))
+            k += 1
+    return reqs
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
-    max_seq = args.prompt_len + args.requests + 1
+    if args.f32:
+        import repro.models.layers as L
+        L.DEFAULT_DTYPE = jnp.float32
 
-    # --- Serdab plan over the trust domains -----------------------------
-    rm = two_enclave_manager()
-    profiles = profiles_from_arch(cfg, seq_len=1)
-    res = rm.plan(profiles, n=10_000, delta=LM_SIM_DELTA, solver=args.solver)
-    best = res.best
-    print("placement:", best.placement.describe(),
-          f"(bottleneck {best.bottleneck * 1e6:.1f} us/frame, "
-          f"{res.solver}: {res.n_feasible} feasible / {res.n_pruned} pruned "
-          f"in {res.wall_time_s * 1e3:.1f} ms)")
-    stage_blocks = None
-    planned = best.placement.stage_sizes()
-    if not args.even_stages and len(planned) == args.stages:
-        stage_blocks = planned
-        print("stage boundaries from plan:", "/".join(map(str, planned)))
-    elif not args.even_stages:
-        print(f"plan wants {len(planned)} stages but --stages={args.stages}; "
-              f"falling back to even split")
+    mesh = None
+    if args.backend != "local" and pipelined_backend_available():
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh(dims, ("pod", "data")[:len(dims)])
 
-    dims = tuple(int(x) for x in args.mesh.split("x"))
-    mesh = make_mesh(dims, ("pod", "data")[:len(dims)])
-    api = build_model(cfg, max_seq=max_seq)
-    assert pipeline_applicable(api), f"{cfg.name}: pipelined serve unsupported"
-
+    api = build_model(cfg, max_seq=args.max_seq or 512)
     params = api.init(jax.random.PRNGKey(0))
-    key = jnp.uint32(0xC0FFEE)
+    if args.f32:
+        params = jax.tree.map(
+            lambda x: x.astype(jnp.float32)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
 
-    with jax.set_mesh(mesh):
-        prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                     (args.batch, args.prompt_len), 0,
-                                     cfg.vocab_size, jnp.int32)
-        logits, cache = jax.jit(api.prefill_fn)(params, {"tokens": prompts})
-        # widen cache to max_seq
-        seg = api.model.segments[0].name
-        pad = max_seq - args.prompt_len
-        cache[seg] = jax.tree.map(
-            lambda a: jnp.pad(a, [(0, 0)] * 3 + [(0, pad)] + [(0, 0)])
-            if a.ndim == 5 else a, cache[seg])
+    inject = None
+    if args.inject_straggler:
+        s, f = args.inject_straggler.split(":")
+        inject = (int(s), float(f))
 
-        dec = PipelinedDecoder(api, mesh, num_stages=args.stages,
-                               num_microbatches=args.microbatches,
-                               seal_boundary=not args.no_seal,
-                               stage_blocks=stage_blocks)
-        # stage params AND cache once outside the decode loop (uneven
-        # staging is a gather; the cache would round-trip twice per token)
-        staged_params = dec.stage_params(params)
-        staged_cache = dec.stage_cache(cache)
-        step = jax.jit(dec.build(prestaged_params=True,
-                                 prestaged_cache=True))
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        generated = [tok]
-        t0 = time.time()
-        for i in range(args.requests):
-            logits, staged_cache = step(staged_params, staged_cache,
-                                        {"tokens": tok}, key + i)
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            generated.append(tok)
-        jax.block_until_ready(tok)
-        dt = time.time() - t0
-    out = np.concatenate([np.asarray(t) for t in generated], axis=1)
-    print(f"decoded {args.requests} steps x batch {args.batch} "
-          f"in {dt:.2f}s ({args.requests * args.batch / dt:.1f} tok/s)")
-    print("sample tokens:", out[0].tolist())
-    return out
+    def one_run(with_inject: bool):
+        eng = _make_engine(api, params, mesh, args)
+        if with_inject and inject:
+            eng.telemetry.inject(*inject)
+        print(f"backend={eng.backend_kind} stage_blocks={eng.stage_blocks} "
+              f"placement={eng.replanner.current.placement.describe()}")
+        reqs = _serve_stream(eng, args, cfg)
+        for e in eng.events:
+            if e.kind in ("replan", "swap", "swap_skipped"):
+                print(f"  step {e.step}: {e.kind} {e.detail}")
+        st = eng.stats()
+        print(f"served {st['completed']} requests, {st['tokens_out']} tokens "
+              f"in {st['decode_wall_s']:.2f}s decode "
+              f"({st['tok_per_s']:.1f} tok/s), replans={st['replans']} "
+              f"swaps={st['swaps']} final_blocks={st['stage_blocks']}")
+        return eng, reqs
+
+    eng, reqs = one_run(with_inject=True)
+    if reqs:
+        print("sample tokens:", reqs[0].generated)
+
+    if args.verify_swap:
+        assert args.no_seal, "--verify-swap needs --no-seal (see docstring)"
+        assert inject, "--verify-swap needs --inject-straggler"
+        eng2, reqs2 = one_run(with_inject=False)
+        assert eng.swaps >= 1, \
+            f"straggler injection produced no live swap (events: " \
+            f"{[e.kind for e in eng.events]})"
+        for a, b in zip(reqs, reqs2):
+            assert a.generated == b.generated, \
+                f"req {a.rid} diverged across live swap:\n  {a.generated}\n" \
+                f"  {b.generated}"
+        print(f"SWAP-EXACT OK: {len(reqs)} token streams identical across "
+              f"live re-plan ({eng.stats()['stage_blocks']} vs "
+              f"{eng2.stats()['stage_blocks']})")
+    return eng.stats()
 
 
 if __name__ == "__main__":

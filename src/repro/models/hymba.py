@@ -147,7 +147,7 @@ def hymba_block_specs(cfg: ArchConfig) -> Dict[str, Any]:
 
 
 def hymba_block_apply(cfg: ArchConfig, p, x, positions, *, mode, cache,
-                      cache_len, pos3=None):
+                      cache_len, pos3=None, start=None):
     h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
     window = cfg.sliding_window
 
@@ -166,7 +166,8 @@ def hymba_block_apply(cfg: ArchConfig, p, x, positions, *, mode, cache,
             k_cache, k.transpose(0, 2, 1, 3), slot, axis=2)
         v_cache = jax.lax.dynamic_update_slice_in_dim(
             v_cache, v.transpose(0, 2, 1, 3), slot, axis=2)
-        ctx = L.decode_attention(q, k_cache, v_cache, cache_len + 1, rolling=True)
+        ctx = L.decode_attention(q, k_cache, v_cache, cache_len + 1,
+                                 rolling=True, start=start)
         new_kv = (k_cache, v_cache)
     else:
         ctx = L.chunked_attention(q, k, v, causal=True, window=window)
@@ -213,9 +214,9 @@ def build_hymba(cfg: ArchConfig, remat: bool = True) -> StackedLM:
     def specs():
         return hymba_block_specs(cfg)
 
-    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3):
+    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3, start=None):
         return hymba_block_apply(cfg, p, x, positions, mode=mode, cache=cache,
-                                 cache_len=cache_len, pos3=pos3)
+                                 cache_len=cache_len, pos3=pos3, start=start)
 
     def cache_fn(batch, max_seq):
         return hymba_cache_spec(cfg, batch, max_seq)

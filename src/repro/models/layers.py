@@ -213,13 +213,18 @@ def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
     return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
 
 
-def decode_attention(q, k_cache, v_cache, cache_len, *, rolling: bool = False):
+def decode_attention(q, k_cache, v_cache, cache_len, *, rolling: bool = False,
+                     start=None):
     """Single-token attention against a (possibly seq-sharded) KV cache.
 
     q: [B, 1, H, D]; caches: [B, KVH, S, D] (head-major layout so the rules
     engine shards heads over ``model`` when divisible, else sequence).
     cache_len: int32 scalar — number of valid entries. With ``rolling=True``
     (sliding-window buffers) every slot < min(cache_len, S) is valid.
+    start: optional per-batch [B] (or [1]) int32 — the first valid absolute
+    position per batch row. Used by the serving engine's continuous batching:
+    requests share one position timeline, so a slot admitted late masks out
+    whatever its cache holds before its own prompt.
     """
     B, _, H, D = q.shape
     KVH, S = k_cache.shape[1], k_cache.shape[2]
@@ -231,7 +236,16 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, rolling: bool = False):
     pos = jnp.arange(S)
     limit = jnp.minimum(cache_len, S) if rolling else cache_len
     valid = pos < limit
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    if start is not None:
+        if rolling:
+            # slot p last written at absolute position n-1 - ((n-1-p) mod S)
+            abs_pos = cache_len - 1 - ((cache_len - 1 - pos) % S)
+        else:
+            abs_pos = pos
+        valid = valid[None, :] & (abs_pos >= jnp.reshape(start, (-1, 1)))
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    else:
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bgrs,bgsd->bgrd", p, v_cache.astype(jnp.float32),
                      preferred_element_type=jnp.float32)

@@ -124,14 +124,14 @@ def moe_block_specs(cfg: ArchConfig) -> Dict[str, Any]:
 
 
 def moe_block_apply(cfg: ArchConfig, p, x, positions, *, mode, cache,
-                    cache_len, pos3=None, cache_quant=False):
+                    cache_len, pos3=None, cache_quant=False, start=None):
     def mlp_fn(pp, h):
         out, _aux = moe_mlp_apply(cfg, pp["moe"], h)
         return out
 
     return dense_block_apply(cfg, p, x, positions, mode=mode, cache=cache,
                              cache_len=cache_len, pos3=pos3, mlp_fn=mlp_fn,
-                             cache_quant=cache_quant)
+                             cache_quant=cache_quant, start=start)
 
 
 def build_moe(cfg: ArchConfig, remat: bool = True,
@@ -146,10 +146,12 @@ def build_moe(cfg: ArchConfig, remat: bool = True,
         def stem_specs():
             return dense_block_specs(cfg, d_ff=cfg.dense_stem_d_ff or cfg.d_ff)
 
-        def stem_apply(p, x, positions, *, mode, cache, cache_len, pos3):
+        def stem_apply(p, x, positions, *, mode, cache, cache_len, pos3,
+                       start=None):
             return dense_block_apply(cfg, p, x, positions, mode=mode,
                                      cache=cache, cache_len=cache_len,
-                                     pos3=pos3, cache_quant=cache_quant)
+                                     pos3=pos3, cache_quant=cache_quant,
+                                     start=start)
 
         segments.append(Segment("stem", cfg.first_k_dense, stem_specs,
                                 stem_apply, cache_fn))
@@ -157,10 +159,10 @@ def build_moe(cfg: ArchConfig, remat: bool = True,
     def specs():
         return moe_block_specs(cfg)
 
-    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3):
+    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3, start=None):
         return moe_block_apply(cfg, p, x, positions, mode=mode, cache=cache,
                                cache_len=cache_len, pos3=pos3,
-                               cache_quant=cache_quant)
+                               cache_quant=cache_quant, start=start)
 
     segments.append(Segment("blocks", cfg.num_layers - cfg.first_k_dense,
                             specs, apply_fn, cache_fn))

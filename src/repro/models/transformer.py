@@ -58,7 +58,7 @@ def dequantize_kv(t, scale, dtype=jnp.float32):
 def dense_block_apply(cfg: ArchConfig, p, x, positions, *, mode: str,
                       cache=None, cache_len=None, pos3=None,
                       mlp_fn: Optional[Callable] = None,
-                      cache_quant: bool = False):
+                      cache_quant: bool = False, start=None):
     """One pre-norm transformer block.
 
     mode: "train" | "prefill" (returns new kv to cache) | "decode".
@@ -84,7 +84,7 @@ def dense_block_apply(cfg: ArchConfig, p, x, positions, *, mode: str,
                 v_q, quantize_kv(v.transpose(0, 2, 1, 3), sV), slot, axis=2)
             ctx = L.decode_attention(q, dequantize_kv(k_q, sK),
                                      dequantize_kv(v_q, sV), cache_len + 1,
-                                     rolling=bool(window))
+                                     rolling=bool(window), start=start)
             new_kv = (k_q, v_q, k_s, v_s)
         else:
             k_cache, v_cache = cache
@@ -95,7 +95,7 @@ def dense_block_apply(cfg: ArchConfig, p, x, positions, *, mode: str,
             v_cache = jax.lax.dynamic_update_slice_in_dim(
                 v_cache, v.transpose(0, 2, 1, 3), slot, axis=2)
             ctx = L.decode_attention(q, k_cache, v_cache, cache_len + 1,
-                                     rolling=bool(window))
+                                     rolling=bool(window), start=start)
             new_kv = (k_cache, v_cache)
     else:
         ctx = L.chunked_attention(q, k, v, causal=True, window=window)
@@ -155,7 +155,8 @@ class Segment:
     name: str
     n: int
     specs_fn: Callable[[], Dict[str, Any]]
-    # (p, x, positions, *, mode, cache, cache_len, pos3) -> (x, new_cache)
+    # (p, x, positions, *, mode, cache, cache_len, pos3, start=None)
+    #   -> (x, new_cache)
     apply_fn: Callable
     # (batch, max_seq) -> (per-layer cache specs, per-layer cache axes)
     cache_spec_fn: Optional[Callable] = None
@@ -200,10 +201,13 @@ class StackedLM:
 
     # -- body -------------------------------------------------------------
     def run_segments(self, params, x, positions, *, mode: str,
-                     caches=None, cache_len=None, pos3=None):
+                     caches=None, cache_len=None, pos3=None, start=None):
         """Scan x through every segment. caches: {seg_name: pytree} or None.
         Returns (x, new_caches)."""
         new_caches = {}
+        # start=None keeps the exact legacy trace; per-slot starts are only
+        # threaded when the serving engine asks for them
+        kw = {} if start is None else {"start": start}
         for seg in self.segments:
             seg_params = params[seg.name]
             seg_cache = None if caches is None else caches.get(seg.name)
@@ -213,7 +217,7 @@ class StackedLM:
                 blk_params, blk_cache = xs
                 out, new_kv = _apply(blk_params, xx, positions, mode=mode,
                                      cache=blk_cache, cache_len=cache_len,
-                                     pos3=pos3)
+                                     pos3=pos3, **kw)
                 return out, new_kv
 
             step_fn = step
@@ -279,19 +283,22 @@ class StackedLM:
     def decode_fn(self, params, cache, batch):
         tokens = batch["tokens"]                      # [B, 1]
         cache_len = cache["len"]
+        start = cache.get("start")    # optional per-slot first valid position
         positions = jnp.full((1, 1), cache_len, jnp.int32)
         x = self.embed(params, tokens)
         pos3 = batch.get("pos3")
-        body = {k: v for k, v in cache.items() if k != "len"}
+        body = {k: v for k, v in cache.items() if k not in ("len", "start")}
         x, new_caches = self.run_segments(params, x, positions, mode="decode",
                                           caches=body, cache_len=cache_len,
-                                          pos3=pos3)
+                                          pos3=pos3, start=start)
         x = L.rmsnorm(x, params["ln_f"], self.cfg.norm_eps)
         logits = jnp.einsum("bd,dv->bv", x[:, -1], self.head_weights(params),
                             preferred_element_type=jnp.float32)
         logits = constrain(logits, ("act_batch", "act_vocab"))
         new_caches = self._constrain_caches(new_caches)
         new_caches["len"] = cache_len + 1
+        if start is not None:
+            new_caches["start"] = start
         return logits, new_caches
 
     # -- caches -----------------------------------------------------------
@@ -345,10 +352,10 @@ def build_dense(cfg: ArchConfig, remat: bool = True,
     def specs():
         return dense_block_specs(cfg)
 
-    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3):
+    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3, start=None):
         return dense_block_apply(cfg, p, x, positions, mode=mode, cache=cache,
                                  cache_len=cache_len, pos3=pos3,
-                                 cache_quant=cache_quant)
+                                 cache_quant=cache_quant, start=start)
 
     def cache_fn(batch, max_seq):
         return default_kv_cache_spec(cfg, batch, max_seq, quant=cache_quant)
@@ -383,10 +390,10 @@ def build_vlm(cfg: ArchConfig, remat: bool = True,
     def specs():
         return dense_block_specs(cfg)
 
-    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3):
+    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3, start=None):
         return dense_block_apply(cfg, p, x, positions, mode=mode, cache=cache,
                                  cache_len=cache_len, pos3=pos3,
-                                 cache_quant=cache_quant)
+                                 cache_quant=cache_quant, start=start)
 
     def cache_fn(batch, max_seq):
         return default_kv_cache_spec(cfg, batch, max_seq, quant=cache_quant)

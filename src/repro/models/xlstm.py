@@ -206,7 +206,10 @@ def pair_specs(cfg: ArchConfig) -> Dict[str, Any]:
 
 
 def pair_apply(cfg: ArchConfig, p, x, positions, *, mode, cache, cache_len,
-               pos3=None):
+               pos3=None, start=None):
+    # start is accepted for API parity; recurrent state carries no absolute
+    # positions, so a late-admitted serving slot needs no masking here
+    del start
     s_state = m_state = None
     if cache is not None:
         s_state, m_state = cache
@@ -242,9 +245,9 @@ def build_xlstm(cfg: ArchConfig, remat: bool = True,
     def specs():
         return pair_specs(cfg)
 
-    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3):
+    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3, start=None):
         return pair_apply(cfg, p, x, positions, mode=mode, cache=cache,
-                          cache_len=cache_len, pos3=pos3)
+                          cache_len=cache_len, pos3=pos3, start=start)
 
     def cache_fn(batch, max_seq):
         return pair_cache_spec(cfg, batch, max_seq, state_dtype=state_dtype)

@@ -12,10 +12,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import List, Mapping, Optional, Sequence, Tuple, Union
 
-from repro.core.planner import Evaluation, LayerProfile, SolveResult
+from repro.core.planner import (Evaluation, InfeasibleError, LayerProfile,
+                                SolveResult)
 from repro.enclave.domain import ResourceManager
+
+StageKey = Union[int, Tuple[str, int], str]
 
 
 @dataclasses.dataclass
@@ -44,46 +47,69 @@ class OnlineReplanner:
     n: int
     delta: float
     deviation_threshold: float = 1.5
+    derate_floor: float = 0.05          # cumulative derate never drops below
     solver: str = "dp"
+    min_stages: Optional[int] = None    # serving: use every pipeline pod
     current: Optional[Evaluation] = None
     last_result: Optional[SolveResult] = None
     replans: int = 0
 
     def plan(self) -> Evaluation:
         res = self.rm.plan(self.profiles, n=self.n, delta=self.delta,
-                           solver=self.solver)
+                           solver=self.solver, min_stages=self.min_stages)
         self.last_result = res
         self.current = res.best
         return res.best
 
-    def observe(self, stage_times: Dict[str, float]) -> Optional[Evaluation]:
-        """stage_times: measured per-device stage time. Re-plans when any
-        device is deviation_threshold x slower than the plan predicted, or
-        when the plan references a dead domain."""
+    def _resolve(self, key: StageKey, predicted) -> Optional[Tuple[str, int]]:
+        """Normalize an observation key to (device, stage_idx). A bare device
+        name (legacy callers) matches that device's slowest predicted stage —
+        NOT silently the last one, which dropped observations when a device
+        hosted several stages."""
+        stages = self.current.placement.stages
+        if isinstance(key, tuple):
+            return key if key in predicted else None
+        if isinstance(key, int):
+            return (stages[key].device, key) if 0 <= key < len(stages) else None
+        mine = [k for k in predicted if k[0] == key]
+        return max(mine, key=lambda k: predicted[k]) if mine else None
+
+    def observe(self, stage_times: Mapping[StageKey, float]
+                ) -> Optional[Evaluation]:
+        """stage_times: measured per-stage wall time, keyed by stage index,
+        ``(device, stage_idx)``, or device name (legacy). Re-plans when any
+        stage runs deviation_threshold x slower than the plan predicted, or
+        when the plan references a dead domain. Deviations derate the hosting
+        device's profile through ``ResourceManager.derate`` — cumulative and
+        floored, so repeated misses cannot drive ``flops_per_s`` to zero."""
         if self.current is None:
             return self.plan()
-        predicted = {s.device: t for s, t in
-                     zip(self.current.placement.stages, self.current.stage_times)}
+        stages = self.current.placement.stages
+        predicted = {(s.device, i): t for i, (s, t) in
+                     enumerate(zip(stages, self.current.stage_times))}
         healthy = {d.name for d in self.rm.healthy_domains()}
-        dead = [s.device for s in self.current.placement.stages
-                if s.device not in healthy]
+        dead = [s.device for s in stages if s.device not in healthy]
         needs_replan = bool(dead)
-        for dev, obs in stage_times.items():
-            pred = predicted.get(dev)
+        for key, obs in stage_times.items():
+            k = self._resolve(key, predicted)
+            pred = predicted.get(k) if k is not None else None
             if pred and obs > self.deviation_threshold * pred:
-                # fold the observation into the device profile (derate it)
-                d = self.rm.get(dev)
-                derate = pred / obs
-                d.device = dataclasses.replace(
-                    d.device, flops_per_s=d.device.flops_per_s * derate,
-                    mem_bw=d.device.mem_bw * derate)
+                self.rm.derate(k[0], pred / obs, floor=self.derate_floor)
                 needs_replan = True
         if needs_replan:
             self.replans += 1
             if dead:
-                res = self.rm.replan_on_failure(
-                    dead, profiles=self.profiles, n=self.n, delta=self.delta,
-                    solver=self.solver)
+                try:
+                    res = self.rm.replan_on_failure(
+                        dead, profiles=self.profiles, n=self.n,
+                        delta=self.delta, solver=self.solver)
+                except InfeasibleError:
+                    if self.min_stages is None:
+                        raise
+                    # not enough survivors for the stage floor: best effort
+                    res = self.rm.replan_on_failure(
+                        dead, profiles=self.profiles, n=self.n,
+                        delta=self.delta, solver=self.solver, min_stages=None)
                 self.last_result = res
                 self.current = res.best
                 return res.best

@@ -136,6 +136,24 @@ class PipelinedDecoder:
                     x.reshape((S * bps,) + x.shape[2:]), idx, axis=0), staged)
         return {self.seg.name: body, "len": new_len}
 
+    def restage_cache(self, staged_cache, new_dec: "PipelinedDecoder"):
+        """Migrate a prestaged cache from this decoder's stage layout to
+        ``new_dec``'s (a live re-plan swap). Equivalent to unstage followed by
+        ``new_dec.stage_cache`` but composes the scatter and gather into a
+        single ``jnp.take`` per leaf, so in-flight KV state moves to the new
+        boundaries without a host round-trip. Accepts the prestaged tuple
+        ``(staged, len)`` or ``(staged, len, start)`` and returns the same
+        arity."""
+        assert new_dec.seg.n == self.seg.n, (new_dec.seg.n, self.seg.n)
+        body, *rest = staged_cache
+        S2, bps2 = new_dec.num_stages, new_dec.bps
+        idx = jnp.asarray(self._scatter_idx[new_dec._gather_idx])
+        new_body = jax.tree.map(
+            lambda x: jnp.take(
+                x.reshape((self.num_stages * self.bps,) + x.shape[2:]),
+                idx, axis=0).reshape((S2, bps2) + x.shape[2:]), body)
+        return (new_body, *rest)
+
     # -- specs ---------------------------------------------------------------
     def _param_specs_tree(self, staged):
         def spec(path_has_stage, x):
@@ -145,9 +163,51 @@ class PipelinedDecoder:
         return {k: jax.tree.map(functools.partial(spec, k == self.seg.name), v)
                 for k, v in staged.items()}
 
+    # -- one stage's block scan (shared by the tick loop and the telemetry
+    # -- stage probe) --------------------------------------------------------
+    def _stage_run(self, blk_params, blk_cache, blk_mask, x, cache_len,
+                   start=None):
+        cfg, seg = self.api.cfg, self.seg
+        positions = jnp.full((1, 1), cache_len, jnp.int32)
+        pos3 = None
+        if cfg.pos_type == "mrope":
+            pos3 = jnp.full((x.shape[0], 1, 3), cache_len, jnp.int32)
+        kw = {} if start is None else {"start": start}
+
+        def step(carry, xs):
+            p, c, m = xs
+            out, new_c = seg.apply_fn(p, carry, positions, mode="decode",
+                                      cache=c, cache_len=cache_len,
+                                      pos3=pos3, **kw)
+            # padded slots (uneven stages) pass the carry through and
+            # leave their (replicated) cache untouched
+            out = jnp.where(m, out, carry)
+            new_c = jax.tree.map(lambda a, b: jnp.where(m, a, b),
+                                 new_c, c)
+            return out, new_c
+
+        return jax.lax.scan(step, x, (blk_params, blk_cache, blk_mask))
+
+    def build_stage_probe(self):
+        """A jit-able single-stage runner for per-stage wall-time telemetry:
+        ``probe(blk_params, blk_cache, blk_mask, x, cache_len)`` executes one
+        stage's block scan exactly as a pipeline tick would (minus seal /
+        ppermute) so the host can time each stage independently. The caller
+        slices stage s out of the prestaged trees (``tree[s]``) and times
+        ``jax.block_until_ready(probe(...))``."""
+        def probe(blk_params, blk_cache, blk_mask, x, cache_len):
+            h, _ = self._stage_run(blk_params, blk_cache, blk_mask, x,
+                                   cache_len)
+            return h
+        return jax.jit(probe)
+
     # -- the step -------------------------------------------------------------
     def build(self, prestaged_params: bool = False,
-              prestaged_cache: bool = False):
+              prestaged_cache: bool = False, per_slot_start: bool = False):
+        """per_slot_start: the cache argument becomes a 3-tuple
+        ``(staged, cache_len, start)`` with ``start`` a per-slot [B] int32 of
+        first-valid absolute positions (continuous-batching mask); implies
+        ``prestaged_cache``."""
         api, seg, S = self.api, self.seg, self.num_stages
         nm, bps = self.num_microbatches, self.bps
         cfg = api.cfg
@@ -155,32 +215,17 @@ class PipelinedDecoder:
         mesh = self.mesh
         seal_on = self.seal_boundary
         use_kernel = self.use_kernel
+        if per_slot_start:
+            assert prestaged_cache, "per_slot_start implies prestaged_cache"
+        stage_run = self._stage_run
 
-        def stage_run(blk_params, blk_cache, blk_mask, x, cache_len):
-            positions = jnp.full((1, 1), cache_len, jnp.int32)
-            pos3 = None
-            if cfg.pos_type == "mrope":
-                pos3 = jnp.full((x.shape[0], 1, 3), cache_len, jnp.int32)
-
-            def step(carry, xs):
-                p, c, m = xs
-                out, new_c = seg.apply_fn(p, carry, positions, mode="decode",
-                                          cache=c, cache_len=cache_len,
-                                          pos3=pos3)
-                # padded slots (uneven stages) pass the carry through and
-                # leave their (replicated) cache untouched
-                out = jnp.where(m, out, carry)
-                new_c = jax.tree.map(lambda a, b: jnp.where(m, a, b),
-                                     new_c, c)
-                return out, new_c
-
-            return jax.lax.scan(step, x, (blk_params, blk_cache, blk_mask))
-
-        def pipeline_body(params, staged_cache, stage_mask, tokens, cache_len,
-                          key):
+        def pipeline_body(params, staged_cache, stage_mask, tokens, starts,
+                          cache_len, key):
             """Runs manual over pod. tokens: [nm, B_mb, 1] (replicated over
             pod); staged leaves [1, bps, B, ...] (pod-sharded stage dim);
-            stage_mask [1, bps] marks real (non-padding) block slots."""
+            stage_mask [1, bps] marks real (non-padding) block slots;
+            starts: [nm, B_mb] per-slot first valid positions (replicated,
+            ignored unless per_slot_start)."""
             s_idx = jax.lax.axis_index("pod")
             my_params = jax.tree.map(lambda x: x[0], params[seg.name])
             my_cache = jax.tree.map(lambda x: x[0], staged_cache)
@@ -232,8 +277,12 @@ class PipelinedDecoder:
 
                 # my stage's cache slice for this microbatch
                 cache_sl = _batch_slice(cache_st, m_idx * B_mb, B_mb)
+                st = None
+                if per_slot_start:
+                    st = jax.lax.dynamic_index_in_dim(starts, m_idx, 0,
+                                                      keepdims=False)
                 h, new_sl = stage_run(my_params, cache_sl, my_mask, x_in,
-                                      cache_len)
+                                      cache_len, start=st)
                 # only commit the slice when this tick is valid for me
                 new_sl = jax.tree.map(
                     lambda new, old: jnp.where(valid, new, old), new_sl, cache_sl)
@@ -275,10 +324,16 @@ class PipelinedDecoder:
             # re-gather per token — the cache round-trips twice otherwise
             staged_params = params if prestaged_params \
                 else self.stage_params(params)
-            if prestaged_cache:
-                staged_cache, cache_len = cache
+            start_vec = None
+            if per_slot_start:
+                staged_cache, cache_len, start_vec = cache
+                starts = start_vec.reshape(nm, B_mb)
             else:
-                staged_cache, cache_len = self.stage_cache(cache)
+                if prestaged_cache:
+                    staged_cache, cache_len = cache
+                else:
+                    staged_cache, cache_len = self.stage_cache(cache)
+                starts = jnp.zeros((nm, B_mb), jnp.int32)   # unused
             stage_mask = jnp.asarray(self._mask)
 
             param_specs = self._param_specs_tree(staged_params)
@@ -290,14 +345,16 @@ class PipelinedDecoder:
                 outputs, new_cache = jax.shard_map(
                     body, mesh=mesh,
                     in_specs=(param_specs, cache_specs, P("pod", None),
-                              P(), P(), P()),
+                              P(), P(), P(), P()),
                     out_specs=(P("pod"), cache_specs),
                     axis_names={"pod"}, check_vma=False,
                 )(staged_params, staged_cache, stage_mask, tok_stream,
-                  cache_len, key)
+                  starts, cache_len, key)
             # stages stack outputs along dim 0; the last nm rows are real
             logits = outputs[-nm:].reshape(B, -1)
-            if prestaged_cache:
+            if per_slot_start:
+                cache_out = (new_cache, cache_len + 1, start_vec)
+            elif prestaged_cache:
                 cache_out = (new_cache, cache_len + 1)
             else:
                 cache_out = self.unstage_cache(new_cache, cache_len + 1)

@@ -1,0 +1,24 @@
+"""Serving engine subsystem (DESIGN.md §Serving engine).
+
+Three decoupled layers over the planner/pipeline/ft stack:
+
+1. **scheduler** — continuous-batching slot scheduler (FIFO admission,
+   per-request EOS/length completion, immediate slot recycling);
+2. **telemetry** — per-stage wall-time probes folded into
+   ``OnlineReplanner.observe()`` with scale normalization and straggler
+   injection, plus ResourceManager heartbeats;
+3. **engine** — ``ServingEngine``: shared-position-timeline decode over
+   pluggable backends (shard_map pipelined / local single-process) with
+   live stage-boundary swaps that migrate the KV cache in place.
+"""
+from .engine import (EngineConfig, EngineEvent, LocalDecodeBackend,
+                     PipelinedDecodeBackend, ServingEngine,
+                     pipelined_backend_available)
+from .scheduler import Request, SlotScheduler
+from .telemetry import StageTelemetry
+
+__all__ = [
+    "EngineConfig", "EngineEvent", "LocalDecodeBackend",
+    "PipelinedDecodeBackend", "Request", "ServingEngine", "SlotScheduler",
+    "StageTelemetry", "pipelined_backend_available",
+]

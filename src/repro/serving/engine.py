@@ -1,0 +1,439 @@
+"""Serving layer 3 — the continuous-batching engine with live re-planning.
+
+``ServingEngine`` turns the one-shot batch-decode demo into a long-lived
+request server (the paper's Fig. 2 loop as a service):
+
+* **slots on a shared position timeline** — the decoder advances one global
+  cache position per step for all ``num_slots`` KV slots. A request admitted
+  at position ``t`` has its prompt prefilled so it *ends* at ``t`` (positions
+  ``[t - P, t)``) and carries a per-slot ``start`` mask that hides whatever
+  the recycled slot held before. RoPE attention depends only on relative
+  positions, and SSM state is position-free, so a request's token stream is
+  independent of when it was admitted or what shared the batch — verified to
+  the decoded-token level in tests/test_serving.py.
+* **pluggable decode backends** — ``PipelinedDecodeBackend`` runs the
+  shard_map pipelined decoder over the ``pod`` axis (stage boundaries from
+  the placement solver, sealed boundaries); ``LocalDecodeBackend`` is the
+  single-process fallback (plain jitted ``decode_fn``) used on hosts whose
+  jax lacks ``shard_map``/``set_mesh`` and for ``num_stages == 1``.
+* **telemetry → live re-plan swap** — every ``telemetry.interval`` steps the
+  engine probes per-stage wall time, feeds ``OnlineReplanner.observe()``,
+  and on a re-plan builds a decoder for the new boundaries and migrates the
+  staged KV cache in place via ``PipelinedDecoder.restage_cache`` — decode
+  continues bit-exactly across the swap (same per-block math, only the
+  stage→device assignment moves).
+
+The shared timeline bounds an engine's lifetime at ``max_seq`` positions —
+the honest cost of keeping per-slot state in one dense cache (a paged
+per-slot cache is the production follow-up, see DESIGN.md §Serving).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.planner import (Evaluation, InfeasibleError,
+                                profiles_from_arch)
+from repro.core.privacy import LM_SIM_DELTA
+from repro.enclave.domain import ResourceManager, two_enclave_manager
+from repro.runtime.ft import HeartbeatMonitor, OnlineReplanner
+from repro.runtime.pipeline import PipelinedDecoder, pipeline_applicable
+from repro.serving.scheduler import Request, SlotScheduler
+from repro.serving.telemetry import StageTelemetry
+
+
+def pipelined_backend_available() -> bool:
+    """The shard_map pipelined decoder needs jax >= 0.6 APIs."""
+    return hasattr(jax, "shard_map") and hasattr(jax, "set_mesh")
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    num_slots: int = 4                  # decode batch == KV slots
+    num_stages: int = 2
+    num_microbatches: int = 2
+    max_seq: int = 256                  # shared-timeline horizon
+    prompt_capacity: int = 32           # max admissible prompt length
+    seal_boundary: bool = True
+    use_kernel: bool = False
+    solver: str = "dp"
+    plan_n: int = 10_000
+    delta: float = LM_SIM_DELTA
+    telemetry_interval: int = 8
+    deviation_threshold: float = 1.5
+    heartbeat_timeout_s: float = 10.0
+    allow_swap: bool = True
+
+
+# ---------------------------------------------------------------------------
+# Decode backends
+# ---------------------------------------------------------------------------
+class LocalDecodeBackend:
+    """Single-process backend: jitted ``decode_fn`` over one dense cache.
+
+    Stage boundaries are tracked as metadata (the planner/telemetry loop
+    still runs) but computation is not staged, so ``swap`` moves no state —
+    it reports ``migrated=False`` and the engine records the event."""
+
+    migrates_cache = False
+
+    def __init__(self, api, params, cfg: EngineConfig,
+                 stage_blocks: Sequence[int]):
+        self.api, self.params = api, params
+        self.seg = api.model.segments[0]
+        self.stage_blocks = tuple(stage_blocks)
+        cache = api.init_cache(cfg.num_slots, cfg.max_seq)
+        cache["len"] = jnp.int32(cfg.prompt_capacity)
+        cache["start"] = jnp.full((cfg.num_slots,), cfg.prompt_capacity,
+                                  jnp.int32)
+        self.cache = cache
+        self._step = jax.jit(api.decode_fn)
+        self._insert = jax.jit(lambda body, upd, b: jax.tree.map(
+            lambda g, s: jax.lax.dynamic_update_slice_in_dim(g, s, b, axis=1),
+            body, upd))
+
+    @property
+    def cache_len(self) -> int:
+        return int(self.cache["len"])
+
+    def step(self, tokens: jnp.ndarray, key) -> jnp.ndarray:
+        logits, self.cache = self._step(self.params, self.cache,
+                                        {"tokens": tokens})
+        return logits
+
+    def insert_slot(self, slot: int, private_cache: Dict[str, Any]) -> None:
+        name = self.seg.name
+        self.cache[name] = self._insert(self.cache[name],
+                                        private_cache[name], slot)
+        self.cache["start"] = self.cache["start"].at[slot].set(
+            private_cache["start"][0])
+
+    def swap(self, stage_blocks: Sequence[int]) -> bool:
+        self.stage_blocks = tuple(stage_blocks)
+        return True
+
+    def stage_times(self) -> Optional[List[float]]:
+        return None                     # engine falls back to attribution
+
+
+class PipelinedDecodeBackend:
+    """The shard_map pipelined decoder (stage s on pod s, sealed boundaries)
+    with prestaged params/cache, per-slot start masks, a per-stage timing
+    probe, and in-place stage-layout cache migration on swap."""
+
+    migrates_cache = True
+
+    def __init__(self, api, mesh, params, cfg: EngineConfig,
+                 stage_blocks: Sequence[int]):
+        self.api, self.mesh, self.params, self.cfg = api, mesh, params, cfg
+        self.seg = api.model.segments[0]
+        self._build(stage_blocks)
+        cache = api.init_cache(cfg.num_slots, cfg.max_seq)
+        cache["len"] = jnp.int32(cfg.prompt_capacity)
+        staged, cache_len = self.dec.stage_cache(cache)
+        start = jnp.full((cfg.num_slots,), cfg.prompt_capacity, jnp.int32)
+        self.state = (staged, cache_len, start)
+        self._insert = jax.jit(lambda staged, upd, b: jax.tree.map(
+            lambda g, s: jax.lax.dynamic_update_slice_in_dim(g, s, b, axis=2),
+            staged, upd))
+
+    def _build(self, stage_blocks: Sequence[int]) -> None:
+        cfg = self.cfg
+        self.stage_blocks = tuple(stage_blocks)
+        self.dec = PipelinedDecoder(
+            self.api, self.mesh, num_stages=cfg.num_stages,
+            num_microbatches=cfg.num_microbatches,
+            seal_boundary=cfg.seal_boundary, use_kernel=cfg.use_kernel,
+            stage_blocks=self.stage_blocks)
+        self.staged_params = self.dec.stage_params(self.params)
+        self.step_fn = jax.jit(self.dec.build(
+            prestaged_params=True, prestaged_cache=True, per_slot_start=True))
+        self._probe = self.dec.build_stage_probe()
+        self._probe_warm = False
+
+    @property
+    def cache_len(self) -> int:
+        return int(self.state[1])
+
+    def step(self, tokens: jnp.ndarray, key) -> jnp.ndarray:
+        logits, self.state = self.step_fn(self.staged_params, self.state,
+                                          {"tokens": tokens}, key)
+        return logits
+
+    def insert_slot(self, slot: int, private_cache: Dict[str, Any]) -> None:
+        slot_staged = self.dec._stage_tree(private_cache[self.seg.name])
+        staged, cache_len, start = self.state
+        staged = self._insert(staged, slot_staged, slot)
+        start = start.at[slot].set(private_cache["start"][0])
+        self.state = (staged, cache_len, start)
+
+    def swap(self, stage_blocks: Sequence[int]) -> bool:
+        """Rebuild the decoder on the new boundaries and migrate the staged
+        cache (unstage→restage composed into one gather). In-flight requests
+        keep their KV state; the next step() compiles the new layout."""
+        old_dec = self.dec
+        self._build(stage_blocks)
+        self.state = old_dec.restage_cache(self.state, self.dec)
+        return True
+
+    def stage_times(self, repeats: int = 1) -> List[float]:
+        """Host-timed per-stage block scans (one microbatch of dummy work).
+        First call after (re)build warms the probe compile."""
+        from repro.models import layers as L
+        cfg = self.cfg
+        staged, cache_len, _ = self.state
+        b_mb = cfg.num_slots // cfg.num_microbatches
+        x = jnp.zeros((b_mb, 1, self.api.cfg.d_model), L.DEFAULT_DTYPE)
+        mask = jnp.asarray(self.dec._mask)
+        per_stage = []
+        for s in range(cfg.num_stages):
+            blk_p = jax.tree.map(lambda a: a[s],
+                                 self.staged_params[self.seg.name])
+            blk_c = jax.tree.map(lambda a: a[s, :, :b_mb], staged)
+            args = (blk_p, blk_c, mask[s], x, cache_len)
+            if not self._probe_warm:
+                jax.block_until_ready(self._probe(*args))
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                jax.block_until_ready(self._probe(*args))
+            dt = (time.perf_counter() - t0) / repeats
+            # uneven stages are padded to bps blocks, so every probe does
+            # bps blocks of work while the planner predicts counts[s]; scale
+            # to per-real-block terms or small stages read as stragglers
+            # (spurious derate/replan cycles after any uneven swap)
+            dt *= self.dec.stage_counts[s] / self.dec.bps
+            per_stage.append(dt)
+        self._probe_warm = True
+        return per_stage
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class EngineEvent:
+    step: int
+    kind: str                  # admit | finish | replan | swap | swap_skipped
+    detail: Any = None
+
+
+class ServingEngine:
+    """Continuous-batching serving over the planner/pipeline/ft subsystems.
+
+    ``launch/serve.py`` is a thin CLI over this class; tests drive it
+    directly. Greedy decoding (argmax) keeps runs deterministic."""
+
+    def __init__(self, api, mesh=None, rm: Optional[ResourceManager] = None,
+                 config: Optional[EngineConfig] = None, params=None,
+                 backend: Optional[str] = None):
+        cfg = config or EngineConfig()
+        assert pipeline_applicable(api), \
+            f"{api.cfg.name}: serving needs a single homogeneous segment"
+        assert cfg.num_slots % cfg.num_microbatches == 0
+        assert cfg.prompt_capacity < cfg.max_seq
+        self.api, self.mesh, self.config = api, mesh, cfg
+        self.rm = rm or two_enclave_manager()
+        self.params = params if params is not None \
+            else api.init(jax.random.PRNGKey(0))
+
+        # --- plan over the trust domains --------------------------------
+        # min_stages: the serving mesh has a fixed pod count — ask the
+        # solver for a placement that uses every pod (falls back when the
+        # topology can't supply that many stages)
+        self.profiles = profiles_from_arch(api.cfg, seq_len=1)
+        self.replanner = OnlineReplanner(
+            self.rm, self.profiles, n=cfg.plan_n, delta=cfg.delta,
+            deviation_threshold=cfg.deviation_threshold, solver=cfg.solver,
+            min_stages=cfg.num_stages)
+        try:
+            ev = self.replanner.plan()
+        except InfeasibleError:
+            self.replanner.min_stages = None
+            ev = self.replanner.plan()
+        self.stage_blocks = self._blocks_from(ev)
+        self.telemetry = StageTelemetry(
+            self.replanner,
+            monitor=HeartbeatMonitor(self.rm,
+                                     timeout_s=cfg.heartbeat_timeout_s),
+            interval=cfg.telemetry_interval)
+
+        # --- decode backend ----------------------------------------------
+        if backend is None:
+            backend = "pipelined" if (
+                mesh is not None and cfg.num_stages > 1
+                and pipelined_backend_available()) else "local"
+        if backend == "pipelined":
+            assert mesh is not None and pipelined_backend_available(), \
+                "pipelined backend needs a mesh and jax.shard_map/set_mesh " \
+                "(jax >= 0.6); use backend='local' on this host"
+            self.backend = PipelinedDecodeBackend(api, mesh, self.params, cfg,
+                                                  self.stage_blocks)
+        else:
+            self.backend = LocalDecodeBackend(api, self.params, cfg,
+                                              self.stage_blocks)
+        self.backend_kind = backend
+
+        self.scheduler = SlotScheduler(cfg.num_slots)
+        self.global_len = cfg.prompt_capacity
+        self.pending = np.zeros(cfg.num_slots, np.int32)  # next input token
+        self.steps = 0
+        self.swaps = 0
+        self.events: List[EngineEvent] = []
+        self._prefill = jax.jit(api.decode_fn)
+        self._key = jnp.uint32(0xC0FFEE)
+
+    # ------------------------------------------------------------------
+    def _blocks_from(self, ev: Evaluation) -> Tuple[int, ...]:
+        planned = ev.placement.stage_sizes()
+        n, S = self.api.model.segments[0].n, self.config.num_stages
+        if len(planned) == S:
+            return planned
+        assert n % S == 0, \
+            f"plan wants {len(planned)} stages, {n} blocks not even over {S}"
+        return (n // S,) * S
+
+    def _mesh_ctx(self):
+        if self.mesh is not None and hasattr(jax, "set_mesh"):
+            return jax.set_mesh(self.mesh)
+        return contextlib.nullcontext()
+
+    # -- request API -------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               eos_id: Optional[int] = None) -> Request:
+        assert 1 <= len(prompt) <= self.config.prompt_capacity, \
+            f"prompt length {len(prompt)} > capacity " \
+            f"{self.config.prompt_capacity}"
+        return self.scheduler.submit(prompt, max_new_tokens, eos_id,
+                                     step=self.steps)
+
+    # -- admission: offset prefill into a free slot ------------------------
+    def _prefill_slot(self, slot: int, req: Request) -> None:
+        P = len(req.prompt)
+        start = self.global_len - P          # prompt ends at the timeline tip
+        assert start >= 0
+        cache = self.api.init_cache(1, self.config.max_seq)
+        cache["len"] = jnp.int32(start)
+        cache["start"] = jnp.full((1,), start, jnp.int32)
+        logits = None
+        for t in req.prompt:
+            tok = jnp.full((1, 1), t, jnp.int32)
+            logits, cache = self._prefill(self.params, cache, {"tokens": tok})
+        self.backend.insert_slot(slot, cache)
+        first = int(jnp.argmax(logits[0]))
+        self.pending[slot] = first
+        self.events.append(EngineEvent(self.steps, "admit",
+                                       {"rid": req.rid, "slot": slot,
+                                        "start": start}))
+        fin = self.scheduler.on_token(slot, first, step=self.steps)
+        if fin is not None:
+            self.events.append(EngineEvent(self.steps, "finish",
+                                           {"rid": fin.rid,
+                                            "by": fin.finished_by}))
+
+    def _admit(self) -> None:
+        while True:
+            hit = self.scheduler.admit_next(step=self.steps)
+            if hit is None:
+                return
+            self._prefill_slot(*hit)
+
+    # -- one decode step ---------------------------------------------------
+    def step(self) -> List[EngineEvent]:
+        before = len(self.events)
+        with self._mesh_ctx():
+            self._admit()
+            active = self.scheduler.active()
+            if not active:
+                return self.events[before:]
+            if self.global_len >= self.config.max_seq - 1:
+                raise RuntimeError(
+                    f"shared-timeline horizon exhausted "
+                    f"({self.global_len}/{self.config.max_seq}); size "
+                    f"max_seq for the engine's lifetime (DESIGN.md §Serving)")
+
+            tokens = jnp.asarray(self.pending)[:, None]
+            t0 = time.perf_counter()
+            logits = self.backend.step(tokens, self._key + self.steps)
+            logits = jax.block_until_ready(logits)
+            wall = time.perf_counter() - t0
+            self.steps += 1
+            self.global_len += 1
+
+            toks = np.asarray(jnp.argmax(logits, -1), np.int32)
+            for slot, req in active:
+                self.pending[slot] = toks[slot]
+                fin = self.scheduler.on_token(slot, int(toks[slot]),
+                                              step=self.steps)
+                if fin is not None:
+                    self.events.append(EngineEvent(self.steps, "finish",
+                                                   {"rid": fin.rid,
+                                                    "by": fin.finished_by}))
+
+            # telemetry tick → maybe re-plan → maybe swap
+            self.telemetry.record_step(wall)
+            if self.steps % self.telemetry.interval == 0:
+                times = self.backend.stage_times()
+                if times is None:
+                    shares = self.telemetry.predicted_shares()
+                    times = [wall * s for s in shares]
+                if times:
+                    self.telemetry.record_stage_times(times)
+            new_ev = self.telemetry.maybe_observe(self.steps)
+            if new_ev is not None:
+                self.events.append(EngineEvent(
+                    self.steps, "replan",
+                    {"blocks": new_ev.placement.stage_sizes(),
+                     "placement": new_ev.placement.describe()}))
+                if self.config.allow_swap:
+                    self.try_swap(new_ev.placement.stage_sizes())
+        return self.events[before:]
+
+    # -- live boundary swap ------------------------------------------------
+    def try_swap(self, blocks: Sequence[int]) -> bool:
+        blocks = tuple(blocks)
+        if blocks == self.stage_blocks:
+            return False
+        if len(blocks) != self.config.num_stages or \
+                sum(blocks) != self.api.model.segments[0].n:
+            self.events.append(EngineEvent(self.steps, "swap_skipped",
+                                           {"blocks": blocks}))
+            return False
+        with self._mesh_ctx():
+            migrated = self.backend.swap(blocks)
+        self.events.append(EngineEvent(
+            self.steps, "swap", {"from": self.stage_blocks, "to": blocks,
+                                 "migrated": migrated and
+                                 self.backend.migrates_cache}))
+        self.stage_blocks = blocks
+        self.swaps += 1
+        return True
+
+    # -- drive to completion ----------------------------------------------
+    def run(self, max_steps: Optional[int] = None) -> List[Request]:
+        n = 0
+        while self.scheduler.has_work():
+            if max_steps is not None and n >= max_steps:
+                break
+            self.step()
+            n += 1
+        return self.scheduler.finished
+
+    def stats(self) -> Dict[str, Any]:
+        out = dict(self.scheduler.stats())
+        wall = sum(self.telemetry.step_times)
+        out.update({
+            "steps": self.steps,
+            "swaps": self.swaps,
+            "replans": self.replanner.replans,
+            "backend": self.backend_kind,
+            "stage_blocks": self.stage_blocks,
+            "decode_wall_s": wall,
+            "tok_per_s": (out["tokens_out"] / wall) if wall > 0 else 0.0,
+        })
+        return out

@@ -1,0 +1,144 @@
+"""Serving layer 1 — continuous-batching slot scheduler.
+
+The engine decodes a fixed batch of ``num_slots`` KV-cache slots every step;
+the scheduler multiplexes a stream of heterogeneous requests onto those
+slots: FIFO admission into free slots, per-request EOS / length completion,
+and immediate slot recycling — so a short request finishing early frees its
+slot for the next queued prompt instead of idling until the longest request
+in a static batch drains.
+
+Pure host-side bookkeeping: no jax here. The engine (engine.py) owns the
+actual prefill/decode computation and calls in after every step with the
+tokens each slot produced.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its transcript."""
+
+    rid: int
+    prompt: Tuple[int, ...]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    status: str = QUEUED
+    slot: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    submit_step: int = -1               # engine step counters, for stats
+    admit_step: int = -1
+    finish_step: int = -1
+
+    @property
+    def finished_by(self) -> Optional[str]:
+        if len(self.generated) >= self.max_new_tokens:
+            return "length"
+        if self.eos_id is not None and self.generated \
+                and self.generated[-1] == self.eos_id:
+            return "eos"
+        return None
+
+
+class SlotScheduler:
+    """Admission queue + slot registry for continuous batching.
+
+    Invariants (asserted, and covered by tests/test_serving.py):
+      * every slot holds at most one RUNNING request;
+      * free slots + occupied slots partition ``range(num_slots)``;
+      * admission is FIFO over submission order;
+      * a completed request's slot is immediately reusable.
+    """
+
+    def __init__(self, num_slots: int):
+        assert num_slots > 0
+        self.num_slots = num_slots
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * num_slots
+        self._free: Deque[int] = deque(range(num_slots))
+        self._next_rid = 0
+        self.finished: List[Request] = []
+
+    # -- submission / admission -------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               eos_id: Optional[int] = None, step: int = -1) -> Request:
+        assert max_new_tokens >= 1 and len(prompt) >= 1
+        req = Request(self._next_rid, tuple(int(t) for t in prompt),
+                      max_new_tokens, eos_id, submit_step=step)
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    def admit_next(self, step: int = -1) -> Optional[Tuple[int, Request]]:
+        """Pop the oldest queued request into the lowest free slot."""
+        if not self.queue or not self._free:
+            return None
+        slot = self._free.popleft()
+        req = self.queue.popleft()
+        assert self.slots[slot] is None, f"slot {slot} already occupied"
+        req.status, req.slot, req.admit_step = RUNNING, slot, step
+        self.slots[slot] = req
+        return slot, req
+
+    # -- decode-step bookkeeping ------------------------------------------
+    def active(self) -> List[Tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def on_token(self, slot: int, token: int, step: int = -1
+                 ) -> Optional[Request]:
+        """Record a decoded token for ``slot``; completes and recycles the
+        slot when the request hits EOS or its length budget. Returns the
+        finished request, if any."""
+        req = self.slots[slot]
+        assert req is not None and req.status == RUNNING, (slot, req)
+        req.generated.append(int(token))
+        if req.finished_by:
+            return self.complete(slot, step=step)
+        return None
+
+    def complete(self, slot: int, step: int = -1) -> Request:
+        req = self.slots[slot]
+        assert req is not None, slot
+        req.status, req.finish_step = DONE, step
+        self.slots[slot] = None
+        self._free.append(slot)
+        self.finished.append(req)
+        return req
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)
+
+    def check_invariants(self) -> None:
+        occupied = {i for i, r in enumerate(self.slots) if r is not None}
+        free = set(self._free)
+        assert occupied.isdisjoint(free), (occupied, free)
+        assert occupied | free == set(range(self.num_slots)), (occupied, free)
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                assert r.slot == i and r.status == RUNNING, (i, r)
+
+    def stats(self) -> Dict[str, float]:
+        done = self.finished
+        toks = sum(len(r.generated) for r in done)
+        waits = [r.admit_step - r.submit_step for r in done
+                 if r.admit_step >= 0 and r.submit_step >= 0]
+        return {
+            "completed": len(done),
+            "queued": len(self.queue),
+            "running": self.num_slots - len(self._free),
+            "tokens_out": toks,
+            "mean_queue_wait_steps": (sum(waits) / len(waits)) if waits
+            else 0.0,
+        }

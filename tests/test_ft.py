@@ -44,3 +44,44 @@ def test_replanner_handles_dead_domain():
     new = rp.observe({})
     assert new is not None
     assert all(s.device != victim for s in new.placement.stages)
+
+
+def test_replanner_stage_keyed_observation_no_collision():
+    """One device hosting several stages: observations keyed (device, i)
+    must not collide (the old {device: t} dict kept only the last stage)."""
+    rm = two_enclave_manager()
+    cfg = reduced(get_arch("llama3.2-1b"))
+    profs = profiles_from_arch(cfg, seq_len=1)
+    rp = OnlineReplanner(rm, profs, n=1000, delta=0.9, min_stages=2)
+    first = rp.plan()
+    assert len(first.placement.stages) == 2
+    # deviation on stage 0 only, keyed by (device, stage index)
+    key0 = (first.placement.stages[0].device, 0)
+    obs = {key0: first.stage_times[0] * 10.0,
+           (first.placement.stages[1].device, 1): first.stage_times[1]}
+    assert rp.observe(obs) is not None
+    assert rm.get(key0[0]).derate_factor < 1.0
+    assert rm.get(first.placement.stages[1].device).derate_factor == 1.0
+
+
+def test_replanner_derate_bounded_and_cache_capped():
+    """Repeated threshold misses must not compound flops_per_s toward zero,
+    and the planner-table cache must stay bounded under the derate storm."""
+    rm = two_enclave_manager()
+    cap = rm._planner_cache.max_entries
+    cfg = reduced(get_arch("llama3.2-1b"))
+    profs = profiles_from_arch(cfg, seq_len=1)
+    rp = OnlineReplanner(rm, profs, n=1000, delta=0.9, min_stages=2,
+                         derate_floor=0.25)
+    plan = rp.plan()
+    dev = plan.placement.stages[1].device
+    base = rm.get(dev).base_device.flops_per_s
+    for i in range(2 * cap):
+        cur = rp.current
+        idx = next(i for i, s in enumerate(cur.placement.stages)
+                   if s.device == dev)
+        rp.observe({(dev, idx): cur.stage_times[idx] * 10.0})
+        assert rm.get(dev).device.flops_per_s >= 0.25 * base - 1e-6
+        assert len(rm._planner_cache) <= cap
+    assert rp.replans >= 1
+    assert rm.get(dev).derate_factor == 0.25

@@ -259,3 +259,31 @@ def test_pipelined_decoder_rejects_bad_boundaries():
         with pytest.raises(AssertionError):
             PipelinedDecoder(api, None, num_stages=2, num_microbatches=2,
                              stage_blocks=bad)
+
+
+def test_min_stages_constraint_and_solver_equivalence():
+    """min_stages (serving: one stage per pipeline pod) is honored by every
+    solver and dp stays optimal among >=k-stage placements."""
+    import numpy as np
+    from conftest import random_placement_instance
+    from repro.core.planner import solve, InfeasibleError
+    import pytest as _pytest
+
+    rng = np.random.RandomState(7)
+    for trial in range(6):
+        profs, graph = random_placement_instance(rng, m=8, r=3, u=1)
+        for k in (2, 3):
+            try:
+                ex = solve(profs, graph, n=500, delta=1.1, min_stages=k,
+                           solver="exhaustive")
+            except InfeasibleError:
+                with _pytest.raises(InfeasibleError):
+                    solve(profs, graph, n=500, delta=1.1, min_stages=k,
+                          solver="dp")
+                continue
+            dp = solve(profs, graph, n=500, delta=1.1, min_stages=k,
+                       solver="dp")
+            assert len(ex.best.placement.stages) >= k
+            assert len(dp.best.placement.stages) >= k
+            assert abs(dp.best.t_chunk - ex.best.t_chunk) <= \
+                1e-9 * max(1.0, ex.best.t_chunk)
