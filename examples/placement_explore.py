@@ -1,11 +1,18 @@
-"""Explore the placement tree for the paper's CNNs: evaluate every path,
-print the Pareto frontier (latency vs privacy leakage) for GoogLeNet, and
-cross-check the DP/beam solvers against the exhaustive oracle.
+"""Explore the placement search spaces for the paper's CNNs: evaluate the
+prefix tree (paper Fig. 7), cross-check DP/beam against the exhaustive
+oracle, then sweep the *segment* space (PlacementSpec: any device order,
+trusted/untrusted segments interleaved) and show where a non-prefix
+placement strictly beats the best prefix plan, with per-cut
+transfer/seal/leakage pricing.
 
   PYTHONPATH=src python examples/placement_explore.py
 """
+import dataclasses
+
 from benchmarks.common import DELTA, N_FRAMES, full_graph
-from repro.core.planner import profiles_from_cnn, solve
+from repro.core import cost_model as CM
+from repro.core.planner import (LayerProfile, PlacementSpec, ResourceGraph,
+                                profiles_from_cnn, solve)
 from repro.models.cnn import CNN_MODELS
 
 profs = profiles_from_cnn(CNN_MODELS["googlenet"])
@@ -14,7 +21,7 @@ best, evals = res.best, res.evaluations
 print(f"{res.n_candidates} paths, {res.n_feasible} feasible under "
       f"δ={DELTA:.3f} ({res.n_pruned} pruned, "
       f"{res.wall_time_s * 1e3:.1f} ms exhaustive)")
-print("best:", best.placement.describe())
+print("best prefix:", best.placement.describe())
 
 # the fast solvers find the same optimum without enumerating the tree
 for solver in ("dp", "beam"):
@@ -22,6 +29,40 @@ for solver in ("dp", "beam"):
     agree = abs(r.best.t_chunk - best.t_chunk) <= 1e-9 * best.t_chunk
     print(f"{solver:>10}: t_chunk {r.best.t_chunk:.1f} "
           f"({r.wall_time_s * 1e3:.2f} ms, matches oracle: {agree})")
+
+# ---------------------------------------------------------------------------
+# Segment space: the PlacementSpec search (any order, interleaved domains)
+# ---------------------------------------------------------------------------
+sg = solve(profs, full_graph(), n=N_FRAMES, delta=DELTA, solver="segment-dp")
+spec = PlacementSpec.from_placement(sg.best.placement, full_graph())
+print(f"\nsegment-dp: t_chunk {sg.best.t_chunk:.1f} "
+      f"({sg.wall_time_s * 1e3:.2f} ms) -> {spec.describe()} "
+      f"(prefix-expressible: {spec.is_prefix(full_graph())})")
+
+# A topology where the optimum is provably non-prefix: a similarity bump
+# mid-network (autoencoder-style reconstruction) forces one layer back into
+# a TEE, sandwiching the slow enclaves between fast untrusted devices.
+sims = [0.3] * 8
+sims[2] = 0.9                       # input of layer 3 resembles the input
+sprofs = [LayerProfile(f"l{i}", 2e8, 2e5, sims[i], params_bytes=1e6)
+          for i in range(8)]
+sgraph = ResourceGraph(
+    {"tee1": CM.TEE, "tee2": dataclasses.replace(CM.TEE, name="tee2"),
+     "gpu0": CM.GPU, "gpu1": dataclasses.replace(CM.GPU, name="gpu1")},
+    {}, CM.WAN_30MBPS)
+px = solve(sprofs, sgraph, n=N_FRAMES, delta=0.5, solver="exhaustive")
+sg = solve(sprofs, sgraph, n=N_FRAMES, delta=0.5, solver="segment-dp")
+spec = PlacementSpec.from_placement(sg.best.placement, sgraph)
+print(f"\nsandwich fixture: prefix best {px.best.t_chunk:.1f}s, "
+      f"segment best {sg.best.t_chunk:.1f}s "
+      f"({px.best.t_chunk / sg.best.t_chunk:.2f}x)")
+print("  ", spec.describe())
+print("  per-cut costs (transfer / seal / leakage):")
+for c in spec.cut_costs(sprofs, sgraph):
+    print(f"    cut@{c.boundary} {c.src}->{c.dst}: "
+          f"tx {c.transfer_s * 1e3:.1f} ms, seal {c.seal_s * 1e3:.2f} ms, "
+          f"leakage {c.leakage:.0f} sim-weighted bytes"
+          f"{' [trust crossing]' if c.trust_crossing else ''}")
 
 # Pareto: min completion per leakage bucket (needs the exhaustive eval list)
 pareto = {}

@@ -13,5 +13,5 @@ from repro.launch.serve import main as serve_main
 
 if __name__ == "__main__":
     serve_main(["--arch", "llama3.2-1b", "--reduced", "--mesh", "2x2",
-                "--stages", "2", "--microbatches", "2", "--batch", "4",
+                "--stages", "2", "--microbatches", "2", "--slots", "4",
                 "--prompt-len", "12", "--requests", "4"])

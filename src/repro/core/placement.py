@@ -15,9 +15,10 @@ from typing import List, Optional, Sequence, Tuple
 
 from .cost_model import DeviceProfile
 from .planner import (Evaluation, LayerProfile, Placement,  # noqa: F401
-                      ResourceGraph, Stage, enumerate_placements, evaluate,
-                      profiles_from_arch, profiles_from_cnn,
-                      stage_exec_direct)
+                      PlacementSpec, ResourceGraph, Segment, Stage,
+                      enumerate_placements, enumerate_segment_placements,
+                      evaluate, profiles_from_arch, profiles_from_cnn,
+                      spec_from_boundaries, stage_exec_direct)
 from .planner import solve as _planner_solve
 
 

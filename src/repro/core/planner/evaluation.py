@@ -1,9 +1,14 @@
 """Planner cost evaluation (Eq. 1–2) and result types.
 
-A placement assigns contiguous layer ranges (stages) to devices: trusted
-devices first (processing must start in a trusted domain — C1), optionally
-followed by one untrusted suffix once the boundary activation is
-sufficiently dissimilar (C2).
+A placement assigns contiguous layer ranges (stages) to devices, in any
+order and with trusted/untrusted stages interleaving freely (the
+PlacementSpec segment-graph model): processing must start in a trusted
+domain (C1) and every layer of an *untrusted* stage — wherever it sits in
+the chain — needs input dissimilar from the original (C2). ``evaluate``
+has always been order-agnostic; the prefix restriction lived in the
+solvers' search spaces, not here. TEE→TEE boundaries charge seal+unseal;
+boundaries into or out of an untrusted device transfer in the clear (the
+exposure is exactly what C2 constrains and ``spec.cut_costs`` prices).
 
 Cost model (Eq. 1–2): with per-frame stage times e_s and boundary transfer
 times tr_s, a chunk of n frames completes in

@@ -51,8 +51,9 @@ class LayerProfile:
 
 @dataclasses.dataclass(frozen=True)
 class ResourceGraph:
-    """Devices + links. Trusted devices are pipeline-stage candidates in
-    order; untrusted devices compete for the suffix."""
+    """Devices + links. The segment-space solvers place any device anywhere
+    in the chain; the legacy prefix solvers read ``trusted()`` as the fixed
+    stage order and ``untrusted()`` as suffix candidates."""
     devices: Dict[str, DeviceProfile]
     links: Dict[Tuple[str, str], LinkProfile]
     default_link: LinkProfile

@@ -94,6 +94,16 @@ def lm_similarity_profile(hidden_states: jnp.ndarray) -> np.ndarray:
     return np.asarray(cos.max(axis=(1, 2)))
 
 
+def cut_exposure(similarity: float, out_bytes: float) -> float:
+    """Leakage price of an activation crossing into an untrusted domain:
+    similarity-weighted exposed bytes. A cut whose activation still
+    resembles the input (sim -> 1) exposes its full byte volume; a private
+    representation (sim -> 0) prices near zero. Used by
+    ``planner.spec.PlacementSpec.cut_costs`` to make every trust-boundary
+    crossing carry an explicit leakage cost next to its transfer cost."""
+    return max(0.0, min(1.0, similarity)) * max(0.0, out_bytes)
+
+
 def private_depth(similarities: Sequence[float], delta: float) -> int:
     """First block index after which the representation is private, i.e. the
     minimum number of leading blocks that MUST stay in a trusted domain."""

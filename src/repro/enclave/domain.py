@@ -16,8 +16,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 from repro.core.cost_model import (DeviceProfile, LinkProfile, TPU_POD,
                                    TPU_POD_TRUSTED, DCN_LINK)
 from repro.core.planner import (BoundedCache, CostTables, ExhaustiveSolver,
-                                ResourceGraph, SolveResult, get_solver,
-                                solve as planner_solve)
+                                PlacementSpec, ResourceGraph, SolveResult,
+                                get_solver, solve as planner_solve)
 
 
 @dataclasses.dataclass
@@ -72,6 +72,7 @@ class ResourceManager:
         self._planner_cache: BoundedCache = BoundedCache(planner_cache_entries)
         self._last_plan_args: Optional[dict] = None
         self.last_plan: Optional[SolveResult] = None
+        self.last_spec: Optional[PlacementSpec] = None
 
     # -- registration ------------------------------------------------------
     def register(self, domain: TrustDomain,
@@ -119,20 +120,28 @@ class ResourceManager:
 
     # -- planning (paper Fig. 2: Resource Manager drives the partitioner) --
     def plan(self, profiles: Sequence, *, n: int, delta: float,
-             solver: str = "dp", pipelined: bool = True,
+             solver: str = "dp", space: str = "segment",
+             pipelined: bool = True,
              max_trusted: Optional[int] = None,
              input_similarity: float = 1.0,
              default_link: LinkProfile = DCN_LINK,
-             min_stages: Optional[int] = None) -> SolveResult:
-        """Solve placement over the currently healthy domains.
+             min_stages: Optional[int] = None,
+             max_segments: Optional[int] = None) -> PlacementSpec:
+        """Solve placement over the currently healthy domains; returns the
+        chosen ``PlacementSpec`` (the runtime's consumption format — segment
+        list with devices and trust domains). The full ``SolveResult`` with
+        predicted stage times stays on ``self.last_plan``.
 
-        Per-device cost tables are cached on the manager, so repeated plans
-        (and failure-driven re-plans over a shrunk graph) only pay for the
-        search, not re-profiling. The plain exhaustive oracle evaluates
-        per-layer and never reads the tables, so none are built for it.
+        ``space`` defaults to the segment search space (any device order,
+        interleaved trust domains); pass ``space="prefix"`` for the legacy
+        trusted-prefix tree. Per-device cost tables are cached on the
+        manager, so repeated plans (and failure-driven re-plans over a
+        shrunk graph) only pay for the search, not re-profiling. The plain
+        exhaustive oracles evaluate per-layer and never read the tables, so
+        none are built for them.
         """
         graph = self.resource_graph(default_link)
-        sv = get_solver(solver)
+        sv = get_solver(solver, space)
         tables = None
         if not isinstance(sv, ExhaustiveSolver) or sv.use_tables:
             tables = CostTables(profiles, graph, input_similarity,
@@ -140,19 +149,24 @@ class ResourceManager:
         res = planner_solve(profiles, graph, n=n, delta=delta, solver=sv,
                             pipelined=pipelined, max_trusted=max_trusted,
                             input_similarity=input_similarity, tables=tables,
-                            min_stages=min_stages)
+                            min_stages=min_stages, max_segments=max_segments)
         self._last_plan_args = dict(
-            profiles=profiles, n=n, delta=delta, solver=solver,
+            profiles=profiles, n=n, delta=delta, solver=solver, space=space,
             pipelined=pipelined, max_trusted=max_trusted,
             input_similarity=input_similarity, default_link=default_link,
-            min_stages=min_stages)
+            min_stages=min_stages, max_segments=max_segments)
         self.last_plan = res
-        return res
+        self.last_spec = PlacementSpec.from_placement(res.best.placement,
+                                                      graph)
+        return self.last_spec
 
     def replan_on_failure(self, failed: Union[str, Iterable[str]],
-                          **overrides) -> SolveResult:
+                          **overrides) -> PlacementSpec:
         """Mark domain(s) unhealthy and incrementally re-solve with the
-        arguments of the last ``plan()`` (overridable per call)."""
+        arguments of the last ``plan()`` (overridable per call). The failed
+        domains drop out of the resource graph entirely, so exclusion works
+        wherever the device sat in the chain — mid-chain segments are
+        re-placed, not just a trailing suffix."""
         if self._last_plan_args is None and \
                 not {"profiles", "n", "delta"} <= overrides.keys():
             raise RuntimeError("replan_on_failure before any plan() "
@@ -181,4 +195,19 @@ def two_enclave_manager() -> ResourceManager:
     rm.register(TrustDomain("pod0", True, 256, 0, TPU_POD_TRUSTED))
     rm.register(TrustDomain("pod1", True, 256, 1,
                             dataclasses.replace(TPU_POD_TRUSTED, name="tpu-pod-cc2")))
+    return rm
+
+
+def sandwich_manager(num_untrusted: int = 2) -> ResourceManager:
+    """One confidential-compute pod (derated) plus ``num_untrusted``
+    full-rate untrusted pods — the topology whose optimal placement is
+    non-prefix: the trusted segment pipelines with *multiple* untrusted
+    segments, which the legacy trusted-prefix space (single untrusted
+    suffix) cannot express."""
+    rm = ResourceManager()
+    rm.register(TrustDomain("pod0", True, 256, 0, TPU_POD_TRUSTED))
+    for i in range(num_untrusted):
+        rm.register(TrustDomain(
+            f"pod{i + 1}", False, 256, i + 1,
+            dataclasses.replace(TPU_POD, name=f"tpu-pod-{i + 1}")))
     return rm

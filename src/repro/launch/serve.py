@@ -4,7 +4,9 @@
       --mesh 2x2 --stages 2 --microbatches 2 --slots 4 --requests 6
 
 Thin CLI over ``repro.serving.ServingEngine`` (DESIGN.md §Serving engine):
-plans stage boundaries over the registered trust domains, serves a synthetic
+plans a ``PlacementSpec`` over the registered trust domains (``--topology``
+picks the registry; ``--space segment`` is the default PlacementSpec search,
+``--space prefix`` the legacy trusted-prefix tree), serves a synthetic
 stream of heterogeneous requests with continuous batching, and optionally
 injects a straggler stage (``--inject-straggler STAGE:FACTOR``) to
 demonstrate telemetry-driven live re-planning with stage-layout cache
@@ -12,7 +14,10 @@ migration. ``--verify-swap`` runs the same request stream twice — with and
 without the injected straggler — and asserts the decoded token streams are
 identical across the live swap (requires ``--no-seal``: boundary sealing
 quantizes whichever activation crosses the cut, so moving the cut moves the
-quantization noise).
+quantization noise). ``--topology sandwich --require-non-prefix`` asserts
+the planned spec is NOT expressible in the prefix space (multiple untrusted
+segments); ``--temperature``/``--top-k`` switch greedy decoding to
+per-request-reproducible sampling.
 """
 from __future__ import annotations
 
@@ -23,10 +28,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced as reduce_cfg
+from repro.core.privacy import LM_SIM_DELTA
+from repro.enclave.domain import sandwich_manager, two_enclave_manager
 from repro.launch.mesh import make_mesh
 from repro.models.api import build_model
 from repro.serving import (EngineConfig, ServingEngine,
                            pipelined_backend_available)
+
+TOPOLOGIES = {
+    "two-enclave": lambda stages: two_enclave_manager(),
+    # 1 trusted CC pod + (stages-1) full-rate untrusted pods: the optimal
+    # placement pipelines multiple untrusted segments — non-prefix by
+    # construction (the legacy space allows only one untrusted suffix)
+    "sandwich": lambda stages: sandwich_manager(max(1, stages - 1)),
+}
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -48,8 +63,23 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-seq", type=int, default=0,
                     help="engine timeline horizon (0 = auto-size)")
     ap.add_argument("--no-seal", action="store_true")
+    ap.add_argument("--topology", default="two-enclave",
+                    choices=sorted(TOPOLOGIES),
+                    help="trust-domain registry the planner places over")
+    ap.add_argument("--delta", type=float, default=LM_SIM_DELTA,
+                    help="privacy threshold for untrusted segments")
+    ap.add_argument("--require-non-prefix", action="store_true",
+                    help="assert the planned PlacementSpec is NOT "
+                         "expressible in the legacy trusted-prefix space")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the top-k logits (0 = off)")
     ap.add_argument("--solver", default="dp",
                     choices=["dp", "exhaustive", "beam"])
+    ap.add_argument("--space", default="segment",
+                    choices=["segment", "prefix"],
+                    help="placement search space (segment = PlacementSpec)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "local", "pipelined"])
     ap.add_argument("--telemetry-interval", type=int, default=4)
@@ -73,9 +103,12 @@ def _make_engine(api, params, mesh, args) -> ServingEngine:
         num_microbatches=args.microbatches, max_seq=max_seq,
         prompt_capacity=args.prompt_len,
         seal_boundary=not args.no_seal, solver=args.solver,
+        space=args.space, delta=args.delta,
+        temperature=args.temperature, top_k=args.top_k,
         telemetry_interval=args.telemetry_interval)
     backend = None if args.backend == "auto" else args.backend
-    return ServingEngine(api, mesh=mesh, config=ec, params=params,
+    rm = TOPOLOGIES[args.topology](args.stages)
+    return ServingEngine(api, mesh=mesh, rm=rm, config=ec, params=params,
                          backend=backend)
 
 
@@ -131,7 +164,14 @@ def main(argv=None):
         if with_inject and inject:
             eng.telemetry.inject(*inject)
         print(f"backend={eng.backend_kind} stage_blocks={eng.stage_blocks} "
-              f"placement={eng.replanner.current.placement.describe()}")
+              f"placement={eng.spec.describe()}")
+        if args.require_non_prefix:
+            graph = eng.rm.resource_graph()
+            assert not eng.spec.is_prefix(graph), \
+                f"planned placement is prefix-expressible: " \
+                f"{eng.spec.describe()}"
+            print("NON-PREFIX OK: placement not expressible in the "
+                  "trusted-prefix space")
         reqs = _serve_stream(eng, args, cfg)
         for e in eng.events:
             if e.kind in ("replan", "swap", "swap_skipped"):

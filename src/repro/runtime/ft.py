@@ -3,10 +3,13 @@ detection, and Serdab re-planning (the paper's 'online re-partitioning when
 profiling information deviates from predictions', Sec. V).
 
 Planning goes through ``ResourceManager.plan()/replan_on_failure()`` (the
-planner's re-planning layer, DESIGN.md §Planner): cost tables are cached on
-the manager, so a failure-driven re-solve only pays for the solver pass, and
-the resulting (possibly uneven) stage boundaries feed straight into
-``PipelinedDecoder(stage_blocks=evaluation.placement.stage_sizes())``.
+planner's re-planning layer, DESIGN.md §Planner), which return a
+``PlacementSpec`` — the segment-graph placement the runtime consumes
+directly (``PipelinedDecoder.from_spec`` / ``ServingEngine``). Cost tables
+are cached on the manager, so a failure-driven re-solve only pays for the
+solver pass. Failed devices drop out of the resource graph before the
+re-solve, so exclusion holds wherever the device sat in the segment chain —
+mid-chain untrusted segments included, not just a trailing suffix.
 """
 from __future__ import annotations
 
@@ -15,7 +18,7 @@ import time
 from typing import List, Mapping, Optional, Sequence, Tuple, Union
 
 from repro.core.planner import (Evaluation, InfeasibleError, LayerProfile,
-                                SolveResult)
+                                PlacementSpec, SolveResult)
 from repro.enclave.domain import ResourceManager
 
 StageKey = Union[int, Tuple[str, int], str]
@@ -40,7 +43,11 @@ class HeartbeatMonitor:
 @dataclasses.dataclass
 class OnlineReplanner:
     """Watches per-stage observed rates and re-runs the placement solver
-    when observation deviates from prediction (or a domain dies)."""
+    when observation deviates from prediction (or a domain dies).
+
+    ``plan()``/``observe()`` return the new ``PlacementSpec``;
+    ``self.current`` keeps the matching ``Evaluation`` (predicted stage
+    times drive deviation detection), ``self.current_spec`` the spec."""
 
     rm: ResourceManager
     profiles: Sequence[LayerProfile]
@@ -49,17 +56,24 @@ class OnlineReplanner:
     deviation_threshold: float = 1.5
     derate_floor: float = 0.05          # cumulative derate never drops below
     solver: str = "dp"
+    space: str = "segment"              # PlacementSpec search space
     min_stages: Optional[int] = None    # serving: use every pipeline pod
     current: Optional[Evaluation] = None
+    current_spec: Optional[PlacementSpec] = None
     last_result: Optional[SolveResult] = None
     replans: int = 0
 
-    def plan(self) -> Evaluation:
-        res = self.rm.plan(self.profiles, n=self.n, delta=self.delta,
-                           solver=self.solver, min_stages=self.min_stages)
-        self.last_result = res
-        self.current = res.best
-        return res.best
+    def _adopt(self, spec: PlacementSpec) -> PlacementSpec:
+        self.last_result = self.rm.last_plan
+        self.current = self.rm.last_plan.best
+        self.current_spec = spec
+        return spec
+
+    def plan(self) -> PlacementSpec:
+        spec = self.rm.plan(self.profiles, n=self.n, delta=self.delta,
+                            solver=self.solver, space=self.space,
+                            min_stages=self.min_stages)
+        return self._adopt(spec)
 
     def _resolve(self, key: StageKey, predicted) -> Optional[Tuple[str, int]]:
         """Normalize an observation key to (device, stage_idx). A bare device
@@ -75,13 +89,14 @@ class OnlineReplanner:
         return max(mine, key=lambda k: predicted[k]) if mine else None
 
     def observe(self, stage_times: Mapping[StageKey, float]
-                ) -> Optional[Evaluation]:
+                ) -> Optional[PlacementSpec]:
         """stage_times: measured per-stage wall time, keyed by stage index,
         ``(device, stage_idx)``, or device name (legacy). Re-plans when any
         stage runs deviation_threshold x slower than the plan predicted, or
-        when the plan references a dead domain. Deviations derate the hosting
-        device's profile through ``ResourceManager.derate`` — cumulative and
-        floored, so repeated misses cannot drive ``flops_per_s`` to zero."""
+        when the plan references a dead domain — wherever in the segment
+        chain the dead device sat. Deviations derate the hosting device's
+        profile through ``ResourceManager.derate`` — cumulative and floored,
+        so repeated misses cannot drive ``flops_per_s`` to zero."""
         if self.current is None:
             return self.plan()
         stages = self.current.placement.stages
@@ -100,18 +115,18 @@ class OnlineReplanner:
             self.replans += 1
             if dead:
                 try:
-                    res = self.rm.replan_on_failure(
+                    spec = self.rm.replan_on_failure(
                         dead, profiles=self.profiles, n=self.n,
-                        delta=self.delta, solver=self.solver)
+                        delta=self.delta, solver=self.solver,
+                        space=self.space)
                 except InfeasibleError:
                     if self.min_stages is None:
                         raise
                     # not enough survivors for the stage floor: best effort
-                    res = self.rm.replan_on_failure(
+                    spec = self.rm.replan_on_failure(
                         dead, profiles=self.profiles, n=self.n,
-                        delta=self.delta, solver=self.solver, min_stages=None)
-                self.last_result = res
-                self.current = res.best
-                return res.best
+                        delta=self.delta, solver=self.solver,
+                        space=self.space, min_stages=None)
+                return self._adopt(spec)
             return self.plan()
         return None

@@ -70,6 +70,23 @@ class PipelinedDecoder:
     seal_boundary: bool = True
     use_kernel: bool = False            # Pallas path on TPU
     stage_blocks: Optional[Sequence[int]] = None   # per-stage block counts
+    stage_devices: Optional[Sequence[str]] = None  # per-stage device names
+
+    @classmethod
+    def from_spec(cls, api: ModelAPI, mesh: Mesh, spec,
+                  num_microbatches: int, **kw) -> "PipelinedDecoder":
+        """Build a decoder directly from a planner ``PlacementSpec``: stage s
+        runs segment s (``spec.segments[s]``) on pod s. The spec's device
+        order is the pipeline order — non-prefix placements (untrusted
+        segments interleaved mid-chain) execute exactly like prefix ones;
+        the trust domain only changes what the cost model charged and which
+        boundaries the sealing discipline covers."""
+        n = api.model.segments[0].n
+        assert spec.num_layers == n, (spec.num_layers, n)
+        return cls(api, mesh, num_stages=spec.num_segments,
+                   num_microbatches=num_microbatches,
+                   stage_blocks=spec.stage_sizes(),
+                   stage_devices=spec.devices(), **kw)
 
     def __post_init__(self):
         model = self.api.model
@@ -87,6 +104,9 @@ class PipelinedDecoder:
             assert len(counts) == S, (counts, S)
             assert all(c > 0 for c in counts), counts
             assert sum(counts) == self.seg.n, (counts, self.seg.n)
+        if self.stage_devices is not None:
+            self.stage_devices = tuple(self.stage_devices)
+            assert len(self.stage_devices) == S, (self.stage_devices, S)
         self.stage_counts = counts
         self.bps = max(counts)          # padded per-stage block count
         self.uniform = len(set(counts)) == 1

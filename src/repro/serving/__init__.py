@@ -9,16 +9,20 @@ Three decoupled layers over the planner/pipeline/ft stack:
    injection, plus ResourceManager heartbeats;
 3. **engine** — ``ServingEngine``: shared-position-timeline decode over
    pluggable backends (shard_map pipelined / local single-process) with
-   live stage-boundary swaps that migrate the KV cache in place.
+   live stage-boundary swaps that migrate the KV cache in place. Plans are
+   ``PlacementSpec`` segment placements (possibly non-prefix); decoding is
+   greedy or temperature/top-k sampled (**sampling** — per-request PRNG
+   threading keeps sampled streams batch-independent).
 """
 from .engine import (EngineConfig, EngineEvent, LocalDecodeBackend,
                      PipelinedDecodeBackend, ServingEngine,
                      pipelined_backend_available)
+from .sampling import TokenSampler
 from .scheduler import Request, SlotScheduler
 from .telemetry import StageTelemetry
 
 __all__ = [
     "EngineConfig", "EngineEvent", "LocalDecodeBackend",
     "PipelinedDecodeBackend", "Request", "ServingEngine", "SlotScheduler",
-    "StageTelemetry", "pipelined_backend_available",
+    "StageTelemetry", "TokenSampler", "pipelined_backend_available",
 ]

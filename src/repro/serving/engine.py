@@ -38,12 +38,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.planner import (Evaluation, InfeasibleError,
+from repro.core.planner import (InfeasibleError, PlacementSpec,
                                 profiles_from_arch)
 from repro.core.privacy import LM_SIM_DELTA
 from repro.enclave.domain import ResourceManager, two_enclave_manager
 from repro.runtime.ft import HeartbeatMonitor, OnlineReplanner
 from repro.runtime.pipeline import PipelinedDecoder, pipeline_applicable
+from repro.serving.sampling import TokenSampler
 from repro.serving.scheduler import Request, SlotScheduler
 from repro.serving.telemetry import StageTelemetry
 
@@ -63,12 +64,17 @@ class EngineConfig:
     seal_boundary: bool = True
     use_kernel: bool = False
     solver: str = "dp"
+    space: str = "segment"              # PlacementSpec search space
     plan_n: int = 10_000
     delta: float = LM_SIM_DELTA
     telemetry_interval: int = 8
     deviation_threshold: float = 1.5
     heartbeat_timeout_s: float = 10.0
     allow_swap: bool = True
+    # sampling (ROADMAP (g)): 0.0 = greedy argmax (deterministic)
+    temperature: float = 0.0
+    top_k: int = 0
+    sample_seed: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -227,7 +233,12 @@ class ServingEngine:
     """Continuous-batching serving over the planner/pipeline/ft subsystems.
 
     ``launch/serve.py`` is a thin CLI over this class; tests drive it
-    directly. Greedy decoding (argmax) keeps runs deterministic."""
+    directly. The placement is a ``PlacementSpec`` (``self.spec``) from the
+    segment-space solver — possibly non-prefix (untrusted segments
+    interleaved mid-chain); segment s executes on pod s either way. Decoding
+    is greedy argmax by default; ``EngineConfig.temperature``/``top_k``
+    enable per-request-reproducible sampling (serving/sampling.py), which is
+    token-equal to greedy at temperature 0."""
 
     def __init__(self, api, mesh=None, rm: Optional[ResourceManager] = None,
                  config: Optional[EngineConfig] = None, params=None,
@@ -250,13 +261,14 @@ class ServingEngine:
         self.replanner = OnlineReplanner(
             self.rm, self.profiles, n=cfg.plan_n, delta=cfg.delta,
             deviation_threshold=cfg.deviation_threshold, solver=cfg.solver,
-            min_stages=cfg.num_stages)
+            space=cfg.space, min_stages=cfg.num_stages)
         try:
-            ev = self.replanner.plan()
+            spec = self.replanner.plan()
         except InfeasibleError:
             self.replanner.min_stages = None
-            ev = self.replanner.plan()
-        self.stage_blocks = self._blocks_from(ev)
+            spec = self.replanner.plan()
+        self.spec = spec
+        self.stage_blocks = self._blocks_from(spec)
         self.telemetry = StageTelemetry(
             self.replanner,
             monitor=HeartbeatMonitor(self.rm,
@@ -287,10 +299,12 @@ class ServingEngine:
         self.events: List[EngineEvent] = []
         self._prefill = jax.jit(api.decode_fn)
         self._key = jnp.uint32(0xC0FFEE)
+        self.sampler = TokenSampler(cfg.temperature, cfg.top_k,
+                                    cfg.sample_seed)
 
     # ------------------------------------------------------------------
-    def _blocks_from(self, ev: Evaluation) -> Tuple[int, ...]:
-        planned = ev.placement.stage_sizes()
+    def _blocks_from(self, spec: PlacementSpec) -> Tuple[int, ...]:
+        planned = spec.stage_sizes()
         n, S = self.api.model.segments[0].n, self.config.num_stages
         if len(planned) == S:
             return planned
@@ -325,7 +339,7 @@ class ServingEngine:
             tok = jnp.full((1, 1), t, jnp.int32)
             logits, cache = self._prefill(self.params, cache, {"tokens": tok})
         self.backend.insert_slot(slot, cache)
-        first = int(jnp.argmax(logits[0]))
+        first = self.sampler.sample_one(logits, req.rid, 0)
         self.pending[slot] = first
         self.events.append(EngineEvent(self.steps, "admit",
                                        {"rid": req.rid, "slot": slot,
@@ -365,7 +379,14 @@ class ServingEngine:
             self.steps += 1
             self.global_len += 1
 
-            toks = np.asarray(jnp.argmax(logits, -1), np.int32)
+            # per-slot PRNG keys thread (rid, within-request position), so a
+            # sampled stream is slot/admission/batch-mate independent
+            rids = np.zeros(self.config.num_slots, np.int64)
+            idxs = np.zeros(self.config.num_slots, np.int64)
+            for slot, req in active:
+                rids[slot] = req.rid
+                idxs[slot] = len(req.generated)
+            toks = self.sampler.sample(logits, rids, idxs)
             for slot, req in active:
                 self.pending[slot] = toks[slot]
                 fin = self.scheduler.on_token(slot, int(toks[slot]),
@@ -384,14 +405,19 @@ class ServingEngine:
                     times = [wall * s for s in shares]
                 if times:
                     self.telemetry.record_stage_times(times)
-            new_ev = self.telemetry.maybe_observe(self.steps)
-            if new_ev is not None:
+            new_spec = self.telemetry.maybe_observe(self.steps)
+            if new_spec is not None:
                 self.events.append(EngineEvent(
                     self.steps, "replan",
-                    {"blocks": new_ev.placement.stage_sizes(),
-                     "placement": new_ev.placement.describe()}))
+                    {"blocks": new_spec.stage_sizes(),
+                     "placement": new_spec.describe()}))
                 if self.config.allow_swap:
-                    self.try_swap(new_ev.placement.stage_sizes())
+                    self.try_swap(new_spec.stage_sizes())
+                # adopt the spec only once the executing layout matches it
+                # (swap applied, or sizes unchanged and only devices moved);
+                # a skipped swap keeps self.spec on what the backend runs
+                if new_spec.stage_sizes() == self.stage_blocks:
+                    self.spec = new_spec
         return self.events[before:]
 
     # -- live boundary swap ------------------------------------------------
@@ -433,6 +459,7 @@ class ServingEngine:
             "replans": self.replanner.replans,
             "backend": self.backend_kind,
             "stage_blocks": self.stage_blocks,
+            "placement": self.spec.describe(),
             "decode_wall_s": wall,
             "tok_per_s": (out["tokens_out"] / wall) if wall > 0 else 0.0,
         })

@@ -1,0 +1,69 @@
+"""Serving-engine token sampling (ROADMAP follow-up (g)).
+
+Greedy argmax kept runs deterministic; production serving needs temperature
+and top-k sampling without giving that determinism up. ``TokenSampler``
+threads a PRNG key **per request token**, not per engine step: the key for a
+sample is ``fold_in(fold_in(PRNGKey(seed), rid), token_index)``, so a
+request's sample stream depends only on (seed, request id, position within
+the request) — never on which slot it landed in, when it was admitted, or
+what shared the batch. That preserves the engine's request-isolation
+invariant (DESIGN.md §Serving) under sampling, and makes runs reproducible.
+
+``temperature == 0`` short-circuits to exact argmax — token-equal to the
+greedy engine by construction (asserted in tests/test_serving.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _sample_rows(logits: jnp.ndarray, keys: jnp.ndarray, *,
+                 temperature: float, top_k: int) -> jnp.ndarray:
+    """Per-row categorical sample. logits [B, V]; keys [B, ...] PRNG keys."""
+    x = logits.astype(jnp.float32) / temperature
+    if 0 < top_k < x.shape[-1]:
+        kth = jnp.sort(x, axis=-1)[:, -top_k][:, None]
+        x = jnp.where(x < kth, -jnp.inf, x)
+    return jax.vmap(jax.random.categorical)(keys, x).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class TokenSampler:
+    """temperature <= 0: greedy argmax. temperature > 0: categorical over
+    ``logits / temperature``, optionally restricted to the top-k logits."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.top_k >= 0, self.top_k
+        base = jax.random.PRNGKey(self.seed)
+        self._keys = jax.jit(jax.vmap(
+            lambda r, i: jax.random.fold_in(jax.random.fold_in(base, r), i)))
+        self._fn = jax.jit(functools.partial(
+            _sample_rows, temperature=float(self.temperature),
+            top_k=int(self.top_k)))
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def sample(self, logits: jnp.ndarray, rids: np.ndarray,
+               indices: np.ndarray) -> np.ndarray:
+        """logits [B, V]; rids/indices [B] per-slot request ids and
+        within-request token positions (ignored on the greedy path)."""
+        if self.greedy:
+            return np.asarray(jnp.argmax(logits, -1), np.int32)
+        keys = self._keys(jnp.asarray(rids, jnp.uint32),
+                          jnp.asarray(indices, jnp.uint32))
+        return np.asarray(self._fn(logits, keys), np.int32)
+
+    def sample_one(self, logits: jnp.ndarray, rid: int, index: int) -> int:
+        """Single-row convenience (admission prefill's first token)."""
+        return int(self.sample(logits[:1], np.asarray([rid]),
+                               np.asarray([index]))[0])

@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
-from repro.core.planner import Evaluation
+from repro.core.planner import PlacementSpec
 from repro.runtime.ft import HeartbeatMonitor, OnlineReplanner
 
 
@@ -97,18 +97,18 @@ class StageTelemetry:
             return {}
         return {(stages[i].device, i): t * scale for i, t in obs.items()}
 
-    def maybe_observe(self, step: int) -> Optional[Evaluation]:
+    def maybe_observe(self, step: int) -> Optional[PlacementSpec]:
         """Every ``interval`` steps: sweep heartbeats and feed the scaled
-        observations to the replanner. Returns a new Evaluation when the
-        replanner decided to re-plan (the engine then swaps boundaries)."""
+        observations to the replanner. Returns the new PlacementSpec when
+        the replanner decided to re-plan (the engine then swaps boundaries)."""
         if step == 0 or step % self.interval:
             return None
         if self.monitor is not None:
             self.monitor.sweep()
         scaled = self.scaled_observations()
         self.observations += 1
-        new_ev = self.replanner.observe(scaled)
-        if new_ev is not None:
+        new_spec = self.replanner.observe(scaled)
+        if new_spec is not None:
             # measurements were relative to the old placement
             self._stage_ema.clear()
-        return new_ev
+        return new_spec

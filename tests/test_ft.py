@@ -1,9 +1,16 @@
-"""Fault tolerance: heartbeats, straggler-driven re-planning."""
+"""Fault tolerance: heartbeats, straggler-driven re-planning through the
+PlacementSpec API, mid-chain failed-device exclusion."""
+import dataclasses
 import time
 
+import pytest
+
+from repro.core import cost_model as CM
 from repro.core.placement import profiles_from_arch
+from repro.core.planner import LayerProfile, PlacementSpec
 from repro.configs import get_arch, reduced
-from repro.enclave.domain import two_enclave_manager
+from repro.enclave.domain import (ResourceManager, TrustDomain,
+                                  two_enclave_manager)
 from repro.runtime.ft import HeartbeatMonitor, OnlineReplanner
 
 
@@ -18,17 +25,31 @@ def test_heartbeat_marks_dead():
     assert [d.name for d in rm.healthy_domains()] == ["pod0"]
 
 
+def test_replanner_plan_returns_spec():
+    rm = two_enclave_manager()
+    cfg = reduced(get_arch("llama3.2-1b"))
+    profs = profiles_from_arch(cfg, seq_len=1)
+    rp = OnlineReplanner(rm, profs, n=1000, delta=0.9)
+    spec = rp.plan()
+    assert isinstance(spec, PlacementSpec)
+    assert spec is rp.current_spec
+    spec.validate(len(profs), rm.resource_graph())
+    # prediction state (Evaluation) tracks the same placement
+    assert rp.current.placement.stage_sizes() == spec.stage_sizes()
+
+
 def test_replanner_replans_on_deviation():
     rm = two_enclave_manager()
     cfg = reduced(get_arch("llama3.2-1b"))
     profs = profiles_from_arch(cfg, seq_len=1)
     rp = OnlineReplanner(rm, profs, n=1000, delta=0.9)
     first = rp.plan()
-    assert len(first.placement.stages) >= 1
-    dev = first.placement.stages[0].device
-    obs = {dev: first.stage_times[0] * 10.0}  # 10x slower than predicted
+    assert first.num_segments >= 1
+    dev = first.segments[0].device
+    obs = {dev: rp.current.stage_times[0] * 10.0}  # 10x slower than predicted
     second = rp.observe(obs)
     assert second is not None and rp.replans == 1
+    assert isinstance(second, PlacementSpec)
 
 
 def test_replanner_handles_dead_domain():
@@ -36,14 +57,41 @@ def test_replanner_handles_dead_domain():
     cfg = reduced(get_arch("llama3.2-1b"))
     profs = profiles_from_arch(cfg, seq_len=1)
     rp = OnlineReplanner(rm, profs, n=1000, delta=0.9)
-    plan = rp.plan()
-    if len(plan.placement.stages) < 2:
+    spec = rp.plan()
+    if spec.num_segments < 2:
         return  # solver chose a single domain; nothing to kill
-    victim = plan.placement.stages[-1].device
+    victim = spec.segments[-1].device
     rm.mark_unhealthy(victim)
     new = rp.observe({})
     assert new is not None
-    assert all(s.device != victim for s in new.placement.stages)
+    assert victim not in new.devices()
+
+
+def test_replanner_excludes_mid_chain_failure():
+    """A dead device must drop out of the plan wherever it sat — here the
+    MIDDLE untrusted segment of a non-prefix T|U|U chain, not the tail."""
+    rm = ResourceManager()
+    rm.register(TrustDomain("pod0", True, 256, 0, CM.TPU_POD_TRUSTED))
+    rm.register(TrustDomain("pod1", False, 256, 1, CM.TPU_POD))
+    rm.register(TrustDomain(
+        "pod2", False, 256, 2,
+        dataclasses.replace(CM.TPU_POD, name="tpu-pod-2")))
+    sims = [0.1] * 12
+    profs = [LayerProfile(f"b{i}", 6e12, 1e6, sims[i], params_bytes=6e9,
+                          act_bytes=1e6) for i in range(12)]
+    rp = OnlineReplanner(rm, profs, n=10_000, delta=0.5, min_stages=3)
+    spec = rp.plan()
+    assert spec.num_segments == 3
+    assert [s.domain for s in spec.segments] == \
+        ["trusted", "untrusted", "untrusted"]
+    victim = spec.segments[1].device            # mid-chain, not the tail
+    rm.mark_unhealthy(victim)
+    new = rp.observe({})
+    assert new is not None
+    assert victim not in new.devices()
+    new.validate(len(profs), rm.resource_graph())
+    # survivors still cover the full depth contiguously (validate checks it)
+    assert new.num_layers == len(profs)
 
 
 def test_replanner_stage_keyed_observation_no_collision():
@@ -54,14 +102,14 @@ def test_replanner_stage_keyed_observation_no_collision():
     profs = profiles_from_arch(cfg, seq_len=1)
     rp = OnlineReplanner(rm, profs, n=1000, delta=0.9, min_stages=2)
     first = rp.plan()
-    assert len(first.placement.stages) == 2
+    assert first.num_segments == 2
     # deviation on stage 0 only, keyed by (device, stage index)
-    key0 = (first.placement.stages[0].device, 0)
-    obs = {key0: first.stage_times[0] * 10.0,
-           (first.placement.stages[1].device, 1): first.stage_times[1]}
+    key0 = (first.segments[0].device, 0)
+    obs = {key0: rp.current.stage_times[0] * 10.0,
+           (first.segments[1].device, 1): rp.current.stage_times[1]}
     assert rp.observe(obs) is not None
     assert rm.get(key0[0]).derate_factor < 1.0
-    assert rm.get(first.placement.stages[1].device).derate_factor == 1.0
+    assert rm.get(first.segments[1].device).derate_factor == 1.0
 
 
 def test_replanner_derate_bounded_and_cache_capped():
@@ -73,8 +121,8 @@ def test_replanner_derate_bounded_and_cache_capped():
     profs = profiles_from_arch(cfg, seq_len=1)
     rp = OnlineReplanner(rm, profs, n=1000, delta=0.9, min_stages=2,
                          derate_floor=0.25)
-    plan = rp.plan()
-    dev = plan.placement.stages[1].device
+    spec = rp.plan()
+    dev = spec.segments[1].device
     base = rm.get(dev).base_device.flops_per_s
     for i in range(2 * cap):
         cur = rp.current

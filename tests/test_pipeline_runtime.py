@@ -69,6 +69,78 @@ def test_pipelined_decode_uneven_stages_exact_f32(subproc, blocks):
     assert "OK" in out
 
 
+NON_PREFIX_CODE = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+import repro.models.layers as L
+L.DEFAULT_DTYPE = jnp.float32
+from repro.configs import get_arch, reduced
+from repro.core import cost_model as CM
+from repro.core.planner import (LayerProfile, PlacementSpec, ResourceGraph,
+                                solve)
+from repro.models.api import build_model
+from repro.runtime.pipeline import PipelinedDecoder
+
+# similarity bump at layer 3's input: that layer must return to a TEE, so
+# the optimum sandwiches a fast untrusted device between two slow enclaves
+sims = [0.3, 0.3, 0.9, 0.1]
+profs = [LayerProfile(f'b{i}', 2e8, 2e5, sims[i], params_bytes=1e6)
+         for i in range(4)]
+g = ResourceGraph({'tee0': CM.TEE,
+                   'tee1': dataclasses.replace(CM.TEE, name='tee1'),
+                   'gpu0': CM.GPU}, {}, CM.WAN_30MBPS)
+px = solve(profs, g, n=10_800, delta=0.5, solver='exhaustive')
+sg = solve(profs, g, n=10_800, delta=0.5, solver='segment-dp')
+assert sg.best.t_chunk < px.best.t_chunk * (1 - 1e-6), \\
+    (sg.best.t_chunk, px.best.t_chunk)
+spec = PlacementSpec.from_placement(sg.best.placement, g)
+assert not spec.is_prefix(g), spec.describe()
+assert spec.num_segments == 3, spec.describe()
+print('plan:', spec.describe(), 'blocks:', spec.stage_sizes())
+
+cfg = reduced(get_arch('llama3.2-1b'))
+api = build_model(cfg, max_seq=32)
+params = api.init(jax.random.PRNGKey(0))
+params = jax.tree.map(lambda x: x.astype(jnp.float32)
+                      if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+B = 6
+tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 16), 0,
+                            cfg.vocab_size, jnp.int32)
+_, cache = jax.jit(api.prefill_fn)(params, {'tokens': tokens})
+seg = api.model.segments[0].name
+cache[seg] = jax.tree.map(
+    lambda a: jnp.pad(a, [(0,0)]*3+[(0,16)]+[(0,0)]) if a.ndim == 5 else a,
+    cache[seg])
+new_tok = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0,
+                             cfg.vocab_size, jnp.int32)
+ref_logits, _ = jax.jit(api.decode_fn)(params, cache, {'tokens': new_tok})
+
+mesh = jax.make_mesh((3,), ('pod',), axis_types=(AxisType.Auto,))
+with jax.set_mesh(mesh):
+    dec = PipelinedDecoder.from_spec(api, mesh, spec, num_microbatches=3,
+                                     seal_boundary=False)
+    assert dec.stage_counts == spec.stage_sizes()
+    assert dec.stage_devices == spec.devices()
+    lg, _ = jax.jit(dec.build())(params, cache, {'tokens': new_tok},
+                                 jnp.uint32(7))
+rel = np.abs(np.asarray(lg) - np.asarray(ref_logits)).max() / \\
+    (np.abs(np.asarray(ref_logits)).max() + 1e-9)
+assert rel < 1e-5, rel
+# token-exact: the decoded tokens equal the single-device reference
+assert (jnp.argmax(lg, -1) == jnp.argmax(ref_logits, -1)).all()
+print('OK')
+"""
+
+
+def test_pipelined_decode_executes_non_prefix_plan_token_exact(subproc):
+    """Acceptance: the segment solver finds a strictly-better-than-prefix
+    plan (slow enclave sandwich) and PipelinedDecoder.from_spec executes it
+    with decode output equal to the single-device reference."""
+    out = subproc(NON_PREFIX_CODE, devices=3)
+    assert "OK" in out
+
+
 def test_pipelined_decode_with_sealing(subproc):
     """Sealed boundaries add int8 quantization noise — bounded, not exact."""
     out = subproc(PIPE_CODE.format(arch="llama3.2-1b", seal="True", tol=0.05,

@@ -9,6 +9,7 @@ from repro.core.pipeline_sim import closed_form_completion, simulate_pipeline
 from repro.core.placement import (Placement, ResourceGraph, Stage,
                                   enumerate_placements, evaluate,
                                   profiles_from_cnn, solve)
+from repro.core.planner import solve as plan_solve
 from repro.core.privacy import resolution_similarity
 from repro.models.cnn import CNN_MODELS
 
@@ -119,6 +120,79 @@ def test_paper_claim_proposed_best_and_headline():
         assert s["proposed"] >= s["tee+gpu"] - 1e-9, (m, s)
         best = max(best, s["proposed"])
     assert 3.5 < best < 5.5, best   # paper headline: up to 4.7x
+
+
+# ---------------------------------------------------------------------------
+# Segment space: provably non-prefix optima (DistPrivacy-style placement)
+# ---------------------------------------------------------------------------
+from repro.core.placement import LayerProfile, PlacementSpec  # noqa: E402
+
+
+def sandwich_instance(m=8, bump_at=3):
+    """Slow enclaves + fast untrusted devices, with a similarity *bump*: the
+    input of layer ``bump_at`` resembles the original input again (an
+    autoencoder-style reconstruction), so that one layer must return to a
+    TEE while its neighbors may run untrusted. The prefix space cannot
+    express trusted-after-untrusted at all, so its best plan keeps every
+    layer up to the bump inside the slow TEEs."""
+    sims = [0.3] * m
+    sims[bump_at - 1] = 0.9             # input of layer bump_at is exposed
+    profs = [LayerProfile(f"l{i}", 2e8, 2e5, sims[i], params_bytes=1e6)
+             for i in range(m)]
+    g = graph({"tee1": CM.TEE, "tee2": tee2(), "gpu0": CM.GPU,
+               "gpu1": dataclasses.replace(CM.GPU, name="gpu1")})
+    return profs, g
+
+
+def test_non_prefix_optimum_slow_enclave_sandwich():
+    """The segment solver finds a strictly better plan than the best prefix
+    plan, and that plan interleaves trusted segments between untrusted ones
+    (a slow enclave sandwiched between fast untrusted devices)."""
+    profs, g = sandwich_instance()
+    px = solve(profs, g, n=N, delta=0.5)[0]         # legacy prefix oracle
+    sg = plan_solve(profs, g, n=N, delta=0.5, solver="segment-dp")
+    so = plan_solve(profs, g, n=N, delta=0.5, solver="segment-exhaustive")
+    assert abs(sg.best.t_chunk - so.best.t_chunk) <= 1e-9 * so.best.t_chunk
+    assert sg.best.t_chunk < px.t_chunk * (1 - 1e-6), \
+        (sg.best.t_chunk, px.t_chunk)
+    spec = PlacementSpec.from_placement(sg.best.placement, g)
+    assert not spec.is_prefix(g)
+    doms = spec.domains()
+    # at least one trusted segment strictly between untrusted segments
+    assert any(doms[i] == "trusted" and "untrusted" in doms[:i]
+               and "untrusted" in doms[i + 1:] for i in range(len(doms)))
+    spec.validate(len(profs), g)
+    assert sg.best.feasible and sg.best.max_similarity < 0.5
+
+
+def test_non_prefix_optimum_two_untrusted_segments():
+    """Monotone-decaying similarity, one slow TEE, two fast untrusted
+    devices: splitting the untrusted tail across both devices lowers the
+    pipeline bottleneck — inexpressible in the prefix space (one suffix)."""
+    # layer 0 is tiny (cheap TEE entry); the heavy tail dominates the
+    # pipeline bottleneck, so halving it across two untrusted devices wins
+    profs = [LayerProfile(f"l{i}", 1e6 if i == 0 else 2e9, 2e5, 0.3,
+                          params_bytes=1e6) for i in range(8)]
+    g = graph({"tee1": CM.TEE, "gpu0": CM.GPU,
+               "gpu1": dataclasses.replace(CM.GPU, name="gpu1")})
+    px = solve(profs, g, n=N, delta=0.5)[0]
+    sg = plan_solve(profs, g, n=N, delta=0.5, solver="segment-dp")
+    assert sg.best.t_chunk < px.t_chunk * (1 - 1e-6)
+    spec = PlacementSpec.from_placement(sg.best.placement, g)
+    assert not spec.is_prefix(g)
+    assert spec.domains().count("untrusted") == 2
+
+
+def test_segment_evaluate_enforces_privacy_on_interior_segments():
+    """C2 applies to every untrusted segment, not just a suffix: an interior
+    untrusted segment covering the bump layer is infeasible."""
+    from repro.core.placement import Placement as P, Stage as S
+    profs, g = sandwich_instance()
+    bad = P((S("tee1", 0, 1), S("gpu0", 1, 4), S("tee2", 4, 8)))
+    ev = evaluate(bad, profs, g, N, 0.5)    # layer 3's input sim = 0.9
+    assert not ev.feasible and ev.max_similarity >= 0.5
+    good = P((S("tee1", 0, 1), S("gpu0", 1, 3), S("tee2", 3, 8)))
+    assert evaluate(good, profs, g, N, 0.5).feasible
 
 
 def test_paper_claim_nopipe_equals_teegpu_decision():

@@ -172,6 +172,7 @@ def test_dp_faster_than_exhaustive_at_depth():
 # Layer 3: re-planning through the ResourceManager
 # ---------------------------------------------------------------------------
 def test_resource_manager_plan_and_replan_on_failure():
+    from repro.core.planner import PlacementSpec
     from repro.enclave.domain import ResourceManager, TrustDomain
     rm = ResourceManager()
     t2 = dataclasses.replace(CM.TPU_POD_TRUSTED, name="cc2")
@@ -181,17 +182,19 @@ def test_resource_manager_plan_and_replan_on_failure():
     sims = [max(0.05, 0.9 ** (i + 1)) for i in range(16)]
     profs = [LayerProfile(f"b{i}", 6e9, 1e6, sims[i], params_bytes=6e9,
                           act_bytes=1e6) for i in range(16)]
-    res = rm.plan(profs, n=10_000, delta=0.5, solver="dp")
-    assert rm.last_plan is res
-    assert res.best.feasible
-    victim = res.best.placement.stages[-1].device
-    res2 = rm.replan_on_failure(victim)
-    assert all(s.device != victim for s in res2.best.placement.stages)
+    spec = rm.plan(profs, n=10_000, delta=0.5, solver="dp")
+    assert isinstance(spec, PlacementSpec)
+    assert rm.last_spec is spec and rm.last_plan.best.feasible
+    spec.validate(len(profs), rm.resource_graph())
+    victim = spec.segments[-1].device
+    spec2 = rm.replan_on_failure(victim)
+    assert victim not in spec2.devices()
     assert not rm.get(victim).healthy
-    # cross-check the incremental re-plan against a fresh exhaustive solve
+    # cross-check the incremental re-plan against a fresh segment oracle
     ex = solve(profs, rm.resource_graph(), n=10_000, delta=0.5,
-               solver="exhaustive")
-    assert abs(res2.best.t_chunk - ex.best.t_chunk) <= 1e-9 * ex.best.t_chunk
+               solver="segment-exhaustive")
+    assert abs(rm.last_plan.best.t_chunk - ex.best.t_chunk) \
+        <= 1e-9 * ex.best.t_chunk
 
 
 def test_replan_before_plan_raises():
@@ -259,6 +262,125 @@ def test_pipelined_decoder_rejects_bad_boundaries():
         with pytest.raises(AssertionError):
             PipelinedDecoder(api, None, num_stages=2, num_microbatches=2,
                              stage_blocks=bad)
+
+
+# ---------------------------------------------------------------------------
+# Segment space (PlacementSpec): solvers + spec surface
+# ---------------------------------------------------------------------------
+def test_segment_solvers_match_segment_oracle_randomized():
+    """segment-dp finds the segment-exhaustive optimum; segment-beam is an
+    upper bound when its width truncated (hypothesis twin in
+    test_property.py)."""
+    from repro.core.planner import solve as psolve
+    rng = np.random.default_rng(11)
+    for _ in range(15):
+        m = int(rng.integers(2, 9))
+        r = int(rng.integers(1, 3))
+        u = int(rng.integers(0, 3))
+        profs, g = random_instance(rng, m, r, u)
+        n = int(rng.integers(1, 5000))
+        delta = float(rng.uniform(0.05, 1.0))
+        ex = psolve(profs, g, n=n, delta=delta, solver="segment-exhaustive")
+        for s in ("segment-dp", "segment-beam"):
+            res = psolve(profs, g, n=n, delta=delta, solver=s)
+            if s == "segment-beam" and res.truncated:
+                assert res.best.t_chunk >= ex.best.t_chunk * (1 - 1e-9)
+            else:
+                assert abs(res.best.t_chunk - ex.best.t_chunk) \
+                    <= 1e-9 * ex.best.t_chunk, (s, res.best.placement)
+
+
+def test_segment_space_never_worse_than_prefix():
+    """The prefix tree is a strict subset of the segment space."""
+    rng = np.random.default_rng(12)
+    for _ in range(10):
+        profs, g = random_instance(rng, int(rng.integers(3, 8)), 2, 1)
+        px = solve(profs, g, n=500, delta=0.8, solver="exhaustive")
+        sg = solve(profs, g, n=500, delta=0.8, solver="segment-dp")
+        assert sg.best.t_chunk <= px.best.t_chunk * (1 + 1e-9)
+
+
+def test_segment_solvers_honor_max_trusted():
+    """max_trusted keeps the prefix semantics in the segment space: only
+    the first k trusted devices (graph order) are eligible."""
+    from repro.core.planner import solve as psolve
+    rng = np.random.default_rng(13)
+    profs, g = random_instance(rng, 6, 3, 1)
+    for s in ("segment-exhaustive", "segment-dp", "segment-beam"):
+        res = psolve(profs, g, n=500, delta=1.1, solver=s, max_trusted=1)
+        used_trusted = [st.device for st in res.best.placement.stages
+                        if g.devices[st.device].trusted]
+        assert set(used_trusted) <= {g.trusted()[0]}, (s, used_trusted)
+
+
+def test_space_argument_maps_short_solver_names():
+    from repro.core.planner import (DPSolver, SegmentDPSolver, get_solver)
+    assert isinstance(get_solver("dp"), DPSolver)
+    assert isinstance(get_solver("dp", "segment"), SegmentDPSolver)
+    assert isinstance(get_solver("segment-dp"), SegmentDPSolver)
+    with pytest.raises(ValueError, match="unknown space"):
+        get_solver("dp", "diagonal")
+
+
+def test_placement_spec_roundtrip_and_validation():
+    from repro.core.planner import (Placement, PlacementSpec, Segment, Stage,
+                                    TRUSTED, UNTRUSTED)
+    g = full_graph()
+    p = Placement((Stage("tee1", 0, 3), Stage("gpu", 3, 7),
+                   Stage("tee2", 7, 10)))
+    spec = PlacementSpec.from_placement(p, g)
+    assert spec.domains() == (TRUSTED, UNTRUSTED, TRUSTED)
+    assert spec.stage_sizes() == (3, 4, 3)
+    assert spec.devices() == ("tee1", "gpu", "tee2")
+    assert spec.device_of(5) == "gpu"
+    assert spec.to_placement() == p
+    assert not spec.is_prefix(g)            # untrusted mid-chain
+    # prefix-expressible spec is recognized
+    pref = PlacementSpec.from_placement(
+        Placement((Stage("tee1", 0, 5), Stage("gpu", 5, 10))), g)
+    assert pref.is_prefix(g)
+    # validation failures
+    with pytest.raises(AssertionError, match="gap"):
+        PlacementSpec((Segment("tee1", 0, 3), Segment("gpu", 4, 10,
+                                                      UNTRUSTED))).validate()
+    with pytest.raises(AssertionError, match="C1"):
+        PlacementSpec((Segment("gpu", 0, 10, UNTRUSTED),)).validate()
+    with pytest.raises(AssertionError, match="reused"):
+        PlacementSpec((Segment("tee1", 0, 3),
+                       Segment("tee1", 3, 10))).validate()
+    with pytest.raises(AssertionError, match="disagrees"):
+        PlacementSpec((Segment("gpu", 0, 10, TRUSTED),)).validate(graph=g)
+
+
+def test_spec_cut_costs_price_transfer_seal_and_leakage():
+    from repro.core.planner import Placement, PlacementSpec, Stage
+    from repro.core.privacy import cut_exposure
+    profs = profiles_from_cnn(CNN_MODELS["alexnet"])
+    g = full_graph()
+    M = len(profs)
+    spec = PlacementSpec.from_placement(
+        Placement((Stage("tee1", 0, 2), Stage("tee2", 2, 5),
+                   Stage("gpu", 5, M))), g)
+    cuts = spec.cut_costs(profs, g)
+    assert [c.boundary for c in cuts] == [2, 5]
+    tee_tee, tee_gpu = cuts
+    assert tee_tee.seal_s > 0 and not tee_tee.trust_crossing
+    assert tee_tee.leakage == 0.0           # stays inside TEEs
+    assert tee_gpu.seal_s == 0.0 and tee_gpu.trust_crossing
+    assert tee_gpu.leakage == pytest.approx(
+        cut_exposure(profs[4].similarity, profs[4].out_bytes))
+    assert all(c.transfer_s > 0 for c in cuts)
+    assert spec.total_leakage(profs, g) == pytest.approx(tee_gpu.leakage)
+
+
+def test_spec_boundaries_shim_equivalence_and_deprecation():
+    from repro.core.planner import spec_from_boundaries
+    g = full_graph()
+    with pytest.warns(DeprecationWarning):
+        spec = spec_from_boundaries([3, 7], ["tee1", "tee2", "gpu"], 10, g)
+    assert spec.stage_sizes() == (3, 4, 3)
+    with pytest.warns(DeprecationWarning):
+        assert spec.boundaries() == [3, 7]
 
 
 def test_min_stages_constraint_and_solver_equivalence():

@@ -80,6 +80,36 @@ def test_dp_and_beam_match_exhaustive_optimum(m, r, u, delta, n, pipelined,
             assert abs(got - ref) <= 1e-9 * ref, (s, got, ref)
 
 
+@given(st.integers(2, 8), st.integers(1, 2), st.integers(0, 2),
+       st.floats(0.05, 0.99), st.integers(1, 5000), st.booleans(),
+       st.integers(0, 2 ** 20))
+def test_segment_dp_matches_segment_exhaustive(m, r, u, delta, n, pipelined,
+                                               seed):
+    """Multi-segment (PlacementSpec) search: SegmentDPSolver finds the
+    SegmentExhaustiveSolver optimum on small graphs — any device order,
+    trusted/untrusted segments interleaving (the tentpole invariant)."""
+    from conftest import random_placement_instance
+    rng = np.random.default_rng(seed)
+    profs, g = random_placement_instance(rng, m, r, u)
+    ex = planner_solve(profs, g, n=n, delta=delta,
+                       solver="segment-exhaustive", pipelined=pipelined)
+    dp = planner_solve(profs, g, n=n, delta=delta, solver="segment-dp",
+                       pipelined=pipelined)
+    ref = ex.best.t_chunk if pipelined else ex.best.t_frame
+    got = dp.best.t_chunk if pipelined else dp.best.t_frame
+    assert abs(got - ref) <= 1e-9 * ref, \
+        (dp.best.placement, ex.best.placement)
+    # the prefix space is a subset: its optimum is never better
+    try:
+        px = planner_solve(profs, g, n=n, delta=delta, solver="exhaustive",
+                           pipelined=pipelined)
+    except ValueError:
+        px = None
+    if px is not None:
+        pref = px.best.t_chunk if pipelined else px.best.t_frame
+        assert got <= pref * (1 + 1e-9)
+
+
 @given(st.lists(st.floats(1e-3, 5.0), min_size=2, max_size=6),
        st.integers(1, 500))
 def test_uneven_stage_sim_matches_closed_form(stages, n):
