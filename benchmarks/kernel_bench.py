@@ -33,6 +33,26 @@ def main():
         KO.flash_attention(q, k, v, causal=True, use_kernel=False)))
     flops = 4 * 512 * 512 / 2 * 4 * 64
     print(f"kernel:flash_oracle_512,{us:.0f},{flops / (us / 1e6) / 1e9:.1f}GFLOP/s")
+
+    # paged decode attention: B decode rows over block-table-indexed pools
+    B, H, KVH, D, Pg, MP = 8, 8, 2, 64, 16, 8
+    N = B * MP + 1
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    pq = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (N, KVH, Pg, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (N, KVH, Pg, D), jnp.float32)
+    bt = jnp.arange(1, B * MP + 1, dtype=jnp.int32).reshape(B, MP)
+    sl = jnp.full((B,), MP * Pg - 3, jnp.int32)
+    _, us = timed(lambda: jax.block_until_ready(
+        KO.paged_attention(pq, kp, vp, bt, sl, use_kernel=False)))
+    toks = B * MP * Pg
+    gbs = toks * KVH * D * 4 * 2 / (us / 1e6) / 1e9
+    print(f"kernel:paged_oracle_b{B}x{MP * Pg},{us:.0f},{gbs:.2f}GB/s")
+    y_ref = KO.paged_attention(pq, kp, vp, bt, sl, use_kernel=False)
+    y_ker = KO.paged_attention(pq, kp, vp, bt, sl, use_kernel=True)
+    err = float(jnp.max(jnp.abs(y_ker - y_ref)))
+    # interpret mode off-TPU: parity, not wall time
+    print(f"kernel:paged_kernel_parity,0,max_err={err:.2e}")
     return 0
 
 

@@ -10,7 +10,8 @@ import time
 def main() -> None:
     from . import (fig8_latency_resolution, fig10_user_study_proxy,
                    fig12_partition_speedup, fig13_breakdown, lm_placement,
-                   lm_similarity, kernel_bench, roofline, solver_scaling)
+                   lm_similarity, kernel_bench, roofline, serving_throughput,
+                   solver_scaling)
     benches = [
         ("fig8_latency_resolution", fig8_latency_resolution.main),
         ("fig10_user_study_proxy", fig10_user_study_proxy.main),
@@ -20,6 +21,10 @@ def main() -> None:
         ("solver_scaling", solver_scaling.main),
         ("lm_similarity", lm_similarity.main),
         ("kernel_bench", kernel_bench.main),
+        # paged-vs-timeline / batched-vs-per-token serving comparison
+        # (smoke config; the standalone CLI runs the full matrix)
+        ("serving_throughput",
+         lambda: serving_throughput.main(["--smoke", "--json", ""])),
         ("roofline", roofline.main),
     ]
     print("name,us_per_call,derived")

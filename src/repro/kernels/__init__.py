@@ -1,1 +1,1 @@
-from .ops import seal, unseal, flash_attention
+from .ops import seal, unseal, flash_attention, paged_attention

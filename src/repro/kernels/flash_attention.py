@@ -27,8 +27,11 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
                   seq_k: int, causal: bool, window: int, scale: float):
+    # the leading batch*heads dim is squeezed out by the BlockSpecs (None
+    # block dim), so every ref is 2D and all loads are pure slices — mixing
+    # int indices into pl.load breaks interpret-mode state discharge
     qi = pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32) * scale                 # [bQ, D]
+    q = q_ref[:].astype(jnp.float32) * scale                 # [bQ, D]
     D = q.shape[-1]
 
     q_start = qi * block_q
@@ -41,10 +44,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
 
     def body(ki, carry):
         m, l, acc = carry
-        k_tile = pl.load(k_ref, (0, pl.dslice(ki * block_k, block_k),
-                                 pl.dslice(None)))            # [bK, D]
-        v_tile = pl.load(v_ref, (0, pl.dslice(ki * block_k, block_k),
-                                 pl.dslice(None)))
+        k_tile = k_ref[pl.dslice(ki * block_k, block_k), :]   # [bK, D]
+        v_tile = v_ref[pl.dslice(ki * block_k, block_k), :]
         s = jax.lax.dot_general(q, k_tile.astype(jnp.float32),
                                 (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # [bQ,bK]
@@ -70,7 +71,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
     a0 = jnp.zeros((block_q, D), jnp.float32)
     m, l, acc = jax.lax.fori_loop(0, num_k, body, (m0, l0, a0))
     out = acc / jnp.maximum(l, 1e-30)[:, None]
-    o_ref[0] = out.astype(o_ref.dtype)
+    o_ref[:] = out.astype(o_ref.dtype)
 
 
 def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
@@ -93,11 +94,11 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, D), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, Sk, D), lambda b, i: (b, 0, 0)),
-            pl.BlockSpec((1, Sk, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, bq, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, Sk, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, Sk, D), lambda b, i: (b, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, D), lambda b, i: (b, i, 0)),
+        out_specs=pl.BlockSpec((None, bq, D), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
         interpret=interpret,
     )(q, k, v)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from . import ref
 from .seal import seal_pallas, unseal_pallas
 from .flash_attention import flash_attention_pallas
+from .paged_attention import paged_attention_pallas
 
 
 def _on_tpu() -> bool:
@@ -64,3 +65,28 @@ def flash_attention(q, k, v, causal: bool = True, window: int = 0,
             vf.reshape(B, H, -1, D), causal=causal, window=window,
         ).reshape(B * H, S, D)
     return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention (GQA-aware wrapper)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                    use_kernel: bool = False):
+    """q: [B, H, D] (one decode token per row); k_pages, v_pages:
+    [num_pages, KVH, page_size, D]; block_tables: [B, max_pages] int32;
+    seq_lens: [B] int32. Returns [B, H, D].
+
+    use_kernel=True routes to the fused Pallas kernel (block-table-driven
+    page DMA, interpret mode off-TPU); default is the jnp page-gather
+    oracle, which doubles as the portable fast path."""
+    if use_kernel:
+        B, H, D = q.shape
+        KVH = k_pages.shape[1]
+        rep = H // KVH
+        out = paged_attention_pallas(
+            q.reshape(B, KVH, rep, D), k_pages, v_pages,
+            block_tables, seq_lens, interpret=not _on_tpu())
+        return out.reshape(B, H, D)
+    return ref.paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                   seq_lens)

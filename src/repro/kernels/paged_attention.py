@@ -1,0 +1,104 @@
+"""Fused paged decode-attention (Pallas, TPU target).
+
+One decode token per batch row attends over a block-table-indexed paged KV
+cache without ever materializing the gathered [B, S, D] key/value tensors:
+the block table rides in as a scalar-prefetch argument, so each grid step's
+``BlockSpec`` index map dereferences ``block_tables[b, p]`` and the DMA
+engine streams exactly that [page_size, D] page from the pool in HBM into
+VMEM — the gather *is* the kernel's input pipeline.
+
+Grid: (batch, kv_heads, max_pages). For a fixed (b, h) the page dimension is
+minor, so the online-softmax running (max, sum, acc) lives in VMEM scratch
+across page steps and the output block (written on the last page step) stays
+resident. Tokens past ``seq_lens[b]`` are masked; rows with ``seq_lens == 0``
+(idle cache slots) produce a harmless uniform average of the reserved null
+page, which callers ignore.
+
+Off-TPU the same body runs in ``interpret=True`` mode — the parity target is
+``ref.paged_attention_ref`` (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page_size: int, max_pages: int,
+                  scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _():
+        m_ref[:] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[:] = jnp.zeros_like(l_ref)
+        acc_ref[:] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # [rep, D]
+    k = k_ref[0, 0].astype(jnp.float32)                      # [Pg, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+    rep = q.shape[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [rep, Pg]
+    k_pos = p * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (rep, page_size), 1)
+    s = jnp.where(k_pos < sl_ref[b], s, NEG_INF)
+
+    m_prev, l_prev = m_ref[:, 0], l_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    pr = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    m_ref[:, 0] = m_new
+    l_ref[:, 0] = l_prev * corr + pr.sum(axis=1)
+    pv = jax.lax.dot_general(pr, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[:] = acc_ref[:] * corr[:, None] + pv
+
+    @pl.when(p == max_pages - 1)
+    def _():
+        out = acc_ref[:] / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pages, v_pages, block_tables, seq_lens, *,
+                           interpret: bool = True):
+    """q: [B, KVH, rep, D]; k_pages, v_pages: [N, KVH, Pg, D];
+    block_tables: [B, MP] int32; seq_lens: [B] int32. Returns q-shaped."""
+    B, KVH, rep, D = q.shape
+    Pg = k_pages.shape[2]
+    MP = block_tables.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, MP),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, D), lambda b, h, p, bt, sl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Pg, D),
+                         lambda b, h, p, bt, sl: (bt[b, p], h, 0, 0)),
+            pl.BlockSpec((1, 1, Pg, D),
+                         lambda b, h, p, bt, sl: (bt[b, p], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, D),
+                               lambda b, h, p, bt, sl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),       # running max
+            pltpu.VMEM((rep, 1), jnp.float32),       # running sum
+            pltpu.VMEM((rep, D), jnp.float32),       # output accumulator
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, page_size=Pg, max_pages=MP,
+                               scale=1.0 / math.sqrt(D))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, rep, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, seq_lens, q, k_pages, v_pages)

@@ -42,6 +42,46 @@ def unseal_ref(cipher: jax.Array, scales: jax.Array, key: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# paged decode attention — page-gather oracle
+# ---------------------------------------------------------------------------
+def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens):
+    """Single-token attention over a block-table-indexed paged KV cache.
+
+    q: [B, H, D] (one decode token per batch row);
+    k_pages, v_pages: [num_pages, KVH, page_size, D] shared page pools;
+    block_tables: [B, max_pages] int32 — page ids of each row's sequence, in
+    order (unused tail entries point at the reserved null page 0);
+    seq_lens: [B] int32 — valid tokens per row (token t of row b lives in
+    page ``block_tables[b, t // page_size]`` at offset ``t % page_size``).
+
+    Gathers each row's pages into a contiguous [max_pages * page_size] view
+    and runs masked softmax attention in f32 — this is both the allclose
+    target for the Pallas kernel and the portable jnp fast path the models
+    use off-TPU (the gather touches max_pages * page_size tokens, bounded by
+    per-request capacity instead of the engine-lifetime horizon).
+    """
+    B, H, D = q.shape
+    KVH, Pg = k_pages.shape[1], k_pages.shape[2]
+    rep = H // KVH
+    MP = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    # [B, MP, KVH, Pg, D] -> [B, KVH, MP * Pg, D]
+    k = jnp.transpose(k_pages[block_tables], (0, 2, 1, 3, 4)
+                      ).reshape(B, KVH, MP * Pg, D)
+    v = jnp.transpose(v_pages[block_tables], (0, 2, 1, 3, 4)
+                      ).reshape(B, KVH, MP * Pg, D)
+    qf = q.reshape(B, KVH, rep, D).astype(jnp.float32)
+    s = jnp.einsum("bgrd,bgsd->bgrs", qf, k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(MP * Pg)[None, :] < seq_lens[:, None]       # [B, S]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrs,bgsd->bgrd", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # flash attention (causal, optional sliding window) — naive oracle
 # ---------------------------------------------------------------------------
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):

@@ -61,7 +61,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--arrival-every", type=int, default=2,
                     help="submit one request every K engine steps")
     ap.add_argument("--max-seq", type=int, default=0,
-                    help="engine timeline horizon (0 = auto-size)")
+                    help="legacy timeline horizon (0 = auto-size)")
+    ap.add_argument("--kv-layout", default="paged",
+                    choices=["paged", "timeline"],
+                    help="paged per-slot KV cache (unbounded lifetime) or "
+                         "the legacy shared-position timeline")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="shared page-pool size (0 = all slots at full "
+                         "request capacity; smaller pools exercise "
+                         "admission back-pressure)")
+    ap.add_argument("--per-token-prefill", action="store_true",
+                    help="disable one-call batched prefill (admission-"
+                         "latency baseline)")
     ap.add_argument("--no-seal", action="store_true")
     ap.add_argument("--topology", default="two-enclave",
                     choices=sorted(TOPOLOGIES),
@@ -102,6 +115,10 @@ def _make_engine(api, params, mesh, args) -> ServingEngine:
         num_slots=args.slots, num_stages=args.stages,
         num_microbatches=args.microbatches, max_seq=max_seq,
         prompt_capacity=args.prompt_len,
+        kv_layout=args.kv_layout, page_size=args.page_size,
+        num_pages=args.num_pages,
+        request_capacity=args.prompt_len + args.max_new,
+        batched_prefill=not args.per_token_prefill,
         seal_boundary=not args.no_seal, solver=args.solver,
         space=args.space, delta=args.delta,
         temperature=args.temperature, top_k=args.top_k,
@@ -126,6 +143,12 @@ def _serve_stream(eng: ServingEngine, args, cfg):
             reqs.append(eng.submit(prompts[k], args.max_new))
             k += 1
         moved = eng.step()
+        if eng.stalled:
+            # permanent back-pressure (legacy timeline exhausted): the FIFO
+            # head can never run, so later submissions can't either — stop
+            # driving gracefully (engine steps are frozen; waiting or
+            # submitting more would spin forever)
+            break
         if k < len(prompts) and not moved and not eng.scheduler.has_work():
             # idle tick with arrivals pending: admit next immediately
             reqs.append(eng.submit(prompts[k], args.max_new))
@@ -163,7 +186,8 @@ def main(argv=None):
         eng = _make_engine(api, params, mesh, args)
         if with_inject and inject:
             eng.telemetry.inject(*inject)
-        print(f"backend={eng.backend_kind} stage_blocks={eng.stage_blocks} "
+        print(f"backend={eng.backend_kind} kv_layout={eng.kv_layout} "
+              f"stage_blocks={eng.stage_blocks} "
               f"placement={eng.spec.describe()}")
         if args.require_non_prefix:
             graph = eng.rm.resource_graph()
@@ -180,7 +204,9 @@ def main(argv=None):
         print(f"served {st['completed']} requests, {st['tokens_out']} tokens "
               f"in {st['decode_wall_s']:.2f}s decode "
               f"({st['tok_per_s']:.1f} tok/s), replans={st['replans']} "
-              f"swaps={st['swaps']} final_blocks={st['stage_blocks']}")
+              f"swaps={st['swaps']} final_blocks={st['stage_blocks']} "
+              f"prefill_calls={st['prefill_calls']} "
+              f"admission_p50={st.get('admission_p50_ms', 0):.1f}ms")
         return eng, reqs
 
     eng, reqs = one_run(with_inject=True)

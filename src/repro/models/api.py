@@ -55,6 +55,34 @@ class ModelAPI:
         cache["len"] = jnp.int32(fill_len)
         return cache
 
+    # -- paged per-slot KV cache (serving hot path) ---------------------
+    @property
+    def paged_ok(self) -> bool:
+        """Paged decode support (dense/MoE/VLM with a plain full-attention
+        KV cache; recurrent-state and sliding-window families keep the
+        legacy layouts)."""
+        return bool(getattr(self.model, "paged_ok", False))
+
+    def init_paged_cache_specs(self, num_slots: int, num_pages: int,
+                               page_size: int, pages_per_slot: int):
+        return self.model.init_paged_cache_specs(num_slots, num_pages,
+                                                 page_size, pages_per_slot)
+
+    def init_paged_cache(self, num_slots: int, num_pages: int,
+                         page_size: int, pages_per_slot: int):
+        specs, _ = self.init_paged_cache_specs(num_slots, num_pages,
+                                               page_size, pages_per_slot)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+    def decode_paged_fn(self, params, cache, batch,
+                        use_kernel: bool = False):
+        return self.model.decode_paged_fn(params, cache, batch,
+                                          use_kernel=use_kernel)
+
+    def prefill_at_fn(self, params, batch):
+        """Right-padded whole-prompt prefill (see StackedLM.prefill_at_fn)."""
+        return self.model.prefill_at_fn(params, batch)
+
     # ------------------------------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
         """ShapeDtypeStruct stand-ins for every model input of a shape cell."""

@@ -252,6 +252,48 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, rolling: bool = False,
     return out.reshape(B, 1, H, D).astype(q.dtype)
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                           use_kernel: bool = False):
+    """Single-token attention over a block-table-indexed paged KV cache.
+
+    q: [B, 1, H, D]; k_pages, v_pages: [num_pages, KVH, page_size, D] shared
+    pools; block_tables: [B, max_pages] int32 (page ids in sequence order,
+    unused tail entries -> reserved null page 0); seq_lens: [B] int32 valid
+    tokens per row, *including* the token just written for this step.
+
+    Unlike ``decode_attention``'s shared-timeline cache, each row's work is
+    bounded by its own capacity (max_pages * page_size) instead of the
+    engine-lifetime horizon, and positions are 0-based per request — no
+    ``start`` masking, no RoPE offset bookkeeping. The jnp path gathers
+    pages (kernels/ref.py oracle); use_kernel routes to the fused Pallas
+    kernel (kernels/paged_attention.py) where the block table drives page
+    DMA directly.
+    """
+    from repro.kernels import ops as KO
+    B, _, H, D = q.shape
+    out = KO.paged_attention(q.reshape(B, H, D), k_pages, v_pages,
+                             block_tables, seq_lens, use_kernel=use_kernel)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def paged_write(k_pages, v_pages, k_new, v_new, block_tables, seq_lens):
+    """Scatter one new token per row into the page pools.
+
+    k_new, v_new: [B, KVH, D] — token at position ``seq_lens[b]`` of row b,
+    which lives in page ``block_tables[b, seq_lens[b] // Pg]`` at offset
+    ``seq_lens[b] % Pg``. Rows whose table entry is the null page (idle
+    slots, exhausted tables — gather clamps out-of-range) write harmlessly
+    into page 0."""
+    Pg = k_pages.shape[2]
+    page = jnp.take_along_axis(
+        block_tables, (seq_lens // Pg)[:, None], axis=1)[:, 0]     # [B]
+    off = seq_lens % Pg
+    # advanced indices split by the head slice put the batch dim first
+    k_pages = k_pages.at[page, :, off].set(k_new)
+    v_pages = v_pages.at[page, :, off].set(v_new)
+    return k_pages, v_pages
+
+
 def roll_into_window(kv_hd, total_len: int, window: int):
     """Scatter the last W=min(window, total_len) tokens of [B, KVH, W, D]
     into a [B, KVH, window, D] rolling buffer at slot (absolute index %%

@@ -124,14 +124,16 @@ def moe_block_specs(cfg: ArchConfig) -> Dict[str, Any]:
 
 
 def moe_block_apply(cfg: ArchConfig, p, x, positions, *, mode, cache,
-                    cache_len, pos3=None, cache_quant=False, start=None):
+                    cache_len, pos3=None, cache_quant=False, start=None,
+                    paged=None, paged_kernel=False):
     def mlp_fn(pp, h):
         out, _aux = moe_mlp_apply(cfg, pp["moe"], h)
         return out
 
     return dense_block_apply(cfg, p, x, positions, mode=mode, cache=cache,
                              cache_len=cache_len, pos3=pos3, mlp_fn=mlp_fn,
-                             cache_quant=cache_quant, start=start)
+                             cache_quant=cache_quant, start=start,
+                             paged=paged, paged_kernel=paged_kernel)
 
 
 def build_moe(cfg: ArchConfig, remat: bool = True,
@@ -147,11 +149,12 @@ def build_moe(cfg: ArchConfig, remat: bool = True,
             return dense_block_specs(cfg, d_ff=cfg.dense_stem_d_ff or cfg.d_ff)
 
         def stem_apply(p, x, positions, *, mode, cache, cache_len, pos3,
-                       start=None):
+                       start=None, paged=None, paged_kernel=False):
             return dense_block_apply(cfg, p, x, positions, mode=mode,
                                      cache=cache, cache_len=cache_len,
                                      pos3=pos3, cache_quant=cache_quant,
-                                     start=start)
+                                     start=start, paged=paged,
+                                     paged_kernel=paged_kernel)
 
         segments.append(Segment("stem", cfg.first_k_dense, stem_specs,
                                 stem_apply, cache_fn))
@@ -159,11 +162,15 @@ def build_moe(cfg: ArchConfig, remat: bool = True,
     def specs():
         return moe_block_specs(cfg)
 
-    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3, start=None):
+    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3, start=None,
+                 paged=None, paged_kernel=False):
         return moe_block_apply(cfg, p, x, positions, mode=mode, cache=cache,
                                cache_len=cache_len, pos3=pos3,
-                               cache_quant=cache_quant, start=start)
+                               cache_quant=cache_quant, start=start,
+                               paged=paged, paged_kernel=paged_kernel)
 
     segments.append(Segment("blocks", cfg.num_layers - cfg.first_k_dense,
                             specs, apply_fn, cache_fn))
-    return StackedLM(cfg, segments, remat=remat)
+    m = StackedLM(cfg, segments, remat=remat)
+    m.paged_ok = not (cache_quant or cfg.sliding_window)
+    return m

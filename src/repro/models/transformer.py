@@ -58,20 +58,36 @@ def dequantize_kv(t, scale, dtype=jnp.float32):
 def dense_block_apply(cfg: ArchConfig, p, x, positions, *, mode: str,
                       cache=None, cache_len=None, pos3=None,
                       mlp_fn: Optional[Callable] = None,
-                      cache_quant: bool = False, start=None):
+                      cache_quant: bool = False, start=None, paged=None,
+                      paged_kernel: bool = False):
     """One pre-norm transformer block.
 
     mode: "train" | "prefill" (returns new kv to cache) | "decode".
     cache (decode): (k, v) [B, KVH, S, D] — or (k_q8, v_q8, k_scale, v_scale)
     with int8 payloads and per-head scales when ``cache_quant`` (the cache
     then costs 1 byte/element of HBM traffic instead of 2).
+    paged (decode): (block_tables [B, MP], seq_lens [B]) — cache is then the
+    per-layer page pools (k_pages, v_pages) [N, KVH, Pg, D] and ``positions``
+    carries the per-row 0-based position (= seq_lens); mutually exclusive
+    with sliding windows and the quantized cache.
     Returns (x, new_kv_or_None).
     """
     h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
     q, k, v = L.attn_qkv(p["attn"], h, positions, cfg, pos3=pos3)
     window = cfg.sliding_window
     new_kv = None
-    if mode == "decode":
+    if mode == "decode" and paged is not None:
+        assert not cache_quant and not window, \
+            "paged KV supports the plain bf16/f32 full-attention cache"
+        block_tables, seq_lens = paged
+        k_pages, v_pages = cache
+        k_pages, v_pages = L.paged_write(k_pages, v_pages, k[:, 0], v[:, 0],
+                                         block_tables, seq_lens)
+        ctx = L.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                       seq_lens + 1,
+                                       use_kernel=paged_kernel)
+        new_kv = (k_pages, v_pages)
+    elif mode == "decode":
         if cache_quant:
             k_q, v_q, k_s, v_s = cache
             sK = k_s[:, None, :]                     # [KVH,1,D]
@@ -148,6 +164,20 @@ def default_kv_cache_spec(cfg: ArchConfig, batch: int, max_seq: int,
     return (kv, kv), (ax, ax)
 
 
+def paged_kv_cache_spec(cfg: ArchConfig, num_pages: int, page_size: int):
+    """Per-layer paged KV pool spec [num_pages, KVH, page_size, D] + axes.
+
+    Pages are shared across batch rows: which tokens live where is decided
+    by the per-row block tables, not the array layout — so the pool size is
+    a capacity knob (active tokens), decoupled from both batch size and any
+    per-engine sequence horizon."""
+    kv = jax.ShapeDtypeStruct(
+        (num_pages, cfg.num_kv_heads, page_size, cfg.head_dim),
+        L.DEFAULT_DTYPE)
+    ax = (None, "act_kv_heads", None, None)
+    return (kv, kv), (ax, ax)
+
+
 @dataclasses.dataclass
 class Segment:
     """A homogeneous run of blocks scanned with stacked params."""
@@ -173,6 +203,7 @@ class StackedLM:
     cfg: ArchConfig
     segments: list                        # [Segment]
     remat: bool = True
+    paged_ok: bool = False      # set by builders: paged decode supported
 
     # -- parameter specs ------------------------------------------------
     def param_specs(self) -> Dict[str, Any]:
@@ -201,13 +232,19 @@ class StackedLM:
 
     # -- body -------------------------------------------------------------
     def run_segments(self, params, x, positions, *, mode: str,
-                     caches=None, cache_len=None, pos3=None, start=None):
+                     caches=None, cache_len=None, pos3=None, start=None,
+                     paged=None, paged_kernel: bool = False):
         """Scan x through every segment. caches: {seg_name: pytree} or None.
         Returns (x, new_caches)."""
         new_caches = {}
-        # start=None keeps the exact legacy trace; per-slot starts are only
-        # threaded when the serving engine asks for them
-        kw = {} if start is None else {"start": start}
+        # start/paged=None keeps the exact legacy trace; the extra kwargs are
+        # only threaded when the serving engine asks for them
+        kw = {}
+        if start is not None:
+            kw["start"] = start
+        if paged is not None:
+            kw["paged"] = paged
+            kw["paged_kernel"] = paged_kernel
         for seg in self.segments:
             seg_params = params[seg.name]
             seg_cache = None if caches is None else caches.get(seg.name)
@@ -279,6 +316,31 @@ class StackedLM:
         caches["len"] = jnp.int32(S)
         return logits, caches
 
+    # -- public: batched offset prefill (right-padded) --------------------
+    def prefill_at_fn(self, params, batch):
+        """Whole-prompt prefill for paged admission: ``tokens`` [B, S_pad] is
+        the prompt right-padded to a bucket size, ``prompt_len`` a traced
+        int32 scalar with the true length. Causal attention makes right
+        padding invisible to real positions, so logits are read at
+        ``prompt_len - 1`` and only the first ``prompt_len`` cache positions
+        are meaningful (callers scatter exactly those into pages). One jitted
+        call per admission — compile count is bounded by the bucket count,
+        not the number of distinct prompt lengths."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.arange(S)[None, :]
+        x = self.embed(params, tokens)
+        x = self._fuse_frontend(params, x, batch)
+        x, caches = self.run_segments(params, x, positions, mode="prefill",
+                                      pos3=batch.get("pos3"))
+        x = L.rmsnorm(x, params["ln_f"], self.cfg.norm_eps)
+        h_last = jax.lax.dynamic_index_in_dim(
+            x, batch["prompt_len"] - 1, axis=1, keepdims=False)     # [B, D]
+        logits = jnp.einsum("bd,dv->bv", h_last, self.head_weights(params),
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, ("act_batch", "act_vocab"))
+        return logits, self._constrain_caches(caches)
+
     # -- public: decode --------------------------------------------------
     def decode_fn(self, params, cache, batch):
         tokens = batch["tokens"]                      # [B, 1]
@@ -299,6 +361,35 @@ class StackedLM:
         new_caches["len"] = cache_len + 1
         if start is not None:
             new_caches["start"] = start
+        return logits, new_caches
+
+    # -- public: paged decode ---------------------------------------------
+    def decode_paged_fn(self, params, cache, batch, use_kernel: bool = False):
+        """One decode step over the paged cache: ``cache`` holds per-segment
+        page pools (leading layer dim), ``block_tables`` [B, MP] and
+        ``seq_lens`` [B]. Positions are per-row and 0-based (a request's
+        stream is independent of its slot by construction — no shared
+        timeline, no ``start`` mask). ``seq_lens`` advances for rows that
+        hold a sequence; idle rows (0) stay parked on the null page.
+        ``use_kernel`` (static; backends bind it at jit time) routes
+        attention to the fused Pallas kernel."""
+        tokens = batch["tokens"]                      # [B, 1]
+        bt, sl = cache["block_tables"], cache["seq_lens"]
+        positions = sl[:, None]
+        x = self.embed(params, tokens)
+        body = {k: v for k, v in cache.items()
+                if k not in ("block_tables", "seq_lens")}
+        x, new_caches = self.run_segments(params, x, positions, mode="decode",
+                                          caches=body, cache_len=None,
+                                          pos3=batch.get("pos3"),
+                                          paged=(bt, sl),
+                                          paged_kernel=use_kernel)
+        x = L.rmsnorm(x, params["ln_f"], self.cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], self.head_weights(params),
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, ("act_batch", "act_vocab"))
+        new_caches["block_tables"] = bt
+        new_caches["seq_lens"] = jnp.where(sl > 0, sl + 1, 0)
         return logits, new_caches
 
     # -- caches -----------------------------------------------------------
@@ -326,6 +417,30 @@ class StackedLM:
         _, axes = self.init_cache_specs(batch_size, max_seq)
         return axes
 
+    def init_paged_cache_specs(self, num_slots: int, num_pages: int,
+                               page_size: int, pages_per_slot: int):
+        """Paged cache pytree: per-segment page pools (stacked layer dim),
+        one shared block table [num_slots, pages_per_slot] and per-slot
+        seq_lens [num_slots]. Page 0 is the reserved null page (zero-filled
+        block-table tails and idle slots land there)."""
+        specs, axes = {}, {}
+        for seg in self.segments:
+            per_layer, per_axes = paged_kv_cache_spec(self.cfg, num_pages,
+                                                      page_size)
+            specs[seg.name] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((seg.n,) + s.shape, s.dtype),
+                per_layer)
+            axes[seg.name] = jax.tree.map(
+                lambda a: ("layers",) + tuple(a), per_axes,
+                is_leaf=lambda a: isinstance(a, tuple) and
+                all(x is None or isinstance(x, str) for x in a))
+        specs["block_tables"] = jax.ShapeDtypeStruct(
+            (num_slots, pages_per_slot), jnp.int32)
+        axes["block_tables"] = ()
+        specs["seq_lens"] = jax.ShapeDtypeStruct((num_slots,), jnp.int32)
+        axes["seq_lens"] = ()
+        return specs, axes
+
     def _constrain_caches(self, caches):
         if not caches:
             return caches
@@ -352,16 +467,20 @@ def build_dense(cfg: ArchConfig, remat: bool = True,
     def specs():
         return dense_block_specs(cfg)
 
-    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3, start=None):
+    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3, start=None,
+                 paged=None, paged_kernel=False):
         return dense_block_apply(cfg, p, x, positions, mode=mode, cache=cache,
                                  cache_len=cache_len, pos3=pos3,
-                                 cache_quant=cache_quant, start=start)
+                                 cache_quant=cache_quant, start=start,
+                                 paged=paged, paged_kernel=paged_kernel)
 
     def cache_fn(batch, max_seq):
         return default_kv_cache_spec(cfg, batch, max_seq, quant=cache_quant)
 
-    return StackedLM(cfg, [Segment("blocks", cfg.num_layers, specs, apply_fn,
-                                   cache_fn)], remat=remat)
+    m = StackedLM(cfg, [Segment("blocks", cfg.num_layers, specs, apply_fn,
+                                cache_fn)], remat=remat)
+    m.paged_ok = not (cache_quant or cfg.sliding_window)
+    return m
 
 
 # ---------------------------------------------------------------------------
@@ -390,13 +509,17 @@ def build_vlm(cfg: ArchConfig, remat: bool = True,
     def specs():
         return dense_block_specs(cfg)
 
-    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3, start=None):
+    def apply_fn(p, x, positions, *, mode, cache, cache_len, pos3, start=None,
+                 paged=None, paged_kernel=False):
         return dense_block_apply(cfg, p, x, positions, mode=mode, cache=cache,
                                  cache_len=cache_len, pos3=pos3,
-                                 cache_quant=cache_quant, start=start)
+                                 cache_quant=cache_quant, start=start,
+                                 paged=paged, paged_kernel=paged_kernel)
 
     def cache_fn(batch, max_seq):
         return default_kv_cache_spec(cfg, batch, max_seq, quant=cache_quant)
 
-    return VlmLM(cfg, [Segment("blocks", cfg.num_layers, specs, apply_fn,
-                               cache_fn)], remat=remat)
+    m = VlmLM(cfg, [Segment("blocks", cfg.num_layers, specs, apply_fn,
+                            cache_fn)], remat=remat)
+    m.paged_ok = not (cache_quant or cfg.sliding_window)
+    return m

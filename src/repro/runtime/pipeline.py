@@ -186,13 +186,23 @@ class PipelinedDecoder:
     # -- one stage's block scan (shared by the tick loop and the telemetry
     # -- stage probe) --------------------------------------------------------
     def _stage_run(self, blk_params, blk_cache, blk_mask, x, cache_len,
-                   start=None):
+                   start=None, paged=None):
         cfg, seg = self.api.cfg, self.seg
-        positions = jnp.full((1, 1), cache_len, jnp.int32)
-        pos3 = None
-        if cfg.pos_type == "mrope":
-            pos3 = jnp.full((x.shape[0], 1, 3), cache_len, jnp.int32)
-        kw = {} if start is None else {"start": start}
+        if paged is not None:
+            # paged cache: per-row 0-based positions from seq_lens; the
+            # block cache is the stage's slice of the shared page pools
+            _, sl_mb = paged
+            positions = sl_mb[:, None]
+            pos3 = None
+            if cfg.pos_type == "mrope":
+                pos3 = jnp.tile(sl_mb[:, None, None], (1, 1, 3))
+            kw = {"paged": paged, "paged_kernel": self.use_kernel}
+        else:
+            positions = jnp.full((1, 1), cache_len, jnp.int32)
+            pos3 = None
+            if cfg.pos_type == "mrope":
+                pos3 = jnp.full((x.shape[0], 1, 3), cache_len, jnp.int32)
+            kw = {} if start is None else {"start": start}
 
         def step(carry, xs):
             p, c, m = xs
@@ -208,26 +218,48 @@ class PipelinedDecoder:
 
         return jax.lax.scan(step, x, (blk_params, blk_cache, blk_mask))
 
-    def build_stage_probe(self):
+    def build_stage_probe(self, paged: bool = False):
         """A jit-able single-stage runner for per-stage wall-time telemetry:
         ``probe(blk_params, blk_cache, blk_mask, x, cache_len)`` executes one
         stage's block scan exactly as a pipeline tick would (minus seal /
         ppermute) so the host can time each stage independently. The caller
         slices stage s out of the prestaged trees (``tree[s]``) and times
-        ``jax.block_until_ready(probe(...))``."""
-        def probe(blk_params, blk_cache, blk_mask, x, cache_len):
-            h, _ = self._stage_run(blk_params, blk_cache, blk_mask, x,
-                                   cache_len)
-            return h
+        ``jax.block_until_ready(probe(...))``. With ``paged=True`` the
+        signature is ``probe(blk_params, blk_pool, blk_mask, x, bt, sl)``
+        (whole-pool stage slice, block table + seq_lens for the probed
+        rows)."""
+        if paged:
+            def probe(blk_params, blk_cache, blk_mask, x, bt, sl):
+                h, _ = self._stage_run(blk_params, blk_cache, blk_mask, x,
+                                       None, paged=(bt, sl))
+                return h
+        else:
+            def probe(blk_params, blk_cache, blk_mask, x, cache_len):
+                h, _ = self._stage_run(blk_params, blk_cache, blk_mask, x,
+                                       cache_len)
+                return h
         return jax.jit(probe)
 
     # -- the step -------------------------------------------------------------
     def build(self, prestaged_params: bool = False,
-              prestaged_cache: bool = False, per_slot_start: bool = False):
+              prestaged_cache: bool = False, per_slot_start: bool = False,
+              paged: bool = False):
         """per_slot_start: the cache argument becomes a 3-tuple
         ``(staged, cache_len, start)`` with ``start`` a per-slot [B] int32 of
         first-valid absolute positions (continuous-batching mask); implies
-        ``prestaged_cache``."""
+        ``prestaged_cache``.
+
+        paged: the cache argument is ``(staged_pools, block_tables,
+        seq_lens)`` — prestaged per-layer page pools (stage-major, pod
+        sharded; *no* batch dim: pages are shared, block tables say which
+        rows own which pages) plus the per-slot [B, MP] block tables and
+        [B] seq_lens, replicated over pods. Every microbatch's stage scan
+        scatters its rows' new tokens into disjoint pages of the same pool,
+        so the pool is carried whole across ticks instead of batch-sliced;
+        warm-up/drain ticks are masked out before committing (their
+        boundary activations are garbage). Positions are per-row 0-based —
+        the continuous-batching ``start`` mask is unnecessary by
+        construction."""
         api, seg, S = self.api, self.seg, self.num_stages
         nm, bps = self.num_microbatches, self.bps
         cfg = api.cfg
@@ -237,6 +269,7 @@ class PipelinedDecoder:
         use_kernel = self.use_kernel
         if per_slot_start:
             assert prestaged_cache, "per_slot_start implies prestaged_cache"
+        assert not (per_slot_start and paged)
         stage_run = self._stage_run
 
         def pipeline_body(params, staged_cache, stage_mask, tokens, starts,
@@ -245,7 +278,9 @@ class PipelinedDecoder:
             pod); staged leaves [1, bps, B, ...] (pod-sharded stage dim);
             stage_mask [1, bps] marks real (non-padding) block slots;
             starts: [nm, B_mb] per-slot first valid positions (replicated,
-            ignored unless per_slot_start)."""
+            ignored unless per_slot_start). In paged mode staged leaves are
+            [1, bps, N, KVH, Pg, D] pools and ``starts`` is the pair
+            ``(block_tables [nm, B_mb, MP], seq_lens [nm, B_mb])``."""
             s_idx = jax.lax.axis_index("pod")
             my_params = jax.tree.map(lambda x: x[0], params[seg.name])
             my_cache = jax.tree.map(lambda x: x[0], staged_cache)
@@ -295,18 +330,33 @@ class PipelinedDecoder:
                     h_recv = recv
                 x_in = jnp.where(s_idx == 0, x0, h_recv)
 
-                # my stage's cache slice for this microbatch
-                cache_sl = _batch_slice(cache_st, m_idx * B_mb, B_mb)
-                st = None
-                if per_slot_start:
-                    st = jax.lax.dynamic_index_in_dim(starts, m_idx, 0,
-                                                      keepdims=False)
-                h, new_sl = stage_run(my_params, cache_sl, my_mask, x_in,
-                                      cache_len, start=st)
-                # only commit the slice when this tick is valid for me
-                new_sl = jax.tree.map(
-                    lambda new, old: jnp.where(valid, new, old), new_sl, cache_sl)
-                cache_st = _batch_update(cache_st, new_sl, m_idx * B_mb)
+                if paged:
+                    # pages are shared across rows — run the stage over the
+                    # whole pool with this microbatch's table rows; commit
+                    # only on valid ticks (warm-up/drain inputs are garbage)
+                    bt_mb = jax.lax.dynamic_index_in_dim(starts[0], m_idx, 0,
+                                                         keepdims=False)
+                    sl_mb = jax.lax.dynamic_index_in_dim(starts[1], m_idx, 0,
+                                                         keepdims=False)
+                    h, new_pool = stage_run(my_params, cache_st, my_mask,
+                                            x_in, None, paged=(bt_mb, sl_mb))
+                    cache_st = jax.tree.map(
+                        lambda new, old: jnp.where(valid, new, old),
+                        new_pool, cache_st)
+                else:
+                    # my stage's cache slice for this microbatch
+                    cache_sl = _batch_slice(cache_st, m_idx * B_mb, B_mb)
+                    st = None
+                    if per_slot_start:
+                        st = jax.lax.dynamic_index_in_dim(starts, m_idx, 0,
+                                                          keepdims=False)
+                    h, new_sl = stage_run(my_params, cache_sl, my_mask, x_in,
+                                          cache_len, start=st)
+                    # only commit the slice when this tick is valid for me
+                    new_sl = jax.tree.map(
+                        lambda new, old: jnp.where(valid, new, old),
+                        new_sl, cache_sl)
+                    cache_st = _batch_update(cache_st, new_sl, m_idx * B_mb)
 
                 # seal + rotate boundary activation to the next stage
                 if seal_on:
@@ -345,15 +395,24 @@ class PipelinedDecoder:
             staged_params = params if prestaged_params \
                 else self.stage_params(params)
             start_vec = None
-            if per_slot_start:
+            bt_vec = sl_vec = None
+            if paged:
+                staged_cache, bt_vec, sl_vec = cache
+                cache_len = jnp.int32(0)                    # unused
+                starts = (bt_vec.reshape(nm, B_mb, -1),
+                          sl_vec.reshape(nm, B_mb))
+                starts_spec = (P(), P())
+            elif per_slot_start:
                 staged_cache, cache_len, start_vec = cache
                 starts = start_vec.reshape(nm, B_mb)
+                starts_spec = P()
             else:
                 if prestaged_cache:
                     staged_cache, cache_len = cache
                 else:
                     staged_cache, cache_len = self.stage_cache(cache)
                 starts = jnp.zeros((nm, B_mb), jnp.int32)   # unused
+                starts_spec = P()
             stage_mask = jnp.asarray(self._mask)
 
             param_specs = self._param_specs_tree(staged_params)
@@ -365,14 +424,17 @@ class PipelinedDecoder:
                 outputs, new_cache = jax.shard_map(
                     body, mesh=mesh,
                     in_specs=(param_specs, cache_specs, P("pod", None),
-                              P(), P(), P(), P()),
+                              P(), starts_spec, P(), P()),
                     out_specs=(P("pod"), cache_specs),
                     axis_names={"pod"}, check_vma=False,
                 )(staged_params, staged_cache, stage_mask, tok_stream,
                   starts, cache_len, key)
             # stages stack outputs along dim 0; the last nm rows are real
             logits = outputs[-nm:].reshape(B, -1)
-            if per_slot_start:
+            if paged:
+                cache_out = (new_cache, bt_vec,
+                             jnp.where(sl_vec > 0, sl_vec + 1, 0))
+            elif per_slot_start:
                 cache_out = (new_cache, cache_len + 1, start_vec)
             elif prestaged_cache:
                 cache_out = (new_cache, cache_len + 1)

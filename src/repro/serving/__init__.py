@@ -1,28 +1,34 @@
-"""Serving engine subsystem (DESIGN.md §Serving engine).
+"""Serving engine subsystem (DESIGN.md §Serving engine, §Paged KV cache).
 
 Three decoupled layers over the planner/pipeline/ft stack:
 
 1. **scheduler** — continuous-batching slot scheduler (FIFO admission,
-   per-request EOS/length completion, immediate slot recycling);
+   per-request EOS/length completion, immediate slot recycling) and the
+   ``PagePool`` free-list allocator for the paged KV layout;
 2. **telemetry** — per-stage wall-time probes folded into
    ``OnlineReplanner.observe()`` with scale normalization and straggler
    injection, plus ResourceManager heartbeats;
-3. **engine** — ``ServingEngine``: shared-position-timeline decode over
-   pluggable backends (shard_map pipelined / local single-process) with
-   live stage-boundary swaps that migrate the KV cache in place. Plans are
-   ``PlacementSpec`` segment placements (possibly non-prefix); decoding is
-   greedy or temperature/top-k sampled (**sampling** — per-request PRNG
-   threading keeps sampled streams batch-independent).
+3. **engine** — ``ServingEngine``: paged per-slot KV decode (block-table-
+   indexed shared page pools, one-call batched prefill, page recycling —
+   unbounded engine lifetime) with the legacy shared-position-timeline
+   layout kept for recurrent-state/SWA models, over pluggable backends
+   (shard_map pipelined / local single-process) with live stage-boundary
+   swaps that migrate the KV state in place. Plans are ``PlacementSpec``
+   segment placements (possibly non-prefix); decoding is greedy or
+   temperature/top-k sampled (**sampling** — per-request PRNG threading
+   keeps sampled streams batch-independent).
 """
 from .engine import (EngineConfig, EngineEvent, LocalDecodeBackend,
+                     PagedLocalBackend, PagedPipelinedBackend,
                      PipelinedDecodeBackend, ServingEngine,
                      pipelined_backend_available)
 from .sampling import TokenSampler
-from .scheduler import Request, SlotScheduler
+from .scheduler import PagePool, Request, SlotScheduler
 from .telemetry import StageTelemetry
 
 __all__ = [
-    "EngineConfig", "EngineEvent", "LocalDecodeBackend",
-    "PipelinedDecodeBackend", "Request", "ServingEngine", "SlotScheduler",
-    "StageTelemetry", "TokenSampler", "pipelined_backend_available",
+    "EngineConfig", "EngineEvent", "LocalDecodeBackend", "PagePool",
+    "PagedLocalBackend", "PagedPipelinedBackend", "PipelinedDecodeBackend",
+    "Request", "ServingEngine", "SlotScheduler", "StageTelemetry",
+    "TokenSampler", "pipelined_backend_available",
 ]

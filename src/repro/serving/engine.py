@@ -3,36 +3,43 @@
 ``ServingEngine`` turns the one-shot batch-decode demo into a long-lived
 request server (the paper's Fig. 2 loop as a service):
 
-* **slots on a shared position timeline** — the decoder advances one global
-  cache position per step for all ``num_slots`` KV slots. A request admitted
-  at position ``t`` has its prompt prefilled so it *ends* at ``t`` (positions
-  ``[t - P, t)``) and carries a per-slot ``start`` mask that hides whatever
-  the recycled slot held before. RoPE attention depends only on relative
-  positions, and SSM state is position-free, so a request's token stream is
-  independent of when it was admitted or what shared the batch — verified to
-  the decoded-token level in tests/test_serving.py.
-* **pluggable decode backends** — ``PipelinedDecodeBackend`` runs the
-  shard_map pipelined decoder over the ``pod`` axis (stage boundaries from
-  the placement solver, sealed boundaries); ``LocalDecodeBackend`` is the
-  single-process fallback (plain jitted ``decode_fn``) used on hosts whose
-  jax lacks ``shard_map``/``set_mesh`` and for ``num_stages == 1``.
+* **paged per-slot KV cache (default)** — KV lives in shared page pools
+  indexed by per-slot block tables (``kv_layout="paged"``, DESIGN.md §Paged
+  KV cache). Admission reserves a request's worst-case pages, the whole
+  prompt prefills in ONE jitted call (``prefill_at_fn``, right-padded to
+  power-of-two buckets), and completion recycles the pages — so the engine
+  runs indefinitely: there is no shared-timeline horizon, and per-step
+  attention cost is bounded by per-request capacity, not engine lifetime.
+  Positions are 0-based per request, which *removes* the ``start``-mask and
+  RoPE-offset machinery rather than hiding it.
+* **legacy shared position timeline** (``kv_layout="timeline"``, and the
+  automatic fallback for recurrent-state / SWA / quantized-cache models) —
+  one dense cache advancing a global position per step; offset prefill one
+  token at a time with per-slot ``start`` masks. The horizon is now a
+  back-pressure bound, not a crash: admission only accepts requests whose
+  worst-case generation ends inside ``max_seq``, and the engine reports
+  ``stalled`` when the head of the queue can never fit.
+* **pluggable decode backends** — ``PagedPipelinedBackend`` /
+  ``PipelinedDecodeBackend`` run the shard_map pipelined decoder over the
+  ``pod`` axis (stage boundaries from the placement solver, sealed
+  boundaries); ``PagedLocalBackend`` / ``LocalDecodeBackend`` are the
+  single-process fallbacks used on hosts whose jax lacks
+  ``shard_map``/``set_mesh`` and for ``num_stages == 1``.
 * **telemetry → live re-plan swap** — every ``telemetry.interval`` steps the
   engine probes per-stage wall time, feeds ``OnlineReplanner.observe()``,
   and on a re-plan builds a decoder for the new boundaries and migrates the
-  staged KV cache in place via ``PipelinedDecoder.restage_cache`` — decode
-  continues bit-exactly across the swap (same per-block math, only the
-  stage→device assignment moves).
-
-The shared timeline bounds an engine's lifetime at ``max_seq`` positions —
-the honest cost of keeping per-slot state in one dense cache (a paged
-per-slot cache is the production follow-up, see DESIGN.md §Serving).
+  staged KV state in place via ``PipelinedDecoder.restage_cache`` (dense
+  caches and page pools stage/restage identically along the layer dim) —
+  decode continues token-exactly across the swap.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +52,7 @@ from repro.enclave.domain import ResourceManager, two_enclave_manager
 from repro.runtime.ft import HeartbeatMonitor, OnlineReplanner
 from repro.runtime.pipeline import PipelinedDecoder, pipeline_applicable
 from repro.serving.sampling import TokenSampler
-from repro.serving.scheduler import Request, SlotScheduler
+from repro.serving.scheduler import PagePool, Request, SlotScheduler
 from repro.serving.telemetry import StageTelemetry
 
 
@@ -59,8 +66,15 @@ class EngineConfig:
     num_slots: int = 4                  # decode batch == KV slots
     num_stages: int = 2
     num_microbatches: int = 2
-    max_seq: int = 256                  # shared-timeline horizon
+    max_seq: int = 256                  # shared-timeline horizon (legacy)
     prompt_capacity: int = 32           # max admissible prompt length
+    # paged KV cache (default layout; "timeline" = legacy shared horizon)
+    kv_layout: str = "paged"
+    page_size: int = 16                 # tokens per KV page
+    request_capacity: int = 0           # max prompt+max_new (0 = auto)
+    num_pages: int = 0                  # shared pool size (0 = auto: all
+    #                                     slots at full request_capacity)
+    batched_prefill: bool = True        # whole-prompt prefill in one call
     seal_boundary: bool = True
     use_kernel: bool = False
     solver: str = "dp"
@@ -220,6 +234,179 @@ class PipelinedDecodeBackend:
 
 
 # ---------------------------------------------------------------------------
+# Paged decode backends (block-table-indexed shared page pools)
+# ---------------------------------------------------------------------------
+class PagedLocalBackend:
+    """Single-process paged backend: jitted ``decode_paged_fn`` over shared
+    page pools + per-slot block tables / seq_lens. Positions are 0-based per
+    request, so there is no ``start`` mask and no timeline horizon — the
+    engine runs for as long as the page pool keeps turning over."""
+
+    migrates_cache = False
+
+    def __init__(self, api, params, cfg: EngineConfig,
+                 stage_blocks: Sequence[int], num_pages: int,
+                 pages_per_slot: int):
+        self.api, self.params = api, params
+        self.seg = api.model.segments[0]
+        self.stage_blocks = tuple(stage_blocks)
+        self.cache = api.init_paged_cache(cfg.num_slots, num_pages,
+                                          cfg.page_size, pages_per_slot)
+        # use_kernel is bound statically at jit time: fused Pallas paged
+        # attention on TPU, jnp page-gather otherwise
+        self._step = jax.jit(functools.partial(api.decode_paged_fn,
+                                               use_kernel=cfg.use_kernel))
+        seg_name = self.seg.name
+
+        def insert(cache, kk, vv, pages, offs, slot, bt_row, seq_len):
+            # kk, vv: [L, KVH, S_pad, D] -> scatter layout [S_pad, L, KVH, D]
+            k_pool, v_pool = cache[seg_name]
+            k_pool = k_pool.at[:, pages, :, offs].set(kk.transpose(2, 0, 1, 3))
+            v_pool = v_pool.at[:, pages, :, offs].set(vv.transpose(2, 0, 1, 3))
+            out = dict(cache)
+            out[seg_name] = (k_pool, v_pool)
+            out["block_tables"] = cache["block_tables"].at[slot].set(bt_row)
+            out["seq_lens"] = cache["seq_lens"].at[slot].set(seq_len)
+            return out
+
+        def clear(cache, slot):
+            out = dict(cache)
+            out["block_tables"] = cache["block_tables"].at[slot].set(0)
+            out["seq_lens"] = cache["seq_lens"].at[slot].set(0)
+            return out
+
+        self._insert = jax.jit(insert)
+        self._clear = jax.jit(clear)
+
+    def step(self, tokens: jnp.ndarray, key) -> jnp.ndarray:
+        logits, self.cache = self._step(self.params, self.cache,
+                                        {"tokens": tokens})
+        return logits
+
+    def insert_slot(self, slot: int, kv, pages, offs, bt_row,
+                    seq_len: int) -> None:
+        kk, vv = kv
+        self.cache = self._insert(self.cache, kk, vv, pages, offs,
+                                  jnp.int32(slot), bt_row, jnp.int32(seq_len))
+
+    def clear_slot(self, slot: int) -> None:
+        self.cache = self._clear(self.cache, jnp.int32(slot))
+
+    def swap(self, stage_blocks: Sequence[int]) -> bool:
+        self.stage_blocks = tuple(stage_blocks)
+        return True
+
+    def stage_times(self) -> Optional[List[float]]:
+        return None                     # engine falls back to attribution
+
+
+class PagedPipelinedBackend:
+    """The shard_map pipelined decoder over *staged page pools*: the layer
+    dim of each per-layer pool is split into stages exactly like the dense
+    cache ([S, bps, N, KVH, Pg, D], pod-sharded stage dim), while block
+    tables and seq_lens are replicated — so ``restage_cache`` migration on a
+    live boundary swap moves per-layer pools between stages with the same
+    composed gather as the dense layout, and in-flight paged KV survives a
+    re-plan token-exactly."""
+
+    migrates_cache = True
+
+    def __init__(self, api, mesh, params, cfg: EngineConfig,
+                 stage_blocks: Sequence[int], num_pages: int,
+                 pages_per_slot: int):
+        self.api, self.mesh, self.params, self.cfg = api, mesh, params, cfg
+        self.seg = api.model.segments[0]
+        self._build(stage_blocks)
+        cache = api.init_paged_cache(cfg.num_slots, num_pages,
+                                     cfg.page_size, pages_per_slot)
+        staged = self.dec._stage_tree(cache[self.seg.name])
+        self.state = (staged, cache["block_tables"], cache["seq_lens"])
+
+        def insert(staged, bt, sl, kk_st, vv_st, pages, offs, slot, bt_row,
+                   seq_len):
+            # kk_st, vv_st: [S, bps, KVH, S_pad, D] (stage-gathered layers);
+            # pool index [:, :, pages, :, offs] puts the S_pad dim first
+            k_pool, v_pool = staged
+            k_pool = k_pool.at[:, :, pages, :, offs].set(
+                kk_st.transpose(3, 0, 1, 2, 4))
+            v_pool = v_pool.at[:, :, pages, :, offs].set(
+                vv_st.transpose(3, 0, 1, 2, 4))
+            return ((k_pool, v_pool), bt.at[slot].set(bt_row),
+                    sl.at[slot].set(seq_len))
+
+        def clear(staged, bt, sl, slot):
+            return staged, bt.at[slot].set(0), sl.at[slot].set(0)
+
+        self._insert = jax.jit(insert)
+        self._clear = jax.jit(clear)
+
+    def _build(self, stage_blocks: Sequence[int]) -> None:
+        cfg = self.cfg
+        self.stage_blocks = tuple(stage_blocks)
+        self.dec = PipelinedDecoder(
+            self.api, self.mesh, num_stages=cfg.num_stages,
+            num_microbatches=cfg.num_microbatches,
+            seal_boundary=cfg.seal_boundary, use_kernel=cfg.use_kernel,
+            stage_blocks=self.stage_blocks)
+        self.staged_params = self.dec.stage_params(self.params)
+        self.step_fn = jax.jit(self.dec.build(
+            prestaged_params=True, paged=True))
+        self._probe = self.dec.build_stage_probe(paged=True)
+        self._probe_warm = False
+
+    def step(self, tokens: jnp.ndarray, key) -> jnp.ndarray:
+        logits, self.state = self.step_fn(self.staged_params, self.state,
+                                          {"tokens": tokens}, key)
+        return logits
+
+    def insert_slot(self, slot: int, kv, pages, offs, bt_row,
+                    seq_len: int) -> None:
+        kk, vv = kv                      # [L, KVH, S_pad, D]
+        kk_st = self.dec._stage_tree(kk)
+        vv_st = self.dec._stage_tree(vv)
+        staged, bt, sl = self.state
+        self.state = self._insert(staged, bt, sl, kk_st, vv_st, pages, offs,
+                                  jnp.int32(slot), bt_row, jnp.int32(seq_len))
+
+    def clear_slot(self, slot: int) -> None:
+        staged, bt, sl = self.state
+        self.state = self._clear(staged, bt, sl, jnp.int32(slot))
+
+    def swap(self, stage_blocks: Sequence[int]) -> bool:
+        """Rebuild on the new boundaries and migrate the staged pools (the
+        same composed unstage→restage gather as the dense layout; block
+        tables and seq_lens ride along unchanged)."""
+        old_dec = self.dec
+        self._build(stage_blocks)
+        self.state = old_dec.restage_cache(self.state, self.dec)
+        return True
+
+    def stage_times(self, repeats: int = 1) -> List[float]:
+        from repro.models import layers as L
+        cfg = self.cfg
+        staged, bt, sl = self.state
+        b_mb = cfg.num_slots // cfg.num_microbatches
+        x = jnp.zeros((b_mb, 1, self.api.cfg.d_model), L.DEFAULT_DTYPE)
+        mask = jnp.asarray(self.dec._mask)
+        per_stage = []
+        for s in range(cfg.num_stages):
+            blk_p = jax.tree.map(lambda a: a[s],
+                                 self.staged_params[self.seg.name])
+            blk_c = jax.tree.map(lambda a: a[s], staged)
+            args = (blk_p, blk_c, mask[s], x, bt[:b_mb], sl[:b_mb])
+            if not self._probe_warm:
+                jax.block_until_ready(self._probe(*args))
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                jax.block_until_ready(self._probe(*args))
+            dt = (time.perf_counter() - t0) / repeats
+            dt *= self.dec.stage_counts[s] / self.dec.bps
+            per_stage.append(dt)
+        self._probe_warm = True
+        return per_stage
+
+
+# ---------------------------------------------------------------------------
 # The engine
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -238,7 +425,14 @@ class ServingEngine:
     interleaved mid-chain); segment s executes on pod s either way. Decoding
     is greedy argmax by default; ``EngineConfig.temperature``/``top_k``
     enable per-request-reproducible sampling (serving/sampling.py), which is
-    token-equal to greedy at temperature 0."""
+    token-equal to greedy at temperature 0.
+
+    The KV cache is paged by default (``EngineConfig.kv_layout``): shared
+    page pools + per-slot block tables, worst-case page reservation at
+    admission, recycling on completion, one-call batched prefill. Models
+    without paged support (recurrent state, sliding windows, quantized
+    caches) fall back to the legacy shared timeline, whose horizon is
+    enforced by admission back-pressure instead of a mid-decode crash."""
 
     def __init__(self, api, mesh=None, rm: Optional[ResourceManager] = None,
                  config: Optional[EngineConfig] = None, params=None,
@@ -247,7 +441,12 @@ class ServingEngine:
         assert pipeline_applicable(api), \
             f"{api.cfg.name}: serving needs a single homogeneous segment"
         assert cfg.num_slots % cfg.num_microbatches == 0
-        assert cfg.prompt_capacity < cfg.max_seq
+        assert cfg.kv_layout in ("paged", "timeline"), cfg.kv_layout
+        # paged needs model support (dense/MoE/VLM, plain KV cache);
+        # recurrent-state / SWA / quantized-cache models keep the timeline
+        self.kv_layout = cfg.kv_layout if api.paged_ok else "timeline"
+        if self.kv_layout == "timeline":
+            assert cfg.prompt_capacity < cfg.max_seq
         self.api, self.mesh, self.config = api, mesh, cfg
         self.rm = rm or two_enclave_manager()
         self.params = params if params is not None \
@@ -275,6 +474,19 @@ class ServingEngine:
                                      timeout_s=cfg.heartbeat_timeout_s),
             interval=cfg.telemetry_interval)
 
+        # --- paged KV page pool ------------------------------------------
+        if self.kv_layout == "paged":
+            self.request_capacity = cfg.request_capacity or \
+                (cfg.prompt_capacity + 64)
+            assert self.request_capacity > cfg.prompt_capacity
+            self.pages_per_slot = -(-self.request_capacity // cfg.page_size)
+            num_pages = cfg.num_pages or \
+                (cfg.num_slots * self.pages_per_slot + 1)
+            self.pool = PagePool(num_pages, cfg.page_size)
+            self.slot_pages: Dict[int, List[int]] = {}
+        else:
+            self.pool = None
+
         # --- decode backend ----------------------------------------------
         if backend is None:
             backend = "pipelined" if (
@@ -284,11 +496,21 @@ class ServingEngine:
             assert mesh is not None and pipelined_backend_available(), \
                 "pipelined backend needs a mesh and jax.shard_map/set_mesh " \
                 "(jax >= 0.6); use backend='local' on this host"
-            self.backend = PipelinedDecodeBackend(api, mesh, self.params, cfg,
-                                                  self.stage_blocks)
+            if self.kv_layout == "paged":
+                self.backend = PagedPipelinedBackend(
+                    api, mesh, self.params, cfg, self.stage_blocks,
+                    self.pool.num_pages, self.pages_per_slot)
+            else:
+                self.backend = PipelinedDecodeBackend(
+                    api, mesh, self.params, cfg, self.stage_blocks)
         else:
-            self.backend = LocalDecodeBackend(api, self.params, cfg,
-                                              self.stage_blocks)
+            if self.kv_layout == "paged":
+                self.backend = PagedLocalBackend(
+                    api, self.params, cfg, self.stage_blocks,
+                    self.pool.num_pages, self.pages_per_slot)
+            else:
+                self.backend = LocalDecodeBackend(api, self.params, cfg,
+                                                  self.stage_blocks)
         self.backend_kind = backend
 
         self.scheduler = SlotScheduler(cfg.num_slots)
@@ -296,8 +518,17 @@ class ServingEngine:
         self.pending = np.zeros(cfg.num_slots, np.int32)  # next input token
         self.steps = 0
         self.swaps = 0
+        self.stalled = False            # head-of-line blocked, nothing active
+        self._blocked_rid = None        # back-pressure event dedup
+        # bounded: the paged engine runs indefinitely, so per-admission
+        # history must not grow with lifetime (p50/p99 over a rolling
+        # window; ROADMAP (n) covers the older unbounded transcripts)
+        self.admission_ms: Deque[float] = deque(maxlen=4096)
+        self.prefill_calls = 0
         self.events: List[EngineEvent] = []
         self._prefill = jax.jit(api.decode_fn)
+        if self.kv_layout == "paged":
+            self._prefill_at = jax.jit(api.prefill_at_fn)
         self._key = jnp.uint32(0xC0FFEE)
         self.sampler = TokenSampler(cfg.temperature, cfg.top_k,
                                     cfg.sample_seed)
@@ -323,11 +554,61 @@ class ServingEngine:
         assert 1 <= len(prompt) <= self.config.prompt_capacity, \
             f"prompt length {len(prompt)} > capacity " \
             f"{self.config.prompt_capacity}"
+        if self.kv_layout == "paged":
+            total = len(prompt) + max_new_tokens
+            assert total <= self.request_capacity, \
+                f"prompt+max_new {total} > request_capacity " \
+                f"{self.request_capacity} (size EngineConfig." \
+                f"request_capacity for longer generations)"
         return self.scheduler.submit(prompt, max_new_tokens, eos_id,
                                      step=self.steps)
 
-    # -- admission: offset prefill into a free slot ------------------------
+    # -- admission gating: page-pool / timeline back-pressure --------------
+    def _fits(self, req: Request) -> bool:
+        """Can ``req`` be admitted *now*? False means the head of the queue
+        waits — for resources that completions will free (pages, a slot),
+        never for resources that can't come back (the legacy timeline)."""
+        if self.kv_layout == "paged":
+            need = self.pool.pages_needed(len(req.prompt)
+                                          + req.max_new_tokens)
+            return self.pool.free_pages >= need
+        # legacy shared timeline: admit only requests whose worst-case
+        # generation finishes inside the horizon, so the engine back-
+        # pressures at admission instead of crashing mid-decode
+        return self.global_len + req.max_new_tokens <= self.config.max_seq
+
+    def _bucket(self, n: int) -> int:
+        """Pad prompt lengths to power-of-two buckets (capped at
+        prompt_capacity) so batched prefill compiles O(log capacity) shapes,
+        not one per distinct prompt length."""
+        b = 4
+        while b < n:
+            b *= 2
+        return min(b, self.config.prompt_capacity)
+
+    # -- admission: prefill into a free slot -------------------------------
     def _prefill_slot(self, slot: int, req: Request) -> None:
+        t0 = time.perf_counter()
+        if self.kv_layout == "paged":
+            logits = self._prefill_paged(slot, req)
+            detail = {"rid": req.rid, "slot": slot,
+                      "pages": len(self.slot_pages[slot])}
+        else:
+            logits = self._prefill_timeline(slot, req)
+            detail = {"rid": req.rid, "slot": slot,
+                      "start": self.global_len - len(req.prompt)}
+        first = self.sampler.sample_one(logits, req.rid, 0)
+        self.pending[slot] = first
+        detail["ms"] = (time.perf_counter() - t0) * 1e3
+        self.admission_ms.append(detail["ms"])
+        self.events.append(EngineEvent(self.steps, "admit", detail))
+        fin = self.scheduler.on_token(slot, first, step=self.steps)
+        if fin is not None:
+            self._on_finish(fin)
+
+    def _prefill_timeline(self, slot: int, req: Request):
+        """Legacy offset prefill: one decode step per prompt token, ending
+        at the shared-timeline tip, with a per-slot ``start`` mask."""
         P = len(req.prompt)
         start = self.global_len - P          # prompt ends at the timeline tip
         assert start >= 0
@@ -338,23 +619,81 @@ class ServingEngine:
         for t in req.prompt:
             tok = jnp.full((1, 1), t, jnp.int32)
             logits, cache = self._prefill(self.params, cache, {"tokens": tok})
+            self.prefill_calls += 1
         self.backend.insert_slot(slot, cache)
-        first = self.sampler.sample_one(logits, req.rid, 0)
-        self.pending[slot] = first
-        self.events.append(EngineEvent(self.steps, "admit",
-                                       {"rid": req.rid, "slot": slot,
-                                        "start": start}))
-        fin = self.scheduler.on_token(slot, first, step=self.steps)
-        if fin is not None:
-            self.events.append(EngineEvent(self.steps, "finish",
-                                           {"rid": fin.rid,
-                                            "by": fin.finished_by}))
+        return logits
+
+    def _prefill_paged(self, slot: int, req: Request):
+        """Paged admission: reserve the request's worst-case pages, prefill
+        the whole prompt in ONE jitted call (right-padded to a bucket), and
+        scatter the first P positions into the slot's pages. Positions are
+        0-based per request — no timeline offset. ``batched_prefill=False``
+        keeps a per-token fallback (the admission-latency baseline)."""
+        P = len(req.prompt)
+        need = self.pool.pages_needed(P + req.max_new_tokens)
+        pages = self.pool.alloc(need)
+        assert pages is not None, "gated by _fits"
+        self.slot_pages[slot] = pages
+        bt_row = np.zeros(self.pages_per_slot, np.int32)
+        bt_row[:need] = pages
+        seg = self.api.model.segments[0].name
+        S_pad = self._bucket(P)
+        if self.config.batched_prefill:
+            toks = np.zeros((1, S_pad), np.int32)
+            toks[0, :P] = req.prompt
+            logits, caches = self._prefill_at(
+                self.params, {"tokens": jnp.asarray(toks),
+                              "prompt_len": jnp.int32(P)})
+            kk, vv = caches[seg]
+            kk, vv = kk[:, 0], vv[:, 0]          # [L, KVH, S_pad, D]
+            self.prefill_calls += 1
+        else:
+            cache = self.api.init_cache(1, self.config.prompt_capacity)
+            logits = None
+            for t in req.prompt:
+                tok = jnp.full((1, 1), t, jnp.int32)
+                logits, cache = self._prefill(self.params, cache,
+                                              {"tokens": tok})
+                self.prefill_calls += 1
+            kk, vv = cache[seg]
+            kk, vv = kk[:, 0, :, :S_pad], vv[:, 0, :, :S_pad]
+        # positions >= P are right-padding garbage -> scatter to null page
+        idx = np.arange(S_pad)
+        pages_vec = np.where(idx < P, bt_row[np.minimum(idx, P - 1)
+                                             // self.config.page_size],
+                             0).astype(np.int32)
+        offs_vec = np.where(idx < P, idx % self.config.page_size,
+                            0).astype(np.int32)
+        self.backend.insert_slot(slot, (kk, vv), jnp.asarray(pages_vec),
+                                 jnp.asarray(offs_vec), jnp.asarray(bt_row),
+                                 P)
+        return logits
+
+    def _on_finish(self, fin: Request) -> None:
+        self.events.append(EngineEvent(self.steps, "finish",
+                                       {"rid": fin.rid,
+                                        "by": fin.finished_by}))
+        if self.kv_layout == "paged" and fin.slot in self.slot_pages:
+            self.pool.release(self.slot_pages.pop(fin.slot))
+            self.backend.clear_slot(fin.slot)
 
     def _admit(self) -> None:
         while True:
-            hit = self.scheduler.admit_next(step=self.steps)
-            if hit is None:
+            nxt = self.scheduler.peek()
+            if nxt is None:
                 return
+            if not self._fits(nxt):
+                if self._blocked_rid != nxt.rid:
+                    self._blocked_rid = nxt.rid
+                    kind = ("pages" if self.kv_layout == "paged"
+                            else "timeline")
+                    self.events.append(EngineEvent(
+                        self.steps, "backpressure",
+                        {"rid": nxt.rid, "waiting_on": kind}))
+                return
+            self._blocked_rid = None
+            hit = self.scheduler.admit_next(step=self.steps)
+            assert hit is not None
             self._prefill_slot(*hit)
 
     # -- one decode step ---------------------------------------------------
@@ -364,12 +703,17 @@ class ServingEngine:
             self._admit()
             active = self.scheduler.active()
             if not active:
+                # head-of-line blocked with nothing running: no completion
+                # can ever free the resource it waits on -> permanently
+                # stalled (callers stop driving; requests stay queued)
+                self.stalled = bool(self.scheduler.queue)
                 return self.events[before:]
-            if self.global_len >= self.config.max_seq - 1:
-                raise RuntimeError(
-                    f"shared-timeline horizon exhausted "
-                    f"({self.global_len}/{self.config.max_seq}); size "
-                    f"max_seq for the engine's lifetime (DESIGN.md §Serving)")
+            self.stalled = False
+            if self.kv_layout == "timeline":
+                # unreachable: _fits() only admits requests whose worst-case
+                # generation ends inside the horizon
+                assert self.global_len < self.config.max_seq - 1, \
+                    "timeline horizon violated despite admission gating"
 
             tokens = jnp.asarray(self.pending)[:, None]
             t0 = time.perf_counter()
@@ -392,9 +736,7 @@ class ServingEngine:
                 fin = self.scheduler.on_token(slot, int(toks[slot]),
                                               step=self.steps)
                 if fin is not None:
-                    self.events.append(EngineEvent(self.steps, "finish",
-                                                   {"rid": fin.rid,
-                                                    "by": fin.finished_by}))
+                    self._on_finish(fin)
 
             # telemetry tick → maybe re-plan → maybe swap
             self.telemetry.record_step(wall)
@@ -447,6 +789,10 @@ class ServingEngine:
             if max_steps is not None and n >= max_steps:
                 break
             self.step()
+            if self.stalled:
+                # permanent back-pressure (nothing active, head blocked):
+                # return instead of spinning; queued requests stay queued
+                break
             n += 1
         return self.scheduler.finished
 
@@ -458,9 +804,21 @@ class ServingEngine:
             "swaps": self.swaps,
             "replans": self.replanner.replans,
             "backend": self.backend_kind,
+            "kv_layout": self.kv_layout,
             "stage_blocks": self.stage_blocks,
             "placement": self.spec.describe(),
             "decode_wall_s": wall,
             "tok_per_s": (out["tokens_out"] / wall) if wall > 0 else 0.0,
+            "prefill_calls": self.prefill_calls,
+            "admissions": len(self.admission_ms),
         })
+        if self.admission_ms:
+            arr = np.asarray(self.admission_ms)
+            out["admission_p50_ms"] = float(np.percentile(arr, 50))
+            out["admission_p99_ms"] = float(np.percentile(arr, 99))
+        if self.kv_layout == "paged":
+            out["page_size"] = self.config.page_size
+            out["num_pages"] = self.pool.num_pages
+            out["free_pages"] = self.pool.free_pages
+            out["peak_pages_in_use"] = self.pool.peak_in_use
         return out

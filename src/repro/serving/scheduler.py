@@ -9,7 +9,10 @@ in a static batch drains.
 
 Pure host-side bookkeeping: no jax here. The engine (engine.py) owns the
 actual prefill/decode computation and calls in after every step with the
-tokens each slot produced.
+tokens each slot produced. ``PagePool`` is the matching allocator for the
+paged KV layout: slots hold *running* requests, pages hold their KV —
+admission waits on both (FIFO back-pressure via ``peek``), and completions
+recycle both.
 """
 from __future__ import annotations
 
@@ -75,6 +78,15 @@ class SlotScheduler:
         self._next_rid += 1
         self.queue.append(req)
         return req
+
+    def peek(self) -> Optional[Request]:
+        """The request ``admit_next`` would admit, or None — so the engine
+        can gate admission on resources (page-pool / timeline budget)
+        without popping. Strictly FIFO: a blocked head request blocks the
+        queue (no overtaking, no starvation)."""
+        if not self.queue or not self._free:
+            return None
+        return self.queue[0]
 
     def admit_next(self, step: int = -1) -> Optional[Tuple[int, Request]]:
         """Pop the oldest queued request into the lowest free slot."""
@@ -142,3 +154,48 @@ class SlotScheduler:
             "mean_queue_wait_steps": (sum(waits) / len(waits)) if waits
             else 0.0,
         }
+
+
+class PagePool:
+    """Host-side free-list allocator over the shared KV page pools.
+
+    Page ids index the device-side ``[num_pages, KVH, page_size, D]`` pools
+    (models/transformer.paged_kv_cache_spec). Page 0 is reserved as the null
+    page: zero block-table tails and idle slots point there, so it is never
+    allocated. The engine reserves a request's worst-case page count
+    (ceil((prompt + max_new) / page_size)) at admission and releases it on
+    completion — conservative versus grow-on-demand, but deadlock-free:
+    a blocked admission only ever waits on completions, never on another
+    waiter. Lifetime is unbounded: recycled pages serve new admissions
+    forever (no shared-timeline horizon).
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 2 and page_size >= 1
+        self.num_pages, self.page_size = num_pages, page_size
+        self._free: Deque[int] = deque(range(1, num_pages))
+        self.peak_in_use = 0
+        self.total_allocs = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, tokens: int) -> int:
+        return max(1, -(-tokens // self.page_size))
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n pages, or None if the pool can't supply them (caller waits)."""
+        if n > len(self._free):
+            return None
+        out = [self._free.popleft() for _ in range(n)]
+        self.total_allocs += n
+        in_use = self.num_pages - 1 - len(self._free)
+        self.peak_in_use = max(self.peak_in_use, in_use)
+        return out
+
+    def release(self, pages: Sequence[int]) -> None:
+        assert 0 not in pages, "null page is never allocated"
+        self._free.extend(pages)
+        assert len(self._free) <= self.num_pages - 1
+

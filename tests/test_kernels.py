@@ -78,6 +78,77 @@ def test_flash_gqa_wrapper():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5, rtol=3e-5)
 
 
+# ---------------------------------------------------------------------------
+# Paged decode attention: fused kernel vs page-gather oracle
+# ---------------------------------------------------------------------------
+def _paged_case(seed, B, KVH, rep, D, Pg, MP):
+    rng = np.random.RandomState(seed)
+    N = B * MP + 1                       # page 0 reserved null
+    q = jnp.asarray(rng.randn(B, KVH * rep, D).astype(np.float32))
+    kp = jnp.asarray(rng.randn(N, KVH, Pg, D).astype(np.float32))
+    vp = jnp.asarray(rng.randn(N, KVH, Pg, D).astype(np.float32))
+    # distinct non-null pages per row, shuffled (layout independence)
+    bt = rng.permutation(N - 1)[: B * MP].reshape(B, MP).astype(np.int32) + 1
+    sl = rng.randint(1, MP * Pg + 1, size=B).astype(np.int32)
+    return q, kp, vp, jnp.asarray(bt), jnp.asarray(sl)
+
+
+@pytest.mark.parametrize("B,KVH,rep,D,Pg,MP", [
+    (3, 2, 4, 16, 4, 5),
+    (2, 4, 1, 32, 8, 3),
+    (1, 1, 2, 64, 16, 2),
+    (4, 2, 2, 128, 8, 4),
+])
+def test_paged_kernel_matches_oracle(B, KVH, rep, D, Pg, MP):
+    q, kp, vp, bt, sl = _paged_case(7, B, KVH, rep, D, Pg, MP)
+    ker = KO.paged_attention(q, kp, vp, bt, sl, use_kernel=True)
+    ref = KO.paged_attention(q, kp, vp, bt, sl, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_paged_kernel_idle_rows_are_finite():
+    """seq_len == 0 rows (idle slots parked on the null page) must produce
+    finite garbage, not NaNs that could poison downstream reductions."""
+    q, kp, vp, bt, sl = _paged_case(8, 3, 2, 2, 16, 4, 3)
+    sl = sl.at[1].set(0)
+    for use_kernel in (False, True):
+        out = KO.paged_attention(q, kp, vp, bt, sl, use_kernel=use_kernel)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+def test_paged_oracle_matches_dense_decode_attention():
+    """Packing a dense [B, KVH, S, D] cache into pages must reproduce
+    decode_attention row-for-row (same math, block-table indirection)."""
+    from repro.models import layers as L
+    rng = np.random.RandomState(9)
+    B, H, KVH, D, S, Pg = 3, 4, 2, 16, 24, 4
+    MP = S // Pg
+    q4 = jnp.asarray(rng.randn(B, 1, H, D).astype(np.float32))
+    k = jnp.asarray(rng.randn(B, KVH, S, D).astype(np.float32))
+    v = jnp.asarray(rng.randn(B, KVH, S, D).astype(np.float32))
+    lens = np.asarray([5, 24, 17], np.int32)
+    # pack: row b's position t -> page 1 + b*MP + t//Pg, offset t%Pg
+    kp = np.zeros((1 + B * MP, KVH, Pg, D), np.float32)
+    vp = np.zeros_like(kp)
+    bt = np.zeros((B, MP), np.int32)
+    for b in range(B):
+        for pi in range(MP):
+            pid = 1 + b * MP + pi
+            bt[b, pi] = pid
+            kp[pid] = np.asarray(k)[b, :, pi * Pg:(pi + 1) * Pg]
+            vp[pid] = np.asarray(v)[b, :, pi * Pg:(pi + 1) * Pg]
+    paged = KR.paged_attention_ref(q4[:, 0], jnp.asarray(kp),
+                                   jnp.asarray(vp), jnp.asarray(bt),
+                                   jnp.asarray(lens))
+    for b in range(B):
+        dense = L.decode_attention(q4[b:b + 1], k[b:b + 1], v[b:b + 1],
+                                   jnp.int32(lens[b]))
+        np.testing.assert_allclose(np.asarray(paged)[b],
+                                   np.asarray(dense)[0, 0],
+                                   atol=2e-5, rtol=2e-5)
+
+
 def test_seal_bf16_dtypes():
     x = jax.random.normal(jax.random.PRNGKey(6), (64, 64), jnp.float32)
     c, s = KR.seal_ref(x.astype(jnp.bfloat16), jnp.uint32(1), jnp.uint32(2))

@@ -302,11 +302,33 @@ def test_engine_sampling_deterministic_and_isolated(f32_dtype):
     assert batched == run(0)                # batch-mate independence
 
 
-def test_engine_horizon_guard(f32_dtype):
+def test_engine_timeline_horizon_backpressure(f32_dtype):
+    """The legacy timeline no longer crashes at the horizon: admission
+    back-pressures (a request whose worst case can't fit waits), and a
+    permanently blocked head of queue stalls the engine gracefully."""
+    cfg, _, _, eng = _f32_engine(max_seq=32, prompt_capacity=8,
+                                 kv_layout="timeline")
+    fits = eng.submit([1, 2, 3], max_new_tokens=4)
+    never = eng.submit([1, 2, 3], max_new_tokens=1000)   # > horizon forever
+    eng.run(max_steps=100)
+    assert fits.status == DONE
+    assert never.status == "queued"
+    assert eng.stalled
+    assert any(e.kind == "backpressure" and e.detail["waiting_on"] ==
+               "timeline" for e in eng.events)
+    # repeated steps stay graceful (no RuntimeError) and make no progress
+    before = eng.steps
+    eng.step()
+    assert eng.steps == before and eng.stalled
+
+
+def test_engine_paged_submit_capacity_guard(f32_dtype):
+    """Paged submissions exceeding per-request page capacity are rejected at
+    submit time (the pool reserves worst-case pages at admission)."""
     cfg, _, _, eng = _f32_engine(max_seq=32, prompt_capacity=8)
-    eng.submit([1, 2, 3], max_new_tokens=1000)
-    with pytest.raises(RuntimeError, match="horizon"):
-        eng.run()
+    assert eng.kv_layout == "paged"
+    with pytest.raises(AssertionError, match="request_capacity"):
+        eng.submit([1, 2, 3], max_new_tokens=1000)
 
 
 # ---------------------------------------------------------------------------
@@ -369,10 +391,10 @@ params = jax.tree.map(lambda x: x.astype(jnp.float32)
                       api.init(jax.random.PRNGKey(0)))
 mesh = make_mesh((2, 2), ('pod', 'data'))
 
-def run(backend, inject):
+def run(backend, inject, kv_layout='paged'):
     ec = EngineConfig(num_slots=4, num_microbatches=2, max_seq=128,
                       prompt_capacity=16, telemetry_interval=4,
-                      seal_boundary=False)
+                      seal_boundary=False, kv_layout=kv_layout)
     eng = ServingEngine(api, mesh=mesh, config=ec, params=params,
                         backend=backend)
     if inject:
@@ -393,9 +415,12 @@ def run(backend, inject):
 def test_engine_pipelined_matches_local(subproc):
     body = """
 e_pipe, toks_pipe = run('pipelined', inject=False)
-assert e_pipe.backend_kind == 'pipelined'
+assert e_pipe.backend_kind == 'pipelined' and e_pipe.kv_layout == 'paged'
 e_loc, toks_loc = run('local', inject=False)
 assert toks_pipe == toks_loc, (toks_pipe, toks_loc)
+e_tl, toks_tl = run('pipelined', inject=False, kv_layout='timeline')
+assert e_tl.kv_layout == 'timeline'
+assert toks_tl == toks_loc, (toks_tl, toks_loc)
 print('OK')
 """
     out = subproc(ENGINE_PIPE_CODE.format(body=body), devices=4)
