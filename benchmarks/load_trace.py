@@ -1,0 +1,209 @@
+"""Trace-driven load generator for the serving engine.
+
+ROADMAP: "traffic shaped like millions of users" — the serving benchmarks so
+far used uniform arrivals, which never exercise the regimes demand paging
+exists for: bursts that overcommit the page pool (preemption), quiet valleys
+that let the COW prefix index fill (shared-system-prompt reuse), and long
+diurnal swings between the two. This module generates *replayable* arrival
+traces:
+
+* **bursty** — Poisson bursts: geometric gaps between bursts, each burst a
+  cluster of near-simultaneous arrivals (thundering herds hitting a shared
+  endpoint);
+* **diurnal** — a sinusoidal arrival rate over the horizon (day/night load
+  swing), thinned per-step;
+* **uniform** — fixed inter-arrival gap (the legacy benchmark shape, kept as
+  the control).
+
+Every request draws a prompt; with probability ``shared_ratio`` the prompt
+extends one of ``num_system_prompts`` fixed system prompts — the knob that
+drives copy-on-write page sharing (identical fleets of user sessions sharing
+one deployment prompt, as in the paper's surveillance-fleet setting).
+
+Traces are pure data — ``(step, prompt, max_new, eos_id)`` tuples, fully
+determined by ``TraceConfig`` (seeded) — and replay through
+``ServingEngine.run_trace``, so a trace is a reproducible experiment: same
+config, same trace, same token streams.
+
+  PYTHONPATH=src python benchmarks/load_trace.py --pattern bursty --smoke
+  PYTHONPATH=src python benchmarks/load_trace.py --pattern diurnal \\
+      --requests 64 --shared-ratio 0.7 --json BENCH_trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+Arrival = Tuple[int, List[int], int, Optional[int]]
+
+
+@dataclasses.dataclass
+class TraceConfig:
+    seed: int = 0
+    num_requests: int = 32
+    pattern: str = "bursty"            # bursty | diurnal | uniform
+    # arrivals
+    mean_gap: float = 3.0              # mean steps between arrivals/bursts
+    burst_size: int = 4                # bursty: arrivals per burst (mean)
+    diurnal_period: int = 64           # diurnal: steps per day/night cycle
+    diurnal_floor: float = 0.1         # valley rate as a fraction of peak
+    # prompts
+    vocab_size: int = 256
+    prompt_min: int = 2
+    prompt_max: int = 12
+    max_new_min: int = 2
+    max_new_max: int = 10
+    eos_prob: float = 0.3              # chance a request gets an eos token
+    # prefix sharing
+    shared_ratio: float = 0.5          # prompts extending a system prompt
+    num_system_prompts: int = 2
+    system_prompt_len: int = 8
+
+    def validate(self):
+        assert self.pattern in ("bursty", "diurnal", "uniform"), self.pattern
+        assert 1 <= self.prompt_min <= self.prompt_max
+        assert 1 <= self.max_new_min <= self.max_new_max
+        assert 0.0 <= self.shared_ratio <= 1.0
+
+
+def _arrival_steps(cfg: TraceConfig, rng: np.random.RandomState) -> List[int]:
+    n, out, step = cfg.num_requests, [], 0
+    if cfg.pattern == "uniform":
+        gap = max(1, int(round(cfg.mean_gap)))
+        return [i * gap for i in range(n)]
+    if cfg.pattern == "bursty":
+        while len(out) < n:
+            # geometric inter-burst gap, then a herd of near-simultaneous
+            # arrivals (0-1 step apart inside the burst)
+            step += int(rng.geometric(1.0 / max(cfg.mean_gap, 1.0)))
+            size = max(1, int(rng.poisson(cfg.burst_size)))
+            for _ in range(min(size, n - len(out))):
+                out.append(step)
+                step += int(rng.randint(0, 2))
+        return out
+    # diurnal: sinusoidal rate, peak 1/mean_gap, thinned per step
+    peak = 1.0 / max(cfg.mean_gap, 1.0)
+    while len(out) < n:
+        phase = 2 * np.pi * (step % cfg.diurnal_period) / cfg.diurnal_period
+        level = cfg.diurnal_floor + (1 - cfg.diurnal_floor) \
+            * 0.5 * (1 + np.sin(phase))
+        if rng.rand() < peak * level:
+            out.append(step)
+        step += 1
+    return out
+
+
+def generate_trace(cfg: TraceConfig) -> List[Arrival]:
+    """The trace: ``(arrival_step, prompt, max_new, eos_id)`` per request,
+    sorted by step, fully determined by ``cfg`` (same seed -> same trace)."""
+    cfg.validate()
+    rng = np.random.RandomState(cfg.seed)
+    system_prompts = [rng.randint(0, cfg.vocab_size,
+                                  size=cfg.system_prompt_len).tolist()
+                      for _ in range(cfg.num_system_prompts)]
+    steps = _arrival_steps(cfg, rng)
+    out: List[Arrival] = []
+    for s in steps:
+        if rng.rand() < cfg.shared_ratio and system_prompts:
+            base = system_prompts[int(rng.randint(len(system_prompts)))]
+            tail = rng.randint(0, cfg.vocab_size,
+                               size=int(rng.randint(1, 5))).tolist()
+            prompt = (base + tail)[:cfg.prompt_max]
+        else:
+            n = int(rng.randint(cfg.prompt_min, cfg.prompt_max + 1))
+            prompt = rng.randint(0, cfg.vocab_size, size=n).tolist()
+        max_new = int(rng.randint(cfg.max_new_min, cfg.max_new_max + 1))
+        eos = int(rng.randint(0, cfg.vocab_size)) \
+            if rng.rand() < cfg.eos_prob else None
+        out.append((s, prompt, max_new, eos))
+    return sorted(out, key=lambda a: a[0])
+
+
+def replay(engine, trace: List[Arrival], max_steps: Optional[int] = None):
+    """Replay through ``ServingEngine.run_trace``; returns (requests, stats)
+    with completion accounting added."""
+    t0 = time.perf_counter()
+    reqs = engine.run_trace(trace, max_steps=max_steps)
+    wall = time.perf_counter() - t0
+    st = engine.stats()
+    st["trace_requests"] = len(trace)
+    st["trace_completed"] = sum(1 for r in reqs if r.status == "done")
+    st["trace_wall_s"] = wall
+    return reqs, st
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--pattern", default="bursty",
+                    choices=["bursty", "diurnal", "uniform"])
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shared-ratio", type=float, default=0.5)
+    ap.add_argument("--mean-gap", type=float, default=3.0)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--num-pages", type=int, default=0)
+    ap.add_argument("--page-policy", default="demand",
+                    choices=["demand", "reserve"])
+    ap.add_argument("--json", default="",
+                    help="write trace + replay stats to this path")
+    ap.add_argument("--trace-only", action="store_true",
+                    help="emit the trace without replaying it")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.requests = 12
+
+    import jax
+    from repro.configs import get_arch, reduced
+    from repro.models.api import build_model
+
+    arch = reduced(get_arch(args.arch))
+    tcfg = TraceConfig(seed=args.seed, num_requests=args.requests,
+                       pattern=args.pattern, mean_gap=args.mean_gap,
+                       vocab_size=arch.vocab_size,
+                       shared_ratio=args.shared_ratio)
+    trace = generate_trace(tcfg)
+    print(f"trace: {len(trace)} arrivals over {trace[-1][0] + 1} steps "
+          f"({args.pattern}, shared_ratio={args.shared_ratio})")
+    if args.trace_only:
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"config": dataclasses.asdict(tcfg),
+                           "trace": trace}, f, indent=1)
+            print(f"wrote {args.json}")
+        return trace, None
+
+    from repro.serving import EngineConfig, ServingEngine
+    api = build_model(arch, max_seq=256)
+    params = api.init(jax.random.PRNGKey(0))
+    ec = EngineConfig(num_slots=args.slots, num_stages=1, num_microbatches=1,
+                      prompt_capacity=TraceConfig.prompt_max + 4,
+                      request_capacity=32, page_size=args.page_size,
+                      num_pages=args.num_pages, page_policy=args.page_policy,
+                      telemetry_interval=64)
+    eng = ServingEngine(api, config=ec, params=params, backend="local")
+    reqs, st = replay(eng, trace)
+    print(f"completed {st['trace_completed']}/{st['trace_requests']} "
+          f"in {st['steps']} steps; preemptions={st.get('preemptions', 0)} "
+          f"cow_hits={st.get('cow_hits', 0)} forks={st.get('forks', 0)} "
+          f"peak_slots={st.get('peak_running_slots', 0)}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"config": dataclasses.asdict(tcfg),
+                       "replay": {k: st[k] for k in sorted(st)
+                                  if isinstance(st[k],
+                                                (int, float, str, bool))}},
+                      f, indent=1)
+        print(f"wrote {args.json}")
+    return trace, st
+
+
+if __name__ == "__main__":
+    main()

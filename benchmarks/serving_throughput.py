@@ -14,10 +14,24 @@ trajectory (DESIGN.md §Paged KV cache):
                         telemetry re-plan with live cache migration (the
                         tok/s delta IS the swap overhead).
 
+Two capacity phases then rerun the stream against a deliberately small
+page pool (~half the reserve worst case) at both page policies
+(DESIGN.md §Demand paging & copy-on-write):
+
+* ``demand_overcommit`` / ``reserve_overcommit`` — same stream, same pool:
+  reserve can only admit as many slots as worst-case reservations fit, so
+  it queues; demand admits on prompt pages alone and preempts on true
+  exhaustion, so it must run strictly more concurrent slots — that
+  ``peak_running_slots`` gap is the demand-paging headline and is asserted;
+* ``demand_shared`` / ``demand_noshare`` — a shared-system-prompt stream
+  with the COW prefix index on vs off: same tokens, fewer peak pages.
+
 Emits machine-readable ``BENCH_serving.json`` (tok/s, admission p50/p99,
-speedups) so every PR from here on can track the serving trajectory, and
-``--verify-swap`` asserts the re-plan run's token streams are identical to
-the undisturbed paged run (requires ``--f32``).
+speedups, capacity) so every PR from here on can track the serving
+trajectory; ``--verify-swap`` asserts the re-plan run's token streams are
+identical to the undisturbed paged run, and ``--verify-overcommit``
+asserts the overcommitted demand/reserve runs produce bit-identical
+streams (both require ``--f32``).
 
   PYTHONPATH=src python benchmarks/serving_throughput.py --smoke
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
@@ -61,6 +75,9 @@ def parse_args(argv=None):
     ap.add_argument("--verify-swap", action="store_true",
                     help="assert the re-plan phase's token streams equal "
                          "the undisturbed paged run")
+    ap.add_argument("--verify-overcommit", action="store_true",
+                    help="assert demand and reserve produce identical "
+                         "token streams on the overcommitted pool")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="machine-readable output path ('' to skip)")
     ap.add_argument("--smoke", action="store_true",
@@ -68,14 +85,15 @@ def parse_args(argv=None):
     return ap.parse_args(argv)
 
 
-def make_config(args, kv_layout: str, batched_prefill: bool) -> EngineConfig:
+def make_config(args, kv_layout: str, batched_prefill: bool,
+                **over) -> EngineConfig:
     # each layout is sized to sustain the same workload: the timeline needs
     # a horizon covering the whole stream's shared positions, the paged pool
     # only per-request capacity x slots — that asymmetry IS the perf story
     max_seq = (args.prompt_len + args.requests * args.arrival_every
                + args.max_new * args.requests // args.slots
                + args.max_new + 16)
-    return EngineConfig(
+    kw = dict(
         num_slots=args.slots, num_stages=args.stages,
         num_microbatches=args.microbatches, max_seq=max_seq,
         prompt_capacity=args.prompt_len,
@@ -83,17 +101,21 @@ def make_config(args, kv_layout: str, batched_prefill: bool) -> EngineConfig:
         request_capacity=args.prompt_len + args.max_new,
         batched_prefill=batched_prefill, seal_boundary=False,
         telemetry_interval=args.telemetry_interval)
+    kw.update(over)
+    return EngineConfig(**kw)
 
 
-def run_stream(api, params, mesh, args, ec: EngineConfig, inject=None):
+def run_stream(api, params, mesh, args, ec: EngineConfig, inject=None,
+               prompts=None):
     eng = ServingEngine(api, mesh=mesh, config=ec, params=params)
     if inject:
         eng.telemetry.inject(*inject)
     rng = np.random.RandomState(args.seed)
-    prompts = [rng.randint(0, api.cfg.vocab_size,
-                           size=int(rng.randint(2, args.prompt_len + 1))
-                           ).tolist()
-               for _ in range(args.requests)]
+    if prompts is None:
+        prompts = [rng.randint(0, api.cfg.vocab_size,
+                               size=int(rng.randint(2, args.prompt_len + 1))
+                               ).tolist()
+                   for _ in range(args.requests)]
     # warmup: compile decode + every prefill bucket off the clock, then drop
     # it from the stats (its wall time was cleared, so its tokens must not
     # count either). One prompt per bucket the stream can hit — asking the
@@ -107,6 +129,11 @@ def run_stream(api, params, mesh, args, ec: EngineConfig, inject=None):
     eng.scheduler.finished.clear()
     eng.admission_ms.clear()
     eng.prefill_calls = 0
+    if eng.kv_layout == "paged":
+        # paging counters must reflect the measured stream, not the warmup
+        eng.preemptions = eng.peak_running = 0
+        eng.pool.cow_hits = eng.pool.forks = eng.pool.evictions = 0
+        eng.pool.peak_in_use = eng.pool.num_pages - 1 - eng.pool.free_pages
 
     reqs, k, t0 = [], 0, time.perf_counter()
     while k < len(prompts) or eng.scheduler.has_work():
@@ -145,7 +172,9 @@ PHASES = [
 KEEP = ("backend", "kv_layout", "completed", "tokens_out", "decode_wall_s",
         "tok_per_s", "stream_wall_s", "stream_tok_per_s", "prefill_calls",
         "admissions", "admission_p50_ms", "admission_p99_ms",
-        "mean_queue_wait_steps", "replans", "swaps", "peak_pages_in_use")
+        "mean_queue_wait_steps", "replans", "swaps", "peak_pages_in_use",
+        "steps", "page_policy", "preemptions", "cow_hits", "forks",
+        "evictions", "peak_running_slots")
 
 
 def main(argv=None):
@@ -191,6 +220,70 @@ def main(argv=None):
         results[name]["final_blocks"] = list(st["stage_blocks"])
         streams[name] = [r.generated for r in reqs]
 
+    # -- overcommit: same stream, pool ~half the reserve worst case --------
+    # reserve admits only while worst-case reservations fit; demand admits
+    # on prompt pages and preempts on true exhaustion. Strictly more
+    # concurrent slots at the same pool size is the acceptance headline.
+    # Uniform-length prompts make reserve's bound exact (every request
+    # reserves pages_per_req pages, concurrency = usable // ppr); a
+    # half-empty last prompt page gives demand its head start — admission
+    # takes prompt pages only, growth comes page_size/2 decode steps later.
+    plen = max(2, args.prompt_len - args.page_size // 2)
+    if plen % args.page_size == 0:
+        plen = max(2, plen - 1)
+    pages_per_req = -(-(plen + args.max_new) // args.page_size)
+    over_pages = 1 + max(pages_per_req + 2,            # demand progress
+                         args.slots * pages_per_req // 2 + 1)
+    rng = np.random.RandomState(args.seed + 2)
+    over_prompts = [rng.randint(0, api.cfg.vocab_size, size=plen).tolist()
+                    for _ in range(args.requests)]
+    for policy in ("demand", "reserve"):
+        ec = make_config(args, "paged", True, num_pages=over_pages,
+                         page_policy=policy,
+                         prefix_sharing=(policy == "demand"))
+        eng, reqs, st = run_stream(api, params, mesh, args, ec,
+                                   prompts=over_prompts)
+        name = f"{policy}_overcommit"
+        results[name] = {k: st[k] for k in KEEP if k in st}
+        results[name]["final_blocks"] = list(st["stage_blocks"])
+        streams[name] = [r.generated for r in reqs]
+    oc_d, oc_r = (results["demand_overcommit"],
+              results["reserve_overcommit"])
+    assert oc_d["completed"] == oc_r["completed"] == args.requests, \
+        f"overcommit deadlock: demand {oc_d['completed']}, " \
+        f"reserve {oc_r['completed']} of {args.requests} completed"
+    if pages_per_req > 1:     # with 1-page requests the policies coincide
+        assert oc_d["peak_running_slots"] > oc_r["peak_running_slots"], \
+            f"demand paging must admit strictly more concurrent slots at " \
+            f"{over_pages - 1} pages (demand {oc_d['peak_running_slots']} " \
+            f"vs reserve {oc_r['peak_running_slots']})"
+
+    # -- shared-system-prompt stream: COW prefix index on vs off -----------
+    rng = np.random.RandomState(args.seed + 1)
+    sys_prompt = rng.randint(0, api.cfg.vocab_size,
+                             size=min(args.page_size,
+                                      args.prompt_len)).tolist()
+    tail_room = args.prompt_len - len(sys_prompt)
+    shared_prompts = [
+        sys_prompt + rng.randint(0, api.cfg.vocab_size,
+                                 size=int(rng.randint(0, tail_room + 1))
+                                 ).tolist()
+        for _ in range(args.requests)]
+    for name, sharing in (("demand_shared", True), ("demand_noshare", False)):
+        ec = make_config(args, "paged", True, prefix_sharing=sharing)
+        eng, reqs, st = run_stream(api, params, mesh, args, ec,
+                                   prompts=shared_prompts)
+        results[name] = {k: st[k] for k in KEEP if k in st}
+        results[name]["final_blocks"] = list(st["stage_blocks"])
+        streams[name] = [r.generated for r in reqs]
+    oc_sh, oc_no = (results["demand_shared"],
+                results["demand_noshare"])
+    if len(sys_prompt) == args.page_size:     # prefix spans a full page
+        assert oc_sh["cow_hits"] > 0, \
+            "shared system prompts produced no COW hits"
+        assert oc_sh["peak_pages_in_use"] <= oc_no["peak_pages_in_use"], \
+            "prefix sharing must not use more pages than private copies"
+
     speedup = {
         # steady-state decode throughput (per-step decode wall only): the
         # dense timeline attends/copies over the engine-lifetime horizon,
@@ -212,6 +305,16 @@ def main(argv=None):
         "replan_overhead_tok_per_s":
             results["paged_replan"]["stream_tok_per_s"]
             / max(results["paged_batched"]["stream_tok_per_s"], 1e-9),
+        # fixed-pool capacity: how many more slots demand keeps running,
+        # and how much sooner the overcommitted stream drains
+        "demand_vs_reserve_overcommit_slots":
+            oc_d["peak_running_slots"]
+            / max(oc_r["peak_running_slots"], 1e-9),
+        "demand_vs_reserve_overcommit_steps":
+            oc_r["steps"] / max(oc_d["steps"], 1e-9),
+        "prefix_sharing_page_savings":
+            oc_no["peak_pages_in_use"]
+            / max(oc_sh["peak_pages_in_use"], 1e-9),
     }
 
     hdr = ("phase,backend,kv_layout,requests,tokens,tok_per_s,"
@@ -229,6 +332,15 @@ def main(argv=None):
               f"{'/'.join(map(str, r['final_blocks']))}")
     for k, v in speedup.items():
         print(f"speedup:{k},{v:.2f}x")
+    print(f"overcommit: {over_pages - 1} pages, "
+          f"demand slots={oc_d['peak_running_slots']} "
+          f"preemptions={oc_d['preemptions']} steps={oc_d['steps']} | "
+          f"reserve slots={oc_r['peak_running_slots']} "
+          f"steps={oc_r['steps']}")
+    print(f"shared-prefix: cow_hits={oc_sh['cow_hits']} "
+          f"forks={oc_sh['forks']} "
+          f"peak_pages {oc_sh['peak_pages_in_use']} (shared) vs "
+          f"{oc_no['peak_pages_in_use']} (private)")
 
     if args.json:
         payload = {
@@ -239,6 +351,17 @@ def main(argv=None):
                         "arrival_every", "smoke", "f32")},
             "phases": results,
             "speedup": speedup,
+            "overcommit": {
+                "pool_pages": over_pages - 1,
+                "pages_per_request_worst_case": pages_per_req,
+                "demand_peak_running_slots": oc_d["peak_running_slots"],
+                "reserve_peak_running_slots": oc_r["peak_running_slots"],
+                "demand_preemptions": oc_d["preemptions"],
+                "demand_steps": oc_d["steps"],
+                "reserve_steps": oc_r["steps"],
+                "all_completed": oc_d["completed"] == oc_r["completed"]
+                == args.requests,
+            },
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
@@ -260,6 +383,20 @@ def main(argv=None):
         assert streams["paged_batched"] == streams["paged_pertoken"], \
             "batched prefill diverged from per-token prefill"
         print("PREFILL-EXACT OK: batched == per-token admission streams")
+    if args.verify_overcommit:
+        assert args.f32, "--verify-overcommit needs --f32 (exact compare)"
+        a = [list(map(int, s)) for s in streams["demand_overcommit"]]
+        b = [list(map(int, s)) for s in streams["reserve_overcommit"]]
+        assert a == b, "token streams diverged between demand (with " \
+            "preemption + COW) and reserve on the overcommitted pool"
+        print(f"OVERCOMMIT-EXACT OK: {len(a)} streams identical across "
+              f"page policies at {over_pages - 1} pages "
+              f"({oc_d['preemptions']} preemptions, "
+              f"{oc_d['cow_hits']} COW hits)")
+        c = [list(map(int, s)) for s in streams["demand_shared"]]
+        e = [list(map(int, s)) for s in streams["demand_noshare"]]
+        assert c == e, "token streams diverged with prefix sharing on"
+        print("SHARED-EXACT OK: prefix sharing preserved token streams")
     return results, speedup
 
 

@@ -3,6 +3,8 @@ module-level constant) so importing this module touches no jax device state.
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
 
 try:
@@ -28,3 +30,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary test mesh (e.g. (2, 2) x ('pod', 'data') on CPU)."""
     return _mesh(tuple(shape), tuple(axes))
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` where it exists (jax >= 0.6). Older jax has no
+    ambient-mesh API, and none is needed there: every step builder threads
+    its mesh explicitly through NamedSharding / axis_rules, so the context
+    degrades to a no-op instead of an ImportError."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return contextlib.nullcontext()

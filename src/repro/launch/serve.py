@@ -72,6 +72,18 @@ def build_parser() -> argparse.ArgumentParser:
                     help="shared page-pool size (0 = all slots at full "
                          "request capacity; smaller pools exercise "
                          "admission back-pressure)")
+    ap.add_argument("--page-policy", default="demand",
+                    choices=["demand", "reserve"],
+                    help="demand: allocate pages as generation reaches "
+                         "them, COW prefix sharing + preemption on "
+                         "exhaustion; reserve: admit only on worst-case "
+                         "reservation (PR 5 baseline)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable the COW prefix index (demand policy)")
+    ap.add_argument("--shared-system-prompt", type=float, default=0.0,
+                    metavar="RATIO",
+                    help="fraction of synthetic prompts extending one "
+                         "fixed system prompt (drives COW page sharing)")
     ap.add_argument("--per-token-prefill", action="store_true",
                     help="disable one-call batched prefill (admission-"
                          "latency baseline)")
@@ -116,7 +128,8 @@ def _make_engine(api, params, mesh, args) -> ServingEngine:
         num_microbatches=args.microbatches, max_seq=max_seq,
         prompt_capacity=args.prompt_len,
         kv_layout=args.kv_layout, page_size=args.page_size,
-        num_pages=args.num_pages,
+        num_pages=args.num_pages, page_policy=args.page_policy,
+        prefix_sharing=not args.no_prefix_sharing,
         request_capacity=args.prompt_len + args.max_new,
         batched_prefill=not args.per_token_prefill,
         seal_boundary=not args.no_seal, solver=args.solver,
@@ -132,10 +145,20 @@ def _make_engine(api, params, mesh, args) -> ServingEngine:
 def _serve_stream(eng: ServingEngine, args, cfg):
     """Submit a deterministic synthetic arrival stream and drain it."""
     rng = np.random.RandomState(args.seed)
-    prompts = [rng.randint(0, cfg.vocab_size,
-                           size=int(rng.randint(2, args.prompt_len + 1))
-                           ).tolist()
-               for _ in range(args.requests)]
+    sys_prompt = rng.randint(0, cfg.vocab_size,
+                             size=max(2, args.prompt_len // 2)).tolist()
+    prompts = []
+    for _ in range(args.requests):
+        if rng.rand() < args.shared_system_prompt:
+            tail = rng.randint(
+                0, cfg.vocab_size,
+                size=int(rng.randint(0, args.prompt_len
+                                     - len(sys_prompt) + 1))).tolist()
+            prompts.append(sys_prompt + tail)
+        else:
+            prompts.append(rng.randint(
+                0, cfg.vocab_size,
+                size=int(rng.randint(2, args.prompt_len + 1))).tolist())
     reqs = []
     k = 0
     while k < len(prompts) or eng.scheduler.has_work():

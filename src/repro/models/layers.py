@@ -282,15 +282,22 @@ def paged_write(k_pages, v_pages, k_new, v_new, block_tables, seq_lens):
     k_new, v_new: [B, KVH, D] — token at position ``seq_lens[b]`` of row b,
     which lives in page ``block_tables[b, seq_lens[b] // Pg]`` at offset
     ``seq_lens[b] % Pg``. Rows whose table entry is the null page (idle
-    slots, exhausted tables — gather clamps out-of-range) write harmlessly
-    into page 0."""
-    Pg = k_pages.shape[2]
+    slots, exhausted tables — gather clamps out-of-range) are *dropped*:
+    the write index is pushed out of range and scatter-mode ``drop``
+    discards it, so page 0 is immutable for the pool's whole lifetime (a
+    PagePool invariant the property tests audit). Ref-counted sharing
+    (copy-on-write prefixes) relies on the same honor system one level up:
+    the engine forks any page whose refcount exceeds 1 before it can be
+    named here as a write target, so this scatter only ever lands on pages
+    with exactly one owner."""
+    N, _, Pg, _ = k_pages.shape
     page = jnp.take_along_axis(
         block_tables, (seq_lens // Pg)[:, None], axis=1)[:, 0]     # [B]
+    page = jnp.where(page == 0, N, page)    # null target -> out of range
     off = seq_lens % Pg
     # advanced indices split by the head slice put the batch dim first
-    k_pages = k_pages.at[page, :, off].set(k_new)
-    v_pages = v_pages.at[page, :, off].set(v_new)
+    k_pages = k_pages.at[page, :, off].set(k_new, mode="drop")
+    v_pages = v_pages.at[page, :, off].set(v_new, mode="drop")
     return k_pages, v_pages
 
 

@@ -52,8 +52,18 @@ def capacity(tokens: int, k: int, num_experts: int,
     return max(8, -(-c // 8) * 8)  # round up to multiple of 8
 
 
-def moe_mlp_apply(cfg: ArchConfig, p, x, *, capacity_factor: float = CAPACITY_FACTOR):
-    """x: [B, S, D] -> [B, S, D]; also returns aux load-balancing loss."""
+def moe_mlp_apply(cfg: ArchConfig, p, x, *, capacity_factor: float = CAPACITY_FACTOR,
+                  drop_tokens: bool = True):
+    """x: [B, S, D] -> [B, S, D]; also returns aux load-balancing loss.
+
+    ``drop_tokens=False`` sizes the dispatch buffers for the worst case
+    (C = T*K) so no token is ever dropped. Inference REQUIRES it: capacity
+    is a function of the token count T, which differs between prefill
+    (T = B*S) and decode (T = B), so capacity-dropped prefill activations
+    would diverge from their decode-path counterparts (the qwen2-moe
+    prefill/decode consistency failure). Training keeps the capacity
+    bound — dropping is part of the Switch-style load-balancing contract
+    and the buffers stay O(T*K/E * factor)."""
     B, S, D = x.shape
     E, K = cfg.num_experts, cfg.num_experts_per_tok
     T = B * S
@@ -71,7 +81,10 @@ def moe_mlp_apply(cfg: ArchConfig, p, x, *, capacity_factor: float = CAPACITY_FA
     onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)            # [TK, E]
     pos = (jnp.cumsum(onehot, axis=0) - onehot)                    # exclusive
     pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]  # [TK]
-    C = capacity(T, K, E, capacity_factor)
+    if drop_tokens:
+        C = capacity(T, K, E, capacity_factor)
+    else:
+        C = max(8, -(-T * K // 8) * 8)         # worst case: nothing dropped
     keep = pos_in_e < C
 
     # scatter tokens into [E, C, D] buffers (overflow dropped)
@@ -127,7 +140,10 @@ def moe_block_apply(cfg: ArchConfig, p, x, positions, *, mode, cache,
                     cache_len, pos3=None, cache_quant=False, start=None,
                     paged=None, paged_kernel=False):
     def mlp_fn(pp, h):
-        out, _aux = moe_mlp_apply(cfg, pp["moe"], h)
+        # inference paths (prefill + decode) must agree token-for-token, so
+        # they dispatch without capacity dropping; only training drops
+        out, _aux = moe_mlp_apply(cfg, pp["moe"], h,
+                                  drop_tokens=(mode == "train"))
         return out
 
     return dense_block_apply(cfg, p, x, positions, mode=mode, cache=cache,

@@ -259,7 +259,18 @@ class PipelinedDecoder:
         warm-up/drain ticks are masked out before committing (their
         boundary activations are garbage). Positions are per-row 0-based —
         the continuous-batching ``start`` mask is unnecessary by
-        construction."""
+        construction.
+
+        Demand paging / COW contract (DESIGN.md §Demand paging): block
+        tables may reference ref-counted pages shared across rows or
+        frozen in the engine's prefix index. The decoder itself never
+        needs to know — the engine guarantees, before every step, that
+        each row's *next write position* is backed by a private
+        (refcount-1) page, forking shared pages host-side first; reads
+        gather freely across shared pages. ``restage_cache`` migration is
+        refcount-oblivious by the same token: page ids are stable across
+        a boundary swap (only the layer→stage layout of the pools moves),
+        so host-side refcounts and block tables ride along unchanged."""
         api, seg, S = self.api, self.seg, self.num_stages
         nm, bps = self.num_microbatches, self.bps
         cfg = api.cfg

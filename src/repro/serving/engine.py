@@ -5,13 +5,20 @@ request server (the paper's Fig. 2 loop as a service):
 
 * **paged per-slot KV cache (default)** — KV lives in shared page pools
   indexed by per-slot block tables (``kv_layout="paged"``, DESIGN.md §Paged
-  KV cache). Admission reserves a request's worst-case pages, the whole
+  KV cache / §Demand paging & copy-on-write). Under the default
+  ``page_policy="demand"``, admission takes only the *prompt's* pages —
+  identical prompt-prefix pages are adopted from a copy-on-write index —
+  block tables grow one ref-counted page per decode step (forking shared
+  pages before the first divergent write), and pool exhaustion preempts
+  the youngest slot (its generated tokens requeue as a prompt extension)
+  instead of gating admission. ``page_policy="reserve"`` keeps the PR 5
+  worst-case reservation as the property-test oracle. Either way the whole
   prompt prefills in ONE jitted call (``prefill_at_fn``, right-padded to
-  power-of-two buckets), and completion recycles the pages — so the engine
-  runs indefinitely: there is no shared-timeline horizon, and per-step
-  attention cost is bounded by per-request capacity, not engine lifetime.
-  Positions are 0-based per request, which *removes* the ``start``-mask and
-  RoPE-offset machinery rather than hiding it.
+  power-of-two buckets), completion recycles pages, and the engine runs
+  indefinitely: no shared-timeline horizon, per-step attention bounded by
+  per-request capacity, not lifetime. Positions are 0-based per request,
+  which *removes* the ``start``-mask and RoPE-offset machinery rather
+  than hiding it.
 * **legacy shared position timeline** (``kv_layout="timeline"``, and the
   automatic fallback for recurrent-state / SWA / quantized-cache models) —
   one dense cache advancing a global position per step; offset prefill one
@@ -74,6 +81,15 @@ class EngineConfig:
     request_capacity: int = 0           # max prompt+max_new (0 = auto)
     num_pages: int = 0                  # shared pool size (0 = auto: all
     #                                     slots at full request_capacity)
+    # page allocation policy (DESIGN.md §Demand paging):
+    #   "demand"  — block tables grow one page per decode step; admission
+    #               needs only the prompt's pages (+1); identical prompt-
+    #               prefix pages are shared copy-on-write; pool exhaustion
+    #               preempts the lowest-priority slot instead of gating
+    #   "reserve" — the PR 5 baseline: worst-case page count reserved at
+    #               admission (kept as the property-test oracle)
+    page_policy: str = "demand"
+    prefix_sharing: bool = True         # COW prefix index (demand only)
     batched_prefill: bool = True        # whole-prompt prefill in one call
     seal_boundary: bool = True
     use_kernel: bool = False
@@ -260,9 +276,15 @@ class PagedLocalBackend:
 
         def insert(cache, kk, vv, pages, offs, slot, bt_row, seq_len):
             # kk, vv: [L, KVH, S_pad, D] -> scatter layout [S_pad, L, KVH, D]
+            # pages may carry the out-of-range sentinel (num_pages) for
+            # right-padding and COW-adopted shared pages: mode="drop"
+            # discards those writes, so shared pages and the null page are
+            # never touched by admission
             k_pool, v_pool = cache[seg_name]
-            k_pool = k_pool.at[:, pages, :, offs].set(kk.transpose(2, 0, 1, 3))
-            v_pool = v_pool.at[:, pages, :, offs].set(vv.transpose(2, 0, 1, 3))
+            k_pool = k_pool.at[:, pages, :, offs].set(
+                kk.transpose(2, 0, 1, 3), mode="drop")
+            v_pool = v_pool.at[:, pages, :, offs].set(
+                vv.transpose(2, 0, 1, 3), mode="drop")
             out = dict(cache)
             out[seg_name] = (k_pool, v_pool)
             out["block_tables"] = cache["block_tables"].at[slot].set(bt_row)
@@ -275,8 +297,24 @@ class PagedLocalBackend:
             out["seq_lens"] = cache["seq_lens"].at[slot].set(0)
             return out
 
+        def set_bt(cache, slot, idx, page):
+            out = dict(cache)
+            out["block_tables"] = \
+                cache["block_tables"].at[slot, idx].set(page)
+            return out
+
+        def copy_pg(cache, dst, src):
+            # fork: clone one physical page across every layer [L, N, ...]
+            k_pool, v_pool = cache[seg_name]
+            out = dict(cache)
+            out[seg_name] = (k_pool.at[:, dst].set(k_pool[:, src]),
+                             v_pool.at[:, dst].set(v_pool[:, src]))
+            return out
+
         self._insert = jax.jit(insert)
         self._clear = jax.jit(clear)
+        self._set_bt = jax.jit(set_bt)
+        self._copy_pg = jax.jit(copy_pg)
 
     def step(self, tokens: jnp.ndarray, key) -> jnp.ndarray:
         logits, self.cache = self._step(self.params, self.cache,
@@ -291,6 +329,14 @@ class PagedLocalBackend:
 
     def clear_slot(self, slot: int) -> None:
         self.cache = self._clear(self.cache, jnp.int32(slot))
+
+    def set_table_entry(self, slot: int, idx: int, page: int) -> None:
+        self.cache = self._set_bt(self.cache, jnp.int32(slot),
+                                  jnp.int32(idx), jnp.int32(page))
+
+    def copy_page(self, dst: int, src: int) -> None:
+        self.cache = self._copy_pg(self.cache, jnp.int32(dst),
+                                   jnp.int32(src))
 
     def swap(self, stage_blocks: Sequence[int]) -> bool:
         self.stage_blocks = tuple(stage_blocks)
@@ -325,20 +371,33 @@ class PagedPipelinedBackend:
         def insert(staged, bt, sl, kk_st, vv_st, pages, offs, slot, bt_row,
                    seq_len):
             # kk_st, vv_st: [S, bps, KVH, S_pad, D] (stage-gathered layers);
-            # pool index [:, :, pages, :, offs] puts the S_pad dim first
+            # pool index [:, :, pages, :, offs] puts the S_pad dim first.
+            # pages may carry the out-of-range sentinel (num_pages) for
+            # padding / COW-adopted shared pages -> mode="drop"
             k_pool, v_pool = staged
             k_pool = k_pool.at[:, :, pages, :, offs].set(
-                kk_st.transpose(3, 0, 1, 2, 4))
+                kk_st.transpose(3, 0, 1, 2, 4), mode="drop")
             v_pool = v_pool.at[:, :, pages, :, offs].set(
-                vv_st.transpose(3, 0, 1, 2, 4))
+                vv_st.transpose(3, 0, 1, 2, 4), mode="drop")
             return ((k_pool, v_pool), bt.at[slot].set(bt_row),
                     sl.at[slot].set(seq_len))
 
         def clear(staged, bt, sl, slot):
             return staged, bt.at[slot].set(0), sl.at[slot].set(0)
 
+        def set_bt(bt, slot, idx, page):
+            return bt.at[slot, idx].set(page)
+
+        def copy_pg(staged, dst, src):
+            # fork one physical page in every stage's per-layer pool
+            k_pool, v_pool = staged
+            return (k_pool.at[:, :, dst].set(k_pool[:, :, src]),
+                    v_pool.at[:, :, dst].set(v_pool[:, :, src]))
+
         self._insert = jax.jit(insert)
         self._clear = jax.jit(clear)
+        self._set_bt = jax.jit(set_bt)
+        self._copy_pg = jax.jit(copy_pg)
 
     def _build(self, stage_blocks: Sequence[int]) -> None:
         cfg = self.cfg
@@ -371,6 +430,17 @@ class PagedPipelinedBackend:
     def clear_slot(self, slot: int) -> None:
         staged, bt, sl = self.state
         self.state = self._clear(staged, bt, sl, jnp.int32(slot))
+
+    def set_table_entry(self, slot: int, idx: int, page: int) -> None:
+        staged, bt, sl = self.state
+        self.state = (staged, self._set_bt(bt, jnp.int32(slot),
+                                           jnp.int32(idx), jnp.int32(page)),
+                      sl)
+
+    def copy_page(self, dst: int, src: int) -> None:
+        staged, bt, sl = self.state
+        self.state = (self._copy_pg(staged, jnp.int32(dst), jnp.int32(src)),
+                      bt, sl)
 
     def swap(self, stage_blocks: Sequence[int]) -> bool:
         """Rebuild on the new boundaries and migrate the staged pools (the
@@ -428,8 +498,11 @@ class ServingEngine:
     token-equal to greedy at temperature 0.
 
     The KV cache is paged by default (``EngineConfig.kv_layout``): shared
-    page pools + per-slot block tables, worst-case page reservation at
-    admission, recycling on completion, one-call batched prefill. Models
+    page pools + per-slot block tables, demand-grown ref-counted pages
+    with COW prefix sharing and preemption (``page_policy="demand"``; see
+    §Demand paging in DESIGN.md) or worst-case reservation at admission
+    (``page_policy="reserve"``), recycling on completion, one-call
+    batched prefill. Models
     without paged support (recurrent state, sliding windows, quantized
     caches) fall back to the legacy shared timeline, whose horizon is
     enforced by admission back-pressure instead of a mid-decode crash."""
@@ -475,6 +548,7 @@ class ServingEngine:
             interval=cfg.telemetry_interval)
 
         # --- paged KV page pool ------------------------------------------
+        assert cfg.page_policy in ("demand", "reserve"), cfg.page_policy
         if self.kv_layout == "paged":
             self.request_capacity = cfg.request_capacity or \
                 (cfg.prompt_capacity + 64)
@@ -484,8 +558,13 @@ class ServingEngine:
                 (cfg.num_slots * self.pages_per_slot + 1)
             self.pool = PagePool(num_pages, cfg.page_size)
             self.slot_pages: Dict[int, List[int]] = {}
+            # host mirror of each active slot's device seq_len (= the next
+            # decode write position); drives demand growth / fork decisions
+            self.slot_len: Dict[int, int] = {}
         else:
             self.pool = None
+        self.preemptions = 0
+        self.peak_running = 0
 
         # --- decode backend ----------------------------------------------
         if backend is None:
@@ -560,6 +639,16 @@ class ServingEngine:
                 f"prompt+max_new {total} > request_capacity " \
                 f"{self.request_capacity} (size EngineConfig." \
                 f"request_capacity for longer generations)"
+            if self.config.page_policy == "demand":
+                # progress guarantee: after preempting every other slot the
+                # request must fit with one page of fork headroom, or the
+                # preemption loop could never free enough (DESIGN.md
+                # §Demand paging)
+                worst = self.pool.pages_needed(total) + 1
+                assert worst <= self.pool.num_pages - 1, \
+                    f"request needs {worst} pages (with fork headroom) but " \
+                    f"the pool holds {self.pool.num_pages - 1}: demand " \
+                    f"paging cannot guarantee progress; grow num_pages"
         return self.scheduler.submit(prompt, max_new_tokens, eos_id,
                                      step=self.steps)
 
@@ -569,6 +658,12 @@ class ServingEngine:
         waits — for resources that completions will free (pages, a slot),
         never for resources that can't come back (the legacy timeline)."""
         if self.kv_layout == "paged":
+            if self.config.page_policy == "demand":
+                # demand paging admits on the *prompt's* pages (+1 headroom
+                # for the first growth/fork), not the worst case — shared
+                # prefix pages already resident in the COW index are free
+                need, supply = self._page_budget(req)
+                return supply >= need
             need = self.pool.pages_needed(len(req.prompt)
                                           + req.max_new_tokens)
             return self.pool.free_pages >= need
@@ -577,27 +672,74 @@ class ServingEngine:
         # pressures at admission instead of crashing mid-decode
         return self.global_len + req.max_new_tokens <= self.config.max_seq
 
+    def _prompt_tokens(self, req: Request) -> List[int]:
+        """The token sequence a (possibly resumed) request prefills: the
+        original prompt plus any tokens generated before a preemption —
+        teacher-forcing the generated suffix reproduces the interrupted
+        decode state token-exactly."""
+        return list(req.prompt) + [int(t) for t in req.generated]
+
+    def _prompt_page_keys(self, tokens: Sequence[int]) -> List[tuple]:
+        """COW prefix-index keys, one per prompt page: page i is addressed
+        by the *content* of every token it and its predecessors hold, so
+        two requests share physical page i iff their prompts agree through
+        the end of that page (a partial tail page only matches an equal-
+        length equal-content tail)."""
+        Pg = self.config.page_size
+        P = len(tokens)
+        n = self.pool.pages_needed(P)
+        return [tuple(tokens[:min((i + 1) * Pg, P)]) for i in range(n)]
+
+    def _page_budget(self, req: Request) -> Tuple[int, int]:
+        """Demand admission budget: ``(need, supply)`` where need is the
+        fresh (non-shared) prompt pages plus one page of growth/fork
+        headroom, and supply is the free list plus index-only pages the
+        allocator could evict — EXCLUDING pages this request's own prefix
+        keys hit, which adoption is about to pin (counting them both as a
+        hit and as evictable would over-admit)."""
+        keys = self._prompt_page_keys(self._prompt_tokens(req))
+        if self.config.prefix_sharing:
+            hit_pages = {self.pool.prefix_index[k] for k in keys
+                         if k in self.pool.prefix_index}
+            fresh = sum(1 for k in keys
+                        if k not in self.pool.prefix_index)
+        else:
+            hit_pages, fresh = set(), len(keys)
+        supply = self.pool.free_pages + sum(
+            1 for p in self.pool.prefix_index.values()
+            if self.pool.refcount[p] == 1 and p not in hit_pages)
+        return fresh + 1, supply
+
     def _bucket(self, n: int) -> int:
         """Pad prompt lengths to power-of-two buckets (capped at
-        prompt_capacity) so batched prefill compiles O(log capacity) shapes,
-        not one per distinct prompt length."""
+        prompt_capacity — or request_capacity for prompts a preemption
+        extended past it) so batched prefill compiles O(log capacity)
+        shapes, not one per distinct prompt length."""
         b = 4
         while b < n:
             b *= 2
-        return min(b, self.config.prompt_capacity)
+        cap = self.config.prompt_capacity
+        if self.kv_layout == "paged" and n > cap:
+            cap = self.request_capacity
+        return min(b, cap)
 
     # -- admission: prefill into a free slot -------------------------------
     def _prefill_slot(self, slot: int, req: Request) -> None:
         t0 = time.perf_counter()
         if self.kv_layout == "paged":
-            logits = self._prefill_paged(slot, req)
+            logits, shared = self._prefill_paged(slot, req)
             detail = {"rid": req.rid, "slot": slot,
-                      "pages": len(self.slot_pages[slot])}
+                      "pages": len(self.slot_pages[slot]), "shared": shared}
+            if req.generated:
+                detail["resumed_at"] = len(req.generated)
         else:
             logits = self._prefill_timeline(slot, req)
             detail = {"rid": req.rid, "slot": slot,
                       "start": self.global_len - len(req.prompt)}
-        first = self.sampler.sample_one(logits, req.rid, 0)
+        # a resumed request's first sample continues its keystream at
+        # len(generated) — at temperature 0 this is the same argmax the
+        # interrupted decode step would have taken (teacher forcing)
+        first = self.sampler.sample_one(logits, req.rid, len(req.generated))
         self.pending[slot] = first
         detail["ms"] = (time.perf_counter() - t0) * 1e3
         self.admission_ms.append(detail["ms"])
@@ -623,24 +765,64 @@ class ServingEngine:
         self.backend.insert_slot(slot, cache)
         return logits
 
+    def _acquire_pages(self, req: Request) -> Tuple[List[int], List[bool]]:
+        """Admission-time page acquisition.
+
+        ``reserve``: worst-case pages for prompt+max_new, all private.
+        ``demand``: one page per *prompt* page only; with prefix sharing,
+        pages whose content key is already in the COW index are adopted by
+        reference (incref, no prefill scatter) instead of allocated."""
+        tokens = self._prompt_tokens(req)
+        P = len(tokens)
+        if self.config.page_policy == "reserve":
+            need = self.pool.pages_needed(
+                len(req.prompt) + req.max_new_tokens)
+            pages = self.pool.alloc(need)
+            assert pages is not None, "gated by _fits"
+            return pages, [False] * need
+        keys = self._prompt_page_keys(tokens)
+        pages: List[Optional[int]] = [None] * len(keys)
+        shared = [False] * len(keys)
+        # adopt every index hit FIRST: the incref pins those pages, so the
+        # fresh allocations below can never evict a page a later key of
+        # this same admission would have shared
+        if self.config.prefix_sharing:
+            for i, key in enumerate(keys):
+                pg = self.pool.lookup_prefix(key)
+                if pg is not None:
+                    pages[i], shared[i] = pg, True
+        for i, key in enumerate(keys):
+            if pages[i] is None:
+                pg = self.pool.alloc_one()
+                assert pg is not None, "gated by _fits"
+                if self.config.prefix_sharing:
+                    self.pool.register_prefix(key, pg)
+                pages[i] = pg
+        return pages, shared
+
     def _prefill_paged(self, slot: int, req: Request):
-        """Paged admission: reserve the request's worst-case pages, prefill
+        """Paged admission: acquire the slot's pages (worst-case under
+        ``reserve``, prompt-only + COW adoption under ``demand``), prefill
         the whole prompt in ONE jitted call (right-padded to a bucket), and
-        scatter the first P positions into the slot's pages. Positions are
-        0-based per request — no timeline offset. ``batched_prefill=False``
-        keeps a per-token fallback (the admission-latency baseline)."""
-        P = len(req.prompt)
-        need = self.pool.pages_needed(P + req.max_new_tokens)
-        pages = self.pool.alloc(need)
-        assert pages is not None, "gated by _fits"
+        scatter the first P positions into the slot's pages — positions in
+        shared (adopted) pages and right-padding scatter to the
+        out-of-range drop sentinel, so physical shared pages are written
+        exactly once, by their first owner. Positions are 0-based per
+        request. A preempted request resumes here with its generated
+        tokens appended to the prompt (teacher forcing). Returns
+        ``(logits, shared_page_count)``."""
+        tokens = self._prompt_tokens(req)
+        P = len(tokens)
+        pages, shared = self._acquire_pages(req)
         self.slot_pages[slot] = pages
+        self.slot_len[slot] = P
         bt_row = np.zeros(self.pages_per_slot, np.int32)
-        bt_row[:need] = pages
+        bt_row[:len(pages)] = pages
         seg = self.api.model.segments[0].name
         S_pad = self._bucket(P)
         if self.config.batched_prefill:
             toks = np.zeros((1, S_pad), np.int32)
-            toks[0, :P] = req.prompt
+            toks[0, :P] = tokens
             logits, caches = self._prefill_at(
                 self.params, {"tokens": jnp.asarray(toks),
                               "prompt_len": jnp.int32(P)})
@@ -648,34 +830,119 @@ class ServingEngine:
             kk, vv = kk[:, 0], vv[:, 0]          # [L, KVH, S_pad, D]
             self.prefill_calls += 1
         else:
-            cache = self.api.init_cache(1, self.config.prompt_capacity)
+            cache = self.api.init_cache(1, S_pad)
             logits = None
-            for t in req.prompt:
+            for t in tokens:
                 tok = jnp.full((1, 1), t, jnp.int32)
                 logits, cache = self._prefill(self.params, cache,
                                               {"tokens": tok})
                 self.prefill_calls += 1
             kk, vv = cache[seg]
             kk, vv = kk[:, 0, :, :S_pad], vv[:, 0, :, :S_pad]
-        # positions >= P are right-padding garbage -> scatter to null page
+        # positions >= P (right padding) and positions in adopted shared
+        # pages scatter to index num_pages: out of range, dropped by the
+        # backend's mode="drop" scatter (never page 0 — the null page
+        # stays all-zero, a device-checkable invariant)
+        Pg, N = self.config.page_size, self.pool.num_pages
         idx = np.arange(S_pad)
-        pages_vec = np.where(idx < P, bt_row[np.minimum(idx, P - 1)
-                                             // self.config.page_size],
-                             0).astype(np.int32)
-        offs_vec = np.where(idx < P, idx % self.config.page_size,
-                            0).astype(np.int32)
-        self.backend.insert_slot(slot, (kk, vv), jnp.asarray(pages_vec),
+        page_of = np.minimum(idx, P - 1) // Pg
+        shared_of = np.asarray(shared, bool)[page_of]
+        skip = (idx >= P) | shared_of
+        pages_vec = np.where(skip, N,
+                             np.asarray(pages, np.int32)[page_of])
+        offs_vec = np.where(idx < P, idx % Pg, 0).astype(np.int32)
+        self.backend.insert_slot(slot, (kk, vv),
+                                 jnp.asarray(pages_vec.astype(np.int32)),
                                  jnp.asarray(offs_vec), jnp.asarray(bt_row),
                                  P)
-        return logits
+        return logits, int(sum(shared))
 
     def _on_finish(self, fin: Request) -> None:
         self.events.append(EngineEvent(self.steps, "finish",
                                        {"rid": fin.rid,
                                         "by": fin.finished_by}))
         if self.kv_layout == "paged" and fin.slot in self.slot_pages:
+            # release() decrefs: pages shared with other slots or frozen in
+            # the COW index survive until their last reference drops
             self.pool.release(self.slot_pages.pop(fin.slot))
+            self.slot_len.pop(fin.slot, None)
             self.backend.clear_slot(fin.slot)
+
+    # -- demand paging: preemption + per-step growth/fork ------------------
+    def _preempt(self, slot: int, req: Request) -> None:
+        """Evict ``req`` from its slot to reclaim pages: decref everything
+        it holds, zero its device row, and requeue it at the FRONT of the
+        queue (victims were admitted before anything still queued, so
+        appendleft keeps the queue rid-ordered). Its generated tokens ride
+        along and re-prefill as a prompt extension on re-admission."""
+        req.preemptions += 1
+        self.preemptions += 1
+        self.pool.release(self.slot_pages.pop(slot))
+        self.slot_len.pop(slot)
+        self.backend.clear_slot(slot)
+        self.scheduler.preempt(slot)
+        self.pending[slot] = 0
+        self.events.append(EngineEvent(
+            self.steps, "preempt",
+            {"rid": req.rid, "slot": slot,
+             "generated": len(req.generated)}))
+
+    def _alloc_or_preempt(self, requester: Request) -> Optional[int]:
+        """One page for ``requester``, preempting the lowest-priority
+        (= youngest, max rid) active slot whenever the pool is dry and the
+        COW index has nothing evictable. Terminates: every iteration either
+        yields a page or removes one active slot, and once ``requester`` is
+        the sole survivor the submit-time progress guarantee says a page
+        exists. Returns None iff ``requester`` itself was preempted — the
+        caller must then skip it this step (it is requeued, not lost)."""
+        while True:
+            pg = self.pool.alloc_one()
+            if pg is not None:
+                return pg
+            active = self.scheduler.active()
+            assert active, "pool dry with no active slots"
+            victim_slot, victim = max(active, key=lambda t: t[1].rid)
+            self._preempt(victim_slot, victim)
+            if victim is requester:
+                return None
+
+    def _grow_active(self) -> None:
+        """Before each decode step, make every active slot's next write
+        position backed by a private page: grow the block table when the
+        position enters a new page, and fork (copy) the target page first
+        when it is shared (refcount > 1 — another slot or the COW index
+        holds it). Runs oldest-request-first so preemption priority
+        (youngest dies first) is respected when the pool is tight."""
+        if self.kv_layout != "paged" or self.config.page_policy != "demand":
+            return
+        Pg = self.config.page_size
+        for slot, req in sorted(self.scheduler.active(),
+                                key=lambda t: t[1].rid):
+            if self.scheduler.slots[slot] is not req:
+                continue                 # preempted earlier in this pass
+            pages = self.slot_pages[slot]
+            pi = self.slot_len[slot] // Pg
+            if pi >= len(pages):
+                pg = self._alloc_or_preempt(req)
+                if pg is None:
+                    continue
+                pages.append(pg)
+                bt_idx = len(pages) - 1
+                assert bt_idx < self.pages_per_slot
+                self.backend.set_table_entry(slot, bt_idx, pg)
+            elif self.pool.refcount[pages[pi]] > 1:
+                pg = self._alloc_or_preempt(req)
+                if pg is None:
+                    continue
+                self.backend.copy_page(pg, pages[pi])
+                self.pool.decref(pages[pi])
+                old = pages[pi]
+                pages[pi] = pg
+                self.pool.forks += 1
+                self.backend.set_table_entry(slot, pi, pg)
+                self.events.append(EngineEvent(
+                    self.steps, "fork",
+                    {"rid": req.rid, "slot": slot, "from": old, "to": pg}))
 
     def _admit(self) -> None:
         while True:
@@ -701,6 +968,10 @@ class ServingEngine:
         before = len(self.events)
         with self._mesh_ctx():
             self._admit()
+            # demand paging: back every active slot's next write position
+            # with a private page (grow / fork / preempt) BEFORE the step,
+            # so the jitted decode never scatters into a shared page
+            self._grow_active()
             active = self.scheduler.active()
             if not active:
                 # head-of-line blocked with nothing running: no completion
@@ -709,6 +980,7 @@ class ServingEngine:
                 self.stalled = bool(self.scheduler.queue)
                 return self.events[before:]
             self.stalled = False
+            self.peak_running = max(self.peak_running, len(active))
             if self.kv_layout == "timeline":
                 # unreachable: _fits() only admits requests whose worst-case
                 # generation ends inside the horizon
@@ -733,6 +1005,8 @@ class ServingEngine:
             toks = self.sampler.sample(logits, rids, idxs)
             for slot, req in active:
                 self.pending[slot] = toks[slot]
+                if self.kv_layout == "paged":
+                    self.slot_len[slot] += 1   # this step's KV write landed
                 fin = self.scheduler.on_token(slot, int(toks[slot]),
                                               step=self.steps)
                 if fin is not None:
@@ -796,6 +1070,41 @@ class ServingEngine:
             n += 1
         return self.scheduler.finished
 
+    def run_trace(self, arrivals: Sequence[Tuple[int, Sequence[int], int,
+                                                 Optional[int]]],
+                  max_steps: Optional[int] = None) -> List[Request]:
+        """Replay a timed arrival trace (``benchmarks/load_trace.py``):
+        each ``(step, prompt, max_new, eos_id)`` is submitted once the
+        engine clock reaches its arrival step; idle gaps fast-forward the
+        clock to the next arrival. Returns every submitted Request (the
+        trace is fully deterministic under a fixed seed)."""
+        arrivals = sorted(arrivals, key=lambda a: a[0])
+        reqs: List[Request] = []
+        k, n = 0, 0
+        while k < len(arrivals) or self.scheduler.has_work():
+            if max_steps is not None and n >= max_steps:
+                break
+            while k < len(arrivals) and arrivals[k][0] <= self.steps:
+                _, prompt, max_new, eos = arrivals[k]
+                reqs.append(self.submit(list(prompt), max_new, eos_id=eos))
+                k += 1
+            if not self.scheduler.has_work():
+                # idle until the next arrival: jump the clock to it
+                self.steps = max(self.steps, arrivals[k][0])
+                continue
+            self.step()
+            if self.stalled:
+                break
+            n += 1
+        return reqs
+
+    # -- test hook: pool/refcount audit ------------------------------------
+    def check_page_invariants(self) -> None:
+        """Assert the PagePool's refcount/partition invariants against the
+        engine's live block tables (property-test hook; no device work)."""
+        if self.kv_layout == "paged":
+            self.pool.check_invariants(self.slot_pages)
+
     def stats(self) -> Dict[str, Any]:
         out = dict(self.scheduler.stats())
         wall = sum(self.telemetry.step_times)
@@ -821,4 +1130,10 @@ class ServingEngine:
             out["num_pages"] = self.pool.num_pages
             out["free_pages"] = self.pool.free_pages
             out["peak_pages_in_use"] = self.pool.peak_in_use
+            out["page_policy"] = self.config.page_policy
+            out["preemptions"] = self.preemptions
+            out["cow_hits"] = self.pool.cow_hits
+            out["forks"] = self.pool.forks
+            out["evictions"] = self.pool.evictions
+            out["peak_running_slots"] = self.peak_running
         return out

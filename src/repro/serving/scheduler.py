@@ -17,7 +17,7 @@ recycle both.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 QUEUED = "queued"
@@ -39,6 +39,7 @@ class Request:
     submit_step: int = -1               # engine step counters, for stats
     admit_step: int = -1
     finish_step: int = -1
+    preemptions: int = 0                # times evicted back to the queue
 
     @property
     def finished_by(self) -> Optional[str]:
@@ -124,6 +125,20 @@ class SlotScheduler:
         self.finished.append(req)
         return req
 
+    def preempt(self, slot: int) -> Request:
+        """Evict a RUNNING request back to the *front* of the queue (it was
+        admitted before anything still queued, so FIFO order by rid is
+        preserved). The request keeps its generated tokens; on re-admission
+        the engine prefills prompt + generated as one extended prompt and
+        decoding resumes token-exactly."""
+        req = self.slots[slot]
+        assert req is not None and req.status == RUNNING, (slot, req)
+        req.status, req.slot = QUEUED, None
+        self.slots[slot] = None
+        self._free.append(slot)
+        self.queue.appendleft(req)
+        return req
+
     # -- introspection -----------------------------------------------------
     @property
     def free_slots(self) -> int:
@@ -157,45 +172,163 @@ class SlotScheduler:
 
 
 class PagePool:
-    """Host-side free-list allocator over the shared KV page pools.
+    """Host-side ref-counted allocator over the shared KV page pools.
 
     Page ids index the device-side ``[num_pages, KVH, page_size, D]`` pools
     (models/transformer.paged_kv_cache_spec). Page 0 is reserved as the null
-    page: zero block-table tails and idle slots point there, so it is never
-    allocated. The engine reserves a request's worst-case page count
-    (ceil((prompt + max_new) / page_size)) at admission and releases it on
-    completion — conservative versus grow-on-demand, but deadlock-free:
-    a blocked admission only ever waits on completions, never on another
-    waiter. Lifetime is unbounded: recycled pages serve new admissions
-    forever (no shared-timeline horizon).
+    page: zero block-table tails and idle slots point there, and the write
+    path drops writes aimed at it — it is never allocated and never written.
+
+    Two allocation regimes share this pool (DESIGN.md §Demand paging):
+
+    * **reserve** (the PR 5 baseline, kept as the verification oracle): the
+      engine grabs a request's worst-case page count at admission via
+      ``alloc`` and ``release``s it whole on completion.
+    * **demand** (default): block tables grow one page at a time as decode
+      proceeds (``alloc_one``), every page carries a **refcount**
+      (``incref``/``decref`` — a page returns to the free list only when the
+      last reference drops), and identical prompt-prefix pages are shared
+      across requests through the **prefix index**: a content-keyed map from
+      token prefixes to immutable pages. The index itself holds one
+      reference, so an indexed page survives its creator (a prefix cache);
+      when the free list runs dry, ``alloc_one`` evicts index-only pages
+      (refcount == 1) in LRU order before giving up. Writers must fork
+      (copy) any page whose refcount exceeds 1 before writing — the engine
+      enforces that; ``check_invariants`` audits the whole ledger.
     """
 
     def __init__(self, num_pages: int, page_size: int):
         assert num_pages >= 2 and page_size >= 1
         self.num_pages, self.page_size = num_pages, page_size
         self._free: Deque[int] = deque(range(1, num_pages))
+        self.refcount: List[int] = [0] * num_pages
+        # prefix index: token-content key -> frozen page holding that content
+        # (insertion order == LRU order; move_to_end on every hit)
+        self.prefix_index: "OrderedDict[Tuple, int]" = OrderedDict()
+        self._page_key: Dict[int, Tuple] = {}   # reverse map for eviction
         self.peak_in_use = 0
         self.total_allocs = 0
+        self.cow_hits = 0                       # admissions served by index
+        self.evictions = 0                      # index pages reclaimed
+        self.forks = 0                          # copy-on-write forks
 
     @property
     def free_pages(self) -> int:
         return len(self._free)
 
+    @property
+    def evictable_pages(self) -> int:
+        """Index-only pages (refcount == 1): reclaimable on demand."""
+        return sum(1 for p in self.prefix_index.values()
+                   if self.refcount[p] == 1)
+
     def pages_needed(self, tokens: int) -> int:
         return max(1, -(-tokens // self.page_size))
 
+    # -- reserve regime (PR 5 baseline) -----------------------------------
     def alloc(self, n: int) -> Optional[List[int]]:
         """n pages, or None if the pool can't supply them (caller waits)."""
         if n > len(self._free):
             return None
         out = [self._free.popleft() for _ in range(n)]
+        for p in out:
+            assert self.refcount[p] == 0, (p, self.refcount[p])
+            self.refcount[p] = 1
         self.total_allocs += n
         in_use = self.num_pages - 1 - len(self._free)
         self.peak_in_use = max(self.peak_in_use, in_use)
         return out
 
     def release(self, pages: Sequence[int]) -> None:
-        assert 0 not in pages, "null page is never allocated"
-        self._free.extend(pages)
-        assert len(self._free) <= self.num_pages - 1
+        for p in pages:
+            self.decref(p)
+
+    # -- demand regime: refcounts ------------------------------------------
+    def incref(self, page: int) -> None:
+        assert page != 0 and self.refcount[page] >= 1, (page, self.refcount)
+        self.refcount[page] += 1
+
+    def decref(self, page: int) -> None:
+        assert page != 0, "null page is never allocated"
+        assert self.refcount[page] >= 1, f"double free of page {page}"
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            assert page not in self._page_key, \
+                f"page {page} freed while still in the prefix index"
+            self._free.append(page)
+            assert len(self._free) <= self.num_pages - 1
+
+    def alloc_one(self, evict: bool = True) -> Optional[int]:
+        """One page at refcount 1, evicting LRU index-only pages if the free
+        list is empty. None when nothing is free or evictable (the caller
+        preempts or waits)."""
+        if not self._free and evict:
+            self.evict_one()
+        if not self._free:
+            return None
+        p = self._free.popleft()
+        assert self.refcount[p] == 0, (p, self.refcount[p])
+        self.refcount[p] = 1
+        self.total_allocs += 1
+        in_use = self.num_pages - 1 - len(self._free)
+        self.peak_in_use = max(self.peak_in_use, in_use)
+        return p
+
+    # -- demand regime: prefix index (copy-on-write sharing) ---------------
+    def lookup_prefix(self, key: Tuple) -> Optional[int]:
+        """Hit: incref the frozen page and hand it out for sharing."""
+        page = self.prefix_index.get(key)
+        if page is None:
+            return None
+        self.prefix_index.move_to_end(key)
+        self.incref(page)
+        self.cow_hits += 1
+        return page
+
+    def register_prefix(self, key: Tuple, page: int) -> None:
+        """Freeze ``page`` under ``key``. The index takes its own reference,
+        so registered pages outlive their creator until evicted; any later
+        write to the page (refcount > 1 from the index ref alone) must fork
+        first, which keeps indexed content immutable."""
+        if key in self.prefix_index:            # racing admissions: keep old
+            return
+        assert page not in self._page_key, (page, key)
+        self.prefix_index[key] = page
+        self._page_key[page] = key
+        self.incref(page)
+
+    def evict_one(self) -> bool:
+        """Drop the LRU index entry whose page nobody else references."""
+        for key, page in self.prefix_index.items():
+            if self.refcount[page] == 1:
+                del self.prefix_index[key]
+                del self._page_key[page]
+                self.decref(page)
+                self.evictions += 1
+                return True
+        return False
+
+    # -- auditing -----------------------------------------------------------
+    def check_invariants(self, live_tables: Dict[int, Sequence[int]]) -> None:
+        """Audit the ledger against the engine's live block tables:
+        refcount(p) == (# live block-table references to p) + (1 if the
+        prefix index holds p); free/allocated partition the non-null ids;
+        no page is both free and referenced; the null page is never held."""
+        expect = [0] * self.num_pages
+        for _slot, pages in live_tables.items():
+            for p in pages:
+                assert p != 0, f"live table references the null page"
+                expect[p] += 1
+        for key, p in self.prefix_index.items():
+            assert self._page_key.get(p) == key, (p, key)
+            expect[p] += 1
+        free = list(self._free)
+        assert len(free) == len(set(free)), "free list holds duplicates"
+        for p in range(1, self.num_pages):
+            assert self.refcount[p] == expect[p], \
+                f"page {p}: refcount {self.refcount[p]} != live refs " \
+                f"{expect[p]}"
+            assert (self.refcount[p] == 0) == (p in set(free)), \
+                f"page {p}: refcount/free-list disagree"
+        assert self.refcount[0] == 0 and 0 not in set(free)
 

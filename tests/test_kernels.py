@@ -117,6 +117,48 @@ def test_paged_kernel_idle_rows_are_finite():
         assert np.isfinite(np.asarray(out)).all()
 
 
+@pytest.mark.parametrize("B,KVH,rep,D,Pg,MP,shared", [
+    (3, 2, 4, 16, 4, 5, 2),
+    (4, 2, 2, 32, 8, 4, 3),
+    (2, 1, 2, 64, 16, 3, 1),
+])
+def test_paged_kernel_shared_tables_parity(B, KVH, rep, D, Pg, MP, shared):
+    """COW prefix sharing aliases block-table entries: several rows point at
+    the SAME physical prefix pages (demand paging, DESIGN.md §Demand
+    paging). The gather path is indifferent to aliasing by construction;
+    sweep kernel vs oracle over shared tables to pin that down."""
+    rng = np.random.RandomState(11)
+    # `shared` common prefix pages + per-row private tails
+    N = shared + B * (MP - shared) + 1
+    q = jnp.asarray(rng.randn(B, KVH * rep, D).astype(np.float32))
+    kp = jnp.asarray(rng.randn(N, KVH, Pg, D).astype(np.float32))
+    vp = jnp.asarray(rng.randn(N, KVH, Pg, D).astype(np.float32))
+    bt = np.zeros((B, MP), np.int32)
+    nxt = shared + 1
+    for b in range(B):
+        bt[b, :shared] = np.arange(1, shared + 1)     # aliased prefix
+        for pi in range(shared, MP):
+            bt[b, pi] = nxt
+            nxt += 1
+    # every row covers the shared prefix and some of its private tail
+    sl = rng.randint(shared * Pg + 1, MP * Pg + 1, size=B).astype(np.int32)
+    bt, sl = jnp.asarray(bt), jnp.asarray(sl)
+    ker = KO.paged_attention(q, kp, vp, bt, sl, use_kernel=True)
+    ref = KO.paged_attention(q, kp, vp, bt, sl, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+    # aliasing really is invisible: materializing each row's pages into a
+    # private copy of the pool changes nothing
+    for b in range(B):
+        priv_bt = jnp.asarray(np.arange(1, MP + 1, dtype=np.int32))[None]
+        priv_kp = jnp.concatenate([kp[:1], kp[bt[b]]], axis=0)
+        priv_vp = jnp.concatenate([vp[:1], vp[bt[b]]], axis=0)
+        one = KO.paged_attention(q[b:b + 1], priv_kp, priv_vp, priv_bt,
+                                 sl[b:b + 1], use_kernel=False)
+        np.testing.assert_allclose(np.asarray(one)[0], np.asarray(ref)[b],
+                                   atol=2e-5, rtol=2e-5)
+
+
 def test_paged_oracle_matches_dense_decode_attention():
     """Packing a dense [B, KVH, S, D] cache into pages must reproduce
     decode_attention row-for-row (same math, block-table indirection)."""
