@@ -26,12 +26,27 @@ page pool (~half the reserve worst case) at both page policies
 * ``demand_shared`` / ``demand_noshare`` — a shared-system-prompt stream
   with the COW prefix index on vs off: same tokens, fewer peak pages.
 
-Emits machine-readable ``BENCH_serving.json`` (tok/s, admission p50/p99,
-speedups, capacity) so every PR from here on can track the serving
-trajectory; ``--verify-swap`` asserts the re-plan run's token streams are
-identical to the undisturbed paged run, and ``--verify-overcommit``
-asserts the overcommitted demand/reserve runs produce bit-identical
-streams (both require ``--f32``).
+Latency phases (DESIGN.md §AOT warmup & chunked prefill) — every phase now
+records per-request TTFT (submit → first token) and per-stream inter-token
+gap p50/p99:
+
+* ``cold_start`` / ``warmed_start`` — the same stream served by a cold
+  engine (first token pays the XLA compile stall) vs an AOT-warmed engine
+  (``warmup()`` compiles every serving shape off the clock; steady state
+  performs zero compilations — ``post_warmup_compiles`` is recorded);
+* ``oneshot_long`` / ``chunked_long`` — a mixed short/long prompt stream
+  with whole-prompt vs chunked prefill: one-shot admission of a long
+  prompt stalls every in-flight decoder for the full prefill, chunking
+  bounds that stall at one chunk per step — the batch-mates' inter-token
+  p99 gap is the headline, with token streams asserted identical under
+  ``--f32``.
+
+Emits machine-readable ``BENCH_serving.json`` (tok/s, TTFT and inter-token
+percentiles, admission p50/p99, speedups, capacity) so every PR from here
+on can track the serving trajectory; ``--verify-swap`` asserts the re-plan
+run's token streams are identical to the undisturbed paged run, and
+``--verify-overcommit`` asserts the overcommitted demand/reserve runs
+produce bit-identical streams (both require ``--f32``).
 
   PYTHONPATH=src python benchmarks/serving_throughput.py --smoke
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
@@ -66,6 +81,12 @@ def parse_args(argv=None):
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--long-prompt-len", type=int, default=0,
+                    help="prompt length for the chunked-prefill phases "
+                         "(0 = 4x --prompt-len, capped at 64)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunk size for the chunked-prefill phases "
+                         "(0 = auto: min(page_size, prompt_len // 2))")
     ap.add_argument("--arrival-every", type=int, default=1)
     ap.add_argument("--inject", default="1:10", metavar="STAGE:FACTOR")
     ap.add_argument("--telemetry-interval", type=int, default=4)
@@ -106,7 +127,7 @@ def make_config(args, kv_layout: str, batched_prefill: bool,
 
 
 def run_stream(api, params, mesh, args, ec: EngineConfig, inject=None,
-               prompts=None):
+               prompts=None, warm=True):
     eng = ServingEngine(api, mesh=mesh, config=ec, params=params)
     if inject:
         eng.telemetry.inject(*inject)
@@ -116,40 +137,46 @@ def run_stream(api, params, mesh, args, ec: EngineConfig, inject=None,
                                size=int(rng.randint(2, args.prompt_len + 1))
                                ).tolist()
                    for _ in range(args.requests)]
-    # warmup: compile decode + every prefill bucket off the clock, then drop
-    # it from the stats (its wall time was cleared, so its tokens must not
-    # count either). One prompt per bucket the stream can hit — asking the
-    # engine itself keeps this in sync with its bucketing scheme.
-    warm_lens = sorted({eng._bucket(n)
-                        for n in range(2, args.prompt_len + 1)})
-    for n in warm_lens:
-        eng.submit((prompts[0] * args.prompt_len)[:n], 2)
-    eng.run()
-    eng.telemetry.step_times.clear()
-    eng.scheduler.finished.clear()
-    eng.admission_ms.clear()
-    eng.prefill_calls = 0
-    if eng.kv_layout == "paged":
-        # paging counters must reflect the measured stream, not the warmup
-        eng.preemptions = eng.peak_running = 0
-        eng.pool.cow_hits = eng.pool.forks = eng.pool.evictions = 0
-        eng.pool.peak_in_use = eng.pool.num_pages - 1 - eng.pool.free_pages
+    if warm:
+        # AOT warmup: compile decode + every prefill bucket + page ops (+
+        # the chunk kernel when configured) off the clock, then factory-
+        # reset the engine — measured streams pay zero compile stalls and
+        # stats() reflects only the measured stream (warmup() resets all
+        # counters/telemetry). warm=False is the compile-stall baseline:
+        # the first token's latency INCLUDES the XLA compilations.
+        eng.warmup()
 
-    reqs, k, t0 = [], 0, time.perf_counter()
+    reqs, k = [], 0
+    submit_t, first_t, token_t = {}, {}, {}
+    t0 = time.perf_counter()
     while k < len(prompts) or eng.scheduler.has_work():
         # arrival stream: at most one submission per engine step, backlog
         # bounded by the slot count (submit() only queues — gating on
         # free_slots would dump every prompt before the first step)
         if (k < len(prompts) and len(eng.scheduler.queue) < args.slots
                 and eng.steps % max(1, args.arrival_every) == 0):
-            reqs.append(eng.submit(prompts[k], args.max_new))
+            r = eng.submit(prompts[k], args.max_new)
+            submit_t[r.rid] = time.perf_counter()
+            reqs.append(r)
             k += 1
         if not eng.scheduler.has_work():
             # idle between arrivals: admit the next request immediately
             # (otherwise eng.steps never advances and the gate never opens)
-            reqs.append(eng.submit(prompts[k], args.max_new))
+            r = eng.submit(prompts[k], args.max_new)
+            submit_t[r.rid] = time.perf_counter()
+            reqs.append(r)
             k += 1
         eng.step()
+        now = time.perf_counter()
+        # per-request token arrival times: TTFT + inter-token gaps (tokens
+        # landing in the same step share a timestamp -> zero gap)
+        for r in reqs:
+            ts = token_t.setdefault(r.rid, [])
+            n = len(r.generated)
+            if n > len(ts):
+                if not ts:
+                    first_t[r.rid] = now
+                ts.extend([now] * (n - len(ts)))
         if eng.stalled:
             # permanent back-pressure: engine steps are frozen and the FIFO
             # head can never run — report what completed instead of spinning
@@ -158,6 +185,20 @@ def run_stream(api, params, mesh, args, ec: EngineConfig, inject=None,
     st = eng.stats()
     st["stream_wall_s"] = wall
     st["stream_tok_per_s"] = st["tokens_out"] / wall if wall > 0 else 0.0
+    ttft = [(first_t[r.rid] - submit_t[r.rid]) * 1e3
+            for r in reqs if r.rid in first_t]
+    gaps = []
+    for r in reqs:
+        ts = token_t.get(r.rid, [])
+        gaps += [(b - a) * 1e3 for a, b in zip(ts, ts[1:])]
+    if ttft:
+        st["first_ttft_ms"] = ttft[0]     # the cold-start compile stall
+        st["ttft_p50_ms"] = float(np.percentile(ttft, 50))
+        st["ttft_p99_ms"] = float(np.percentile(ttft, 99))
+    if gaps:
+        st["intertok_p50_ms"] = float(np.percentile(gaps, 50))
+        st["intertok_p99_ms"] = float(np.percentile(gaps, 99))
+        st["intertok_max_ms"] = float(np.max(gaps))
     return eng, reqs, st
 
 
@@ -173,8 +214,12 @@ KEEP = ("backend", "kv_layout", "completed", "tokens_out", "decode_wall_s",
         "tok_per_s", "stream_wall_s", "stream_tok_per_s", "prefill_calls",
         "admissions", "admission_p50_ms", "admission_p99_ms",
         "mean_queue_wait_steps", "replans", "swaps", "peak_pages_in_use",
+        "peak_demand_pages",
         "steps", "page_policy", "preemptions", "cow_hits", "forks",
-        "evictions", "peak_running_slots")
+        "evictions", "peak_running_slots", "warmed", "warmup_s",
+        "post_warmup_compiles", "prefill_chunk", "chunked_admissions",
+        "prefill_chunks", "first_ttft_ms", "ttft_p50_ms", "ttft_p99_ms",
+        "intertok_p50_ms", "intertok_p99_ms", "intertok_max_ms")
 
 
 def main(argv=None):
@@ -212,13 +257,31 @@ def main(argv=None):
         inject = (int(s), float(f))
 
     results, streams = {}, {}
+
+    def record(name, eng, reqs, st):
+        results[name] = {k: st[k] for k in KEEP if k in st}
+        results[name]["final_blocks"] = list(st["stage_blocks"])
+        streams[name] = [r.generated for r in reqs]
+
+    # -- compile stall: cold first token vs AOT-warmed first token ---------
+    # run FIRST so the cold engine really is cold; each engine owns its jit
+    # wrappers, so later phases don't reuse these executables either way
+    for name, warm in (("cold_start", False), ("warmed_start", True)):
+        ec = make_config(args, "paged", True)
+        eng, reqs, st = run_stream(api, params, mesh, args, ec, warm=warm)
+        record(name, eng, reqs, st)
+    assert streams["warmed_start"] == streams["cold_start"], \
+        "warmup changed token streams"
+    # stats() snapshots inside run_stream, before any later phase engine
+    # compiles — this IS the zero-compile-stall guarantee, benchmarked
+    assert results["warmed_start"]["post_warmup_compiles"] in (None, 0), \
+        results["warmed_start"]["post_warmup_compiles"]
+
     for name, layout, batched, with_inject in PHASES:
         ec = make_config(args, layout, batched)
         eng, reqs, st = run_stream(api, params, mesh, args, ec,
                                    inject=inject if with_inject else None)
-        results[name] = {k: st[k] for k in KEEP if k in st}
-        results[name]["final_blocks"] = list(st["stage_blocks"])
-        streams[name] = [r.generated for r in reqs]
+        record(name, eng, reqs, st)
 
     # -- overcommit: same stream, pool ~half the reserve worst case --------
     # reserve admits only while worst-case reservations fit; demand admits
@@ -243,10 +306,7 @@ def main(argv=None):
                          prefix_sharing=(policy == "demand"))
         eng, reqs, st = run_stream(api, params, mesh, args, ec,
                                    prompts=over_prompts)
-        name = f"{policy}_overcommit"
-        results[name] = {k: st[k] for k in KEEP if k in st}
-        results[name]["final_blocks"] = list(st["stage_blocks"])
-        streams[name] = [r.generated for r in reqs]
+        record(f"{policy}_overcommit", eng, reqs, st)
     oc_d, oc_r = (results["demand_overcommit"],
               results["reserve_overcommit"])
     assert oc_d["completed"] == oc_r["completed"] == args.requests, \
@@ -273,16 +333,49 @@ def main(argv=None):
         ec = make_config(args, "paged", True, prefix_sharing=sharing)
         eng, reqs, st = run_stream(api, params, mesh, args, ec,
                                    prompts=shared_prompts)
-        results[name] = {k: st[k] for k in KEEP if k in st}
-        results[name]["final_blocks"] = list(st["stage_blocks"])
-        streams[name] = [r.generated for r in reqs]
+        record(name, eng, reqs, st)
     oc_sh, oc_no = (results["demand_shared"],
                 results["demand_noshare"])
     if len(sys_prompt) == args.page_size:     # prefix spans a full page
         assert oc_sh["cow_hits"] > 0, \
             "shared system prompts produced no COW hits"
-        assert oc_sh["peak_pages_in_use"] <= oc_no["peak_pages_in_use"], \
-            "prefix sharing must not use more pages than private copies"
+        # peak_demand excludes the index's reclaimable cache pages —
+        # peak_in_use would overstate the shared run once the index warms
+        assert oc_sh["peak_demand_pages"] <= oc_no["peak_demand_pages"], \
+            "prefix sharing must not demand more pages than private copies"
+
+    # -- chunked prefill: long prompts interleaved with the decode batch ---
+    # every third request is a full-capacity prompt arriving while short
+    # requests decode: one-shot admission stalls every in-flight stream
+    # for the whole prefill; chunking bounds the stall at one chunk/step
+    # long prompts get their own capacity: the contrast needs prefills that
+    # take many multiples of a decode step, not the steady-state mix above.
+    # Kept sparse (every 6th request): each long prompt pins a PREFILL slot
+    # for chunks-many steps, and a batch that is ALL long prompts starves
+    # the decode tick either way — the phase measures the stall long
+    # admissions inflict on a decoding batch, not slot exhaustion.
+    long_len = args.long_prompt_len or min(4 * args.prompt_len, 64)
+    chunk = args.prefill_chunk or max(2, min(args.page_size, long_len // 4))
+    rng = np.random.RandomState(args.seed + 3)
+    long_prompts = [
+        rng.randint(0, api.cfg.vocab_size,
+                    size=long_len if i % 6 == 5 else
+                    int(rng.randint(2, max(3, args.prompt_len // 2 + 1)))
+                    ).tolist()
+        for i in range(args.requests)]
+    for name, c in (("oneshot_long", 0), ("chunked_long", chunk)):
+        ec = make_config(args, "paged", True, prefill_chunk=c,
+                         prompt_capacity=long_len,
+                         request_capacity=long_len + args.max_new)
+        eng, reqs, st = run_stream(api, params, mesh, args, ec,
+                                   prompts=long_prompts)
+        record(name, eng, reqs, st)
+    ch, os_ = results["chunked_long"], results["oneshot_long"]
+    assert ch["chunked_admissions"] > 0, \
+        f"no prompt exceeded the chunk size {chunk}"
+    if args.f32:
+        assert streams["chunked_long"] == streams["oneshot_long"], \
+            "token streams diverged under chunked prefill"
 
     speedup = {
         # steady-state decode throughput (per-step decode wall only): the
@@ -313,8 +406,22 @@ def main(argv=None):
         "demand_vs_reserve_overcommit_steps":
             oc_r["steps"] / max(oc_d["steps"], 1e-9),
         "prefix_sharing_page_savings":
-            oc_no["peak_pages_in_use"]
-            / max(oc_sh["peak_pages_in_use"], 1e-9),
+            oc_no["peak_demand_pages"]
+            / max(oc_sh["peak_demand_pages"], 1e-9),
+        # AOT warmup: how much of the first token's latency was XLA
+        # compile stall (cold engine vs warmed engine, same stream)
+        "warmup_first_token":
+            results["cold_start"].get("first_ttft_ms", 0.0)
+            / max(results["warmed_start"].get("first_ttft_ms", 1e-9), 1e-9),
+        # chunked prefill: batch-mates' worst-case inter-token gap under
+        # one-shot long-prompt admission vs chunked (>1 = chunking bounds
+        # the stall)
+        "chunked_intertok_p99":
+            os_.get("intertok_p99_ms", 0.0)
+            / max(ch.get("intertok_p99_ms", 1e-9), 1e-9),
+        "chunked_intertok_max":
+            os_.get("intertok_max_ms", 0.0)
+            / max(ch.get("intertok_max_ms", 1e-9), 1e-9),
     }
 
     hdr = ("phase,backend,kv_layout,requests,tokens,tok_per_s,"
@@ -339,18 +446,52 @@ def main(argv=None):
           f"steps={oc_r['steps']}")
     print(f"shared-prefix: cow_hits={oc_sh['cow_hits']} "
           f"forks={oc_sh['forks']} "
-          f"peak_pages {oc_sh['peak_pages_in_use']} (shared) vs "
-          f"{oc_no['peak_pages_in_use']} (private)")
+          f"peak_demand_pages {oc_sh['peak_demand_pages']} (shared) vs "
+          f"{oc_no['peak_demand_pages']} (private)")
+    print(f"compile-stall: cold first token "
+          f"{results['cold_start'].get('first_ttft_ms', 0):.0f}ms vs warmed "
+          f"{results['warmed_start'].get('first_ttft_ms', 0):.1f}ms "
+          f"(warmup {results['warmed_start'].get('warmup_s', 0):.1f}s, "
+          f"post-warmup compiles "
+          f"{results['warmed_start'].get('post_warmup_compiles')})")
+    print(f"chunked prefill (chunk={chunk}): inter-token p99 "
+          f"{ch.get('intertok_p99_ms', 0):.1f}ms / max "
+          f"{ch.get('intertok_max_ms', 0):.1f}ms vs one-shot "
+          f"{os_.get('intertok_p99_ms', 0):.1f}ms / "
+          f"{os_.get('intertok_max_ms', 0):.1f}ms, "
+          f"{ch['chunked_admissions']} chunked admissions in "
+          f"{ch['prefill_chunks']} chunks")
 
     if args.json:
         payload = {
             "bench": "serving_throughput",
             "config": {k: getattr(args, k) for k in
                        ("arch", "slots", "stages", "microbatches", "requests",
-                        "prompt_len", "max_new", "page_size",
-                        "arrival_every", "smoke", "f32")},
+                        "prompt_len", "long_prompt_len", "max_new",
+                        "page_size", "arrival_every", "smoke", "f32")},
             "phases": results,
             "speedup": speedup,
+            "compile_stall": {
+                "cold_first_ttft_ms":
+                    results["cold_start"].get("first_ttft_ms"),
+                "warmed_first_ttft_ms":
+                    results["warmed_start"].get("first_ttft_ms"),
+                "warmup_s": results["warmed_start"].get("warmup_s"),
+                "post_warmup_compiles":
+                    results["warmed_start"].get("post_warmup_compiles"),
+            },
+            "chunked_prefill": {
+                "chunk": chunk,
+                "long_prompt_len": long_len,
+                "chunked_admissions": ch["chunked_admissions"],
+                "prefill_chunks": ch["prefill_chunks"],
+                "oneshot_intertok_p99_ms": os_.get("intertok_p99_ms"),
+                "chunked_intertok_p99_ms": ch.get("intertok_p99_ms"),
+                "oneshot_intertok_max_ms": os_.get("intertok_max_ms"),
+                "chunked_intertok_max_ms": ch.get("intertok_max_ms"),
+                "streams_identical": streams["chunked_long"]
+                == streams["oneshot_long"],
+            },
             "overcommit": {
                 "pool_pages": over_pages - 1,
                 "pages_per_request_worst_case": pages_per_req,

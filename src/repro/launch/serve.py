@@ -18,10 +18,23 @@ quantization noise). ``--topology sandwich --require-non-prefix`` asserts
 the planned spec is NOT expressible in the prefix space (multiple untrusted
 segments); ``--temperature``/``--top-k`` switch greedy decoding to
 per-request-reproducible sampling.
+
+AOT warmup & chunked prefill (DESIGN.md §AOT warmup & chunked prefill):
+``--warmup`` compiles every serving shape at engine construction and
+freezes the compile ledger; ``--assert-no-recompile`` then fails the run
+if steady-state serving performed ANY new XLA compilation (the zero-
+compile-stall guarantee, checked against the runtime's own compile
+counter). ``--prefill-chunk N`` streams long prompts in N-token chunks
+interleaved with decode ticks (bounded batch-mate inter-token latency);
+``--verify-chunked`` serves the same stream again with chunking disabled
+and asserts token-identical output (use with ``--f32 --no-seal`` — the
+chunked attention path is a different, equally-correct float reduction
+order, so bf16 argmax ties may flip).
 """
 from __future__ import annotations
 
 import argparse
+import copy
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +97,20 @@ def build_parser() -> argparse.ArgumentParser:
                     metavar="RATIO",
                     help="fraction of synthetic prompts extending one "
                          "fixed system prompt (drives COW page sharing)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile every serving shape (decode step, "
+                         "all prefill buckets, page ops, chunk kernel, "
+                         "swap-target layouts) before serving")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="stream prompts longer than N in N-token chunks, "
+                         "one chunk per engine step between decode ticks "
+                         "(0 = whole-prompt prefill)")
+    ap.add_argument("--assert-no-recompile", action="store_true",
+                    help="with --warmup: fail unless steady-state serving "
+                         "performed zero new XLA compilations")
+    ap.add_argument("--verify-chunked", action="store_true",
+                    help="with --prefill-chunk: serve the stream again "
+                         "unchunked and assert identical token streams")
     ap.add_argument("--per-token-prefill", action="store_true",
                     help="disable one-call batched prefill (admission-"
                          "latency baseline)")
@@ -135,7 +162,8 @@ def _make_engine(api, params, mesh, args) -> ServingEngine:
         seal_boundary=not args.no_seal, solver=args.solver,
         space=args.space, delta=args.delta,
         temperature=args.temperature, top_k=args.top_k,
-        telemetry_interval=args.telemetry_interval)
+        telemetry_interval=args.telemetry_interval,
+        warmup=args.warmup, prefill_chunk=args.prefill_chunk)
     backend = None if args.backend == "auto" else args.backend
     rm = TOPOLOGIES[args.topology](args.stages)
     return ServingEngine(api, mesh=mesh, rm=rm, config=ec, params=params,
@@ -205,13 +233,18 @@ def main(argv=None):
         s, f = args.inject_straggler.split(":")
         inject = (int(s), float(f))
 
-    def one_run(with_inject: bool):
-        eng = _make_engine(api, params, mesh, args)
+    def one_run(with_inject: bool, run_args=None):
+        a = run_args or args
+        eng = _make_engine(api, params, mesh, a)
         if with_inject and inject:
             eng.telemetry.inject(*inject)
         print(f"backend={eng.backend_kind} kv_layout={eng.kv_layout} "
               f"stage_blocks={eng.stage_blocks} "
               f"placement={eng.spec.describe()}")
+        if eng.warmed:
+            print(f"warmup: {eng.warmup_s:.2f}s, "
+                  f"{sum(len(f.signatures) for f in eng.aot.fns.values())} "
+                  f"signatures over {len(eng.aot.fns)} functions")
         if args.require_non_prefix:
             graph = eng.rm.resource_graph()
             assert not eng.spec.is_prefix(graph), \
@@ -219,7 +252,7 @@ def main(argv=None):
                 f"{eng.spec.describe()}"
             print("NON-PREFIX OK: placement not expressible in the "
                   "trusted-prefix space")
-        reqs = _serve_stream(eng, args, cfg)
+        reqs = _serve_stream(eng, a, cfg)
         for e in eng.events:
             if e.kind in ("replan", "swap", "swap_skipped"):
                 print(f"  step {e.step}: {e.kind} {e.detail}")
@@ -230,11 +263,34 @@ def main(argv=None):
               f"swaps={st['swaps']} final_blocks={st['stage_blocks']} "
               f"prefill_calls={st['prefill_calls']} "
               f"admission_p50={st.get('admission_p50_ms', 0):.1f}ms")
+        if st.get("prefill_chunk"):
+            print(f"chunked prefill: {st['chunked_admissions']} admissions "
+                  f"in {st['prefill_chunks']} chunks of "
+                  f"{st['prefill_chunk']} tokens")
+        if eng.warmed:
+            print(f"post-warmup compiles: {st['post_warmup_compiles']} "
+                  f"stalls: {st['compile_stalls']}")
         return eng, reqs
 
     eng, reqs = one_run(with_inject=True)
+    st = eng.stats()
     if reqs:
         print("sample tokens:", reqs[0].generated)
+
+    if args.assert_no_recompile:
+        # checked BEFORE any --verify-* rerun: the compile counter is
+        # process-global, so a second engine's warmup would land in this
+        # engine's post-freeze window
+        assert args.warmup, "--assert-no-recompile needs --warmup"
+        n = st["post_warmup_compiles"]
+        # None = the compile monitor could not hook this jax version; the
+        # registry's own stall ledger still covers managed functions
+        assert n in (None, 0), \
+            f"{n} XLA compilations after warmup; stalls: " \
+            f"{st['compile_stalls']}"
+        assert not st["compile_stalls"], st["compile_stalls"]
+        print(f"NO-RECOMPILE OK: post_warmup_compiles="
+              f"{'unavailable' if n is None else n}, 0 stalls")
 
     if args.verify_swap:
         assert args.no_seal, "--verify-swap needs --no-seal (see docstring)"
@@ -250,7 +306,23 @@ def main(argv=None):
         print(f"SWAP-EXACT OK: {len(reqs)} token streams identical across "
               f"live re-plan ({eng.stats()['stage_blocks']} vs "
               f"{eng2.stats()['stage_blocks']})")
-    return eng.stats()
+
+    if args.verify_chunked:
+        assert args.prefill_chunk > 0, \
+            "--verify-chunked needs --prefill-chunk N"
+        unchunked = copy.copy(args)
+        unchunked.prefill_chunk = 0
+        eng3, reqs3 = one_run(with_inject=True, run_args=unchunked)
+        assert eng.stats()["chunked_admissions"] > 0, \
+            "no prompt exceeded --prefill-chunk: nothing verified " \
+            "(raise --prompt-len or lower --prefill-chunk)"
+        for a, b in zip(reqs, reqs3):
+            assert a.generated == b.generated, \
+                f"req {a.rid} diverged under chunked prefill:\n" \
+                f"  {a.generated}\n  {b.generated}"
+        print(f"CHUNK-EXACT OK: {len(reqs)} token streams identical, "
+              f"chunked ({args.prefill_chunk}) vs one-shot prefill")
+    return st
 
 
 if __name__ == "__main__":

@@ -83,6 +83,11 @@ class ModelAPI:
         """Right-padded whole-prompt prefill (see StackedLM.prefill_at_fn)."""
         return self.model.prefill_at_fn(params, batch)
 
+    def prefill_chunk_fn(self, params, pools, batch):
+        """One prefill chunk resuming at an offset with the paged cache
+        carried in (see StackedLM.prefill_chunk_fn)."""
+        return self.model.prefill_chunk_fn(params, pools, batch)
+
     # ------------------------------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
         """ShapeDtypeStruct stand-ins for every model input of a shape cell."""

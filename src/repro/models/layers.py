@@ -301,6 +301,67 @@ def paged_write(k_pages, v_pages, k_new, v_new, block_tables, seq_lens):
     return k_pages, v_pages
 
 
+def chunk_prefill_attention(q, k, v, k_pages, v_pages, block_tables,
+                            prior_len):
+    """Attention for one prefill *chunk* resuming at offset ``prior_len``.
+
+    q: [B, C, H, D] chunk queries (absolute positions prior_len + i);
+    k, v: [B, C, KVH, D] the chunk's own fresh keys/values;
+    k_pages, v_pages: [N, KVH, Pg, D] shared pools already holding this
+    row's positions < prior_len; block_tables: [B, MP] the row's pages in
+    sequence order (null-page-0 tails). prior_len: traced int32 scalar.
+
+    Each query attends (a) every pool position < prior_len gathered through
+    the block table — entries past the written prefix (the chunk's own
+    freshly-acquired pages, null tails, or the not-yet-valid remainder of a
+    COW-adopted page) are masked, and (b) the chunk's own keys causally.
+    Keys come from the *fresh* k/v, not the pool, so the caller scatters
+    the chunk's KV after attention (drop-sentinel pattern — shared pages
+    are never written). Chunk and page sizes need not divide each other.
+    Returns [B, C, H, D].
+    """
+    B, C, H, D = q.shape
+    KVH = k.shape[2]
+    rep = H // KVH
+    _, _, Pg, _ = k_pages.shape
+    MP = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    # prior context: gather the row's pages -> [B, MP*Pg, KVH, D]
+    kp = k_pages[block_tables]                      # [B, MP, KVH, Pg, D]
+    kp = kp.transpose(0, 1, 3, 2, 4).reshape(B, MP * Pg, KVH, D)
+    vp = v_pages[block_tables]
+    vp = vp.transpose(0, 1, 3, 2, 4).reshape(B, MP * Pg, KVH, D)
+    qf = q.reshape(B, C, KVH, rep, D).astype(jnp.float32)
+    s_prior = jnp.einsum("bqgrd,bkgd->bgrqk", qf, kp.astype(jnp.float32),
+                         preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.arange(MP * Pg)
+    s_prior = jnp.where((k_pos < prior_len)[None, None, None, None, :],
+                        s_prior, NEG_INF)
+    # the chunk's own keys, causal within the chunk
+    s_self = jnp.einsum("bqgrd,bkgd->bgrqk", qf, k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32) * scale
+    causal = jnp.arange(C)[:, None] >= jnp.arange(C)[None, :]
+    s_self = jnp.where(causal[None, None, None], s_self, NEG_INF)
+    s = jnp.concatenate([s_prior, s_self], axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    vcat = jnp.concatenate([vp, v], axis=1).astype(jnp.float32)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p, vcat,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, C, H, D).astype(q.dtype)
+
+
+def paged_write_chunk(k_pages, v_pages, k_new, v_new, pages, offs):
+    """Scatter one chunk's KV into the pools: position i of the chunk lands
+    in ``(pages[i], offs[i])``. Right padding, COW-shared pages, and any
+    other must-not-write position carry the out-of-range sentinel
+    (num_pages) in ``pages`` and are dropped — the same immutability
+    contract as ``paged_write`` (page 0 and shared pages are never
+    touched). k_new, v_new: [C, KVH, D]; pages, offs: [C] int32."""
+    k_pages = k_pages.at[pages, :, offs].set(k_new, mode="drop")
+    v_pages = v_pages.at[pages, :, offs].set(v_new, mode="drop")
+    return k_pages, v_pages
+
+
 def roll_into_window(kv_hd, total_len: int, window: int):
     """Scatter the last W=min(window, total_len) tokens of [B, KVH, W, D]
     into a [B, KVH, window, D] rolling buffer at slot (absolute index %%

@@ -70,13 +70,30 @@ def dense_block_apply(cfg: ArchConfig, p, x, positions, *, mode: str,
     per-layer page pools (k_pages, v_pages) [N, KVH, Pg, D] and ``positions``
     carries the per-row 0-based position (= seq_lens); mutually exclusive
     with sliding windows and the quantized cache.
+    paged (prefill): (block_tables [B, MP], prior_len, pages [C], offs [C])
+    — a prefill *chunk* resuming at offset ``prior_len`` against pools that
+    already hold the earlier chunks' KV; the chunk's own KV scatters via
+    (pages, offs) with the drop-sentinel contract (see
+    ``L.paged_write_chunk``).
     Returns (x, new_kv_or_None).
     """
     h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
     q, k, v = L.attn_qkv(p["attn"], h, positions, cfg, pos3=pos3)
     window = cfg.sliding_window
     new_kv = None
-    if mode == "decode" and paged is not None:
+    if mode == "prefill" and paged is not None:
+        assert not cache_quant and not window, \
+            "paged KV supports the plain bf16/f32 full-attention cache"
+        block_tables, prior_len, pages_vec, offs_vec = paged
+        k_pages, v_pages = cache
+        assert k.shape[0] == 1, "chunked prefill runs one slot at a time"
+        ctx = L.chunk_prefill_attention(q, k, v, k_pages, v_pages,
+                                        block_tables, prior_len)
+        k_pages, v_pages = L.paged_write_chunk(k_pages, v_pages,
+                                               k[0], v[0],
+                                               pages_vec, offs_vec)
+        new_kv = (k_pages, v_pages)
+    elif mode == "decode" and paged is not None:
         assert not cache_quant and not window, \
             "paged KV supports the plain bf16/f32 full-attention cache"
         block_tables, seq_lens = paged
@@ -340,6 +357,43 @@ class StackedLM:
                             preferred_element_type=jnp.float32)
         logits = constrain(logits, ("act_batch", "act_vocab"))
         return logits, self._constrain_caches(caches)
+
+    # -- public: chunked prefill (resume at an offset, cache carried in) ---
+    def prefill_chunk_fn(self, params, pools, batch):
+        """One fixed-size prefill chunk against the paged cache: ``tokens``
+        [1, C] is chunk ``[offset, offset + chunk_len)`` of a prompt,
+        right-padded to the engine's chunk size C; ``pools`` the per-segment
+        page pools already holding positions < ``offset`` (written by the
+        earlier chunks of this prompt, or adopted COW-shared pages);
+        ``bt_row`` [1, MP] the slot's block table so far; ``pages``/``offs``
+        [C] the scatter targets for the chunk's own KV (drop-sentinel for
+        padding and shared pages, exactly like admission prefill).
+
+        The long prompt's prefill becomes ceil(P / C) calls of ONE compiled
+        shape, scheduled at most one per engine step between decode ticks —
+        so admission of a long prompt costs every batch-mate at most one
+        chunk of extra latency per token instead of a whole-prompt stall
+        (DESIGN.md §AOT warmup & chunked prefill). Returns (logits at the
+        chunk's last valid token, new pools); the final chunk's logits feed
+        the request's first sampled token."""
+        tokens = batch["tokens"]
+        B, C = tokens.shape
+        positions = batch["offset"] + jnp.arange(C)[None, :]
+        x = self.embed(params, tokens)
+        x, new_caches = self.run_segments(
+            params, x, positions, mode="prefill", caches=pools,
+            cache_len=None, pos3=batch.get("pos3"),
+            paged=(batch["bt_row"], batch["offset"], batch["pages"],
+                   batch["offs"]))
+        x = L.rmsnorm(x, params["ln_f"], self.cfg.norm_eps)
+        h_last = jax.lax.dynamic_index_in_dim(
+            x, batch["chunk_len"] - 1, axis=1, keepdims=False)      # [B, D]
+        logits = jnp.einsum("bd,dv->bv", h_last, self.head_weights(params),
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, ("act_batch", "act_vocab"))
+        # pools stay unconstrained, like decode_paged_fn (their layout is
+        # engine-global, not per-batch)
+        return logits, new_caches
 
     # -- public: decode --------------------------------------------------
     def decode_fn(self, params, cache, batch):

@@ -25,6 +25,23 @@ per-stage block counts (e.g. 28 blocks as 10/9/9). Uneven stages are padded
 to the widest stage; padded slots replicate a real block's params/cache and
 are masked out of the scan, so logits match the unpipelined decode path
 exactly (DESIGN.md §Planner).
+
+Compile-stability contract (DESIGN.md §AOT warmup & chunked prefill): a
+PipelinedDecoder's jitted entry points — ``build()``'s step,
+``build_stage_probe()``'s probe and the serving backends' chunk closure —
+are shape-stable for a FIXED ``stage_blocks`` layout, so the engine's
+``warmup()`` can precompile them and a steady-state serve dispatches with
+zero new XLA compilations. Two sharp edges the serving layer accounts for:
+(1) shard_map state arrays change *sharding* between the first call
+(fresh, unsharded ``init_paged_cache`` output) and steady state
+(pod-sharded step output), and jit's dispatch cache keys on
+(shape, sharding) — both variants must be warmed; (2) ``restage_cache``'s
+composed gather is shaped by the specific (old layout, new layout) PAIR —
+the warmup tour covers planned↔target pairs, while a chain of swaps
+between two non-planned layouts pays a one-off compile, surfaced in
+``stats()["compile_stalls"]``. Decoders themselves are cached per layout
+by the backends (``_layouts``): rebuilding a decoder for a layout already
+seen would discard the warmed dispatch caches with it.
 """
 from __future__ import annotations
 

@@ -1,15 +1,24 @@
-"""Serving engine subsystem (DESIGN.md §Serving engine, §Paged KV cache).
+"""Serving engine subsystem (DESIGN.md §Serving engine, §Paged KV cache,
+§AOT warmup & chunked prefill).
 
-Three decoupled layers over the planner/pipeline/ft stack:
+Four decoupled layers over the planner/pipeline/ft stack:
 
 1. **scheduler** — continuous-batching slot scheduler (FIFO admission,
-   per-request EOS/length completion, immediate slot recycling) and the
+   per-request EOS/length completion, immediate slot recycling, a PREFILL
+   state for slots whose prompt is still streaming in) and the
    ``PagePool`` free-list allocator for the paged KV layout;
 2. **telemetry** — per-stage wall-time probes folded into
    ``OnlineReplanner.observe()`` with scale normalization and straggler
    injection, plus ResourceManager heartbeats;
-3. **engine** — ``ServingEngine``: paged per-slot KV decode (block-table-
-   indexed shared page pools, one-call batched prefill, page recycling —
+3. **aot** — the AOT compilation ledger: ``CompileMonitor`` counts true
+   XLA compilations at the runtime level, ``AotRegistry``/``AotFn`` manage
+   every jitted serving function so ``ServingEngine.warmup()`` can compile
+   the full shape inventory up front and steady-state serving performs
+   ZERO new compilations (post-freeze compiles/stalls surface in
+   ``stats()``);
+4. **engine** — ``ServingEngine``: paged per-slot KV decode (block-table-
+   indexed shared page pools, one-call batched prefill OR chunked prefill
+   interleaved with decode ticks for long prompts, page recycling —
    unbounded engine lifetime) with the legacy shared-position-timeline
    layout kept for recurrent-state/SWA models, over pluggable backends
    (shard_map pipelined / local single-process) with live stage-boundary
@@ -18,6 +27,7 @@ Three decoupled layers over the planner/pipeline/ft stack:
    temperature/top-k sampled (**sampling** — per-request PRNG threading
    keeps sampled streams batch-independent).
 """
+from .aot import MONITOR, AotFn, AotRegistry, CompileMonitor, CompileStall
 from .engine import (EngineConfig, EngineEvent, LocalDecodeBackend,
                      PagedLocalBackend, PagedPipelinedBackend,
                      PipelinedDecodeBackend, ServingEngine,
@@ -27,7 +37,8 @@ from .scheduler import PagePool, Request, SlotScheduler
 from .telemetry import StageTelemetry
 
 __all__ = [
-    "EngineConfig", "EngineEvent", "LocalDecodeBackend", "PagePool",
+    "AotFn", "AotRegistry", "CompileMonitor", "CompileStall", "EngineConfig",
+    "EngineEvent", "LocalDecodeBackend", "MONITOR", "PagePool",
     "PagedLocalBackend", "PagedPipelinedBackend", "PipelinedDecodeBackend",
     "Request", "ServingEngine", "SlotScheduler", "StageTelemetry",
     "TokenSampler", "pipelined_backend_available",

@@ -44,6 +44,8 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import itertools
+import math
 import time
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
@@ -58,6 +60,7 @@ from repro.core.privacy import LM_SIM_DELTA
 from repro.enclave.domain import ResourceManager, two_enclave_manager
 from repro.runtime.ft import HeartbeatMonitor, OnlineReplanner
 from repro.runtime.pipeline import PipelinedDecoder, pipeline_applicable
+from repro.serving.aot import MONITOR, AotRegistry
 from repro.serving.sampling import TokenSampler
 from repro.serving.scheduler import PagePool, Request, SlotScheduler
 from repro.serving.telemetry import StageTelemetry
@@ -105,6 +108,24 @@ class EngineConfig:
     temperature: float = 0.0
     top_k: int = 0
     sample_seed: int = 0
+    # AOT warmup + chunked prefill (DESIGN.md §AOT warmup & chunked prefill)
+    warmup: bool = False                # compile every serving shape at
+    #                                     startup; steady state then performs
+    #                                     ZERO new XLA compilations (asserted
+    #                                     via stats()["post_warmup_compiles"])
+    warmup_layouts: int = 8             # swap-target stage layouts to prewarm
+    prefill_chunk: int = 0              # long prompts prefill in chunks of
+    #                                     this many tokens, at most one chunk
+    #                                     per engine step between decode
+    #                                     ticks (0 = whole-prompt admission)
+    # host-history ring-buffer caps: events / finished transcripts /
+    # step-time samples / admission latencies keep only this many entries
+    # (lifetime aggregates in stats() stay exact), so a week-long serve
+    # holds constant host memory
+    events_cap: int = 4096
+    finished_cap: int = 4096
+    step_times_cap: int = 4096
+    admission_cap: int = 4096
 
 
 # ---------------------------------------------------------------------------
@@ -120,19 +141,34 @@ class LocalDecodeBackend:
     migrates_cache = False
 
     def __init__(self, api, params, cfg: EngineConfig,
-                 stage_blocks: Sequence[int]):
-        self.api, self.params = api, params
+                 stage_blocks: Sequence[int],
+                 aot: Optional[AotRegistry] = None):
+        self.api, self.params, self.cfg = api, params, cfg
         self.seg = api.model.segments[0]
         self.stage_blocks = tuple(stage_blocks)
-        cache = api.init_cache(cfg.num_slots, cfg.max_seq)
+        self.aot = aot or AotRegistry()
+        self.reset_state()
+        # single-device backend: AOT dispatch through stored Compiled
+        # executables is the zero-recompile path (serving/aot.py). The slot
+        # index is traced (not a static eager index) so one compiled insert
+        # covers every slot.
+        self._step = self.aot.wrap("decode_step", jax.jit(api.decode_fn))
+
+        def insert(body, start, upd_body, upd_start, b):
+            body = jax.tree.map(
+                lambda g, s: jax.lax.dynamic_update_slice_in_dim(
+                    g, s, b, axis=1), body, upd_body)
+            return body, jax.lax.dynamic_update_slice(start, upd_start, (b,))
+
+        self._insert = self.aot.wrap("insert", jax.jit(insert))
+
+    def reset_state(self) -> None:
+        cfg = self.cfg
+        cache = self.api.init_cache(cfg.num_slots, cfg.max_seq)
         cache["len"] = jnp.int32(cfg.prompt_capacity)
         cache["start"] = jnp.full((cfg.num_slots,), cfg.prompt_capacity,
                                   jnp.int32)
         self.cache = cache
-        self._step = jax.jit(api.decode_fn)
-        self._insert = jax.jit(lambda body, upd, b: jax.tree.map(
-            lambda g, s: jax.lax.dynamic_update_slice_in_dim(g, s, b, axis=1),
-            body, upd))
 
     @property
     def cache_len(self) -> int:
@@ -145,10 +181,9 @@ class LocalDecodeBackend:
 
     def insert_slot(self, slot: int, private_cache: Dict[str, Any]) -> None:
         name = self.seg.name
-        self.cache[name] = self._insert(self.cache[name],
-                                        private_cache[name], slot)
-        self.cache["start"] = self.cache["start"].at[slot].set(
-            private_cache["start"][0])
+        self.cache[name], self.cache["start"] = self._insert(
+            self.cache[name], self.cache["start"], private_cache[name],
+            private_cache["start"], jnp.int32(slot))
 
     def swap(self, stage_blocks: Sequence[int]) -> bool:
         self.stage_blocks = tuple(stage_blocks)
@@ -166,32 +201,57 @@ class PipelinedDecodeBackend:
     migrates_cache = True
 
     def __init__(self, api, mesh, params, cfg: EngineConfig,
-                 stage_blocks: Sequence[int]):
+                 stage_blocks: Sequence[int],
+                 aot: Optional[AotRegistry] = None):
         self.api, self.mesh, self.params, self.cfg = api, mesh, params, cfg
         self.seg = api.model.segments[0]
+        self.aot = aot or AotRegistry()
+        # decoders/step fns cached per stage layout: swapping BACK to a
+        # layout reuses the same jit objects, so a previously-warmed layout
+        # never recompiles (bounded by the composition count in practice;
+        # warmup prewarms at most cfg.warmup_layouts of them)
+        self._layouts: Dict[Tuple[int, ...], Tuple] = {}
         self._build(stage_blocks)
-        cache = api.init_cache(cfg.num_slots, cfg.max_seq)
+        self.reset_state()
+        self._insert = self.aot.wrap("insert", jax.jit(
+            self._insert_impl), dispatch="jit")
+
+    @staticmethod
+    def _insert_impl(staged, start, upd, upd_start, b):
+        staged = jax.tree.map(
+            lambda g, s: jax.lax.dynamic_update_slice_in_dim(g, s, b, axis=2),
+            staged, upd)
+        return staged, jax.lax.dynamic_update_slice(start, upd_start, (b,))
+
+    def _build(self, stage_blocks: Sequence[int]) -> None:
+        cfg = self.cfg
+        self.stage_blocks = key = tuple(stage_blocks)
+        hit = self._layouts.get(key)
+        if hit is None:
+            dec = PipelinedDecoder(
+                self.api, self.mesh, num_stages=cfg.num_stages,
+                num_microbatches=cfg.num_microbatches,
+                seal_boundary=cfg.seal_boundary, use_kernel=cfg.use_kernel,
+                stage_blocks=key)
+            staged_params = dec.stage_params(self.params)
+            # shard_map state changes sharding between the first and
+            # steady-state call -> "jit" dispatch (serving/aot.py)
+            step_fn = self.aot.wrap(f"step{key}", jax.jit(dec.build(
+                prestaged_params=True, prestaged_cache=True,
+                per_slot_start=True)), dispatch="jit")
+            probe = self.aot.wrap(f"probe{key}", dec.build_stage_probe(),
+                                  dispatch="jit")
+            hit = self._layouts[key] = (dec, staged_params, step_fn, probe)
+        self.dec, self.staged_params, self.step_fn, self._probe = hit
+        self._probe_warm = False
+
+    def reset_state(self) -> None:
+        cfg = self.cfg
+        cache = self.api.init_cache(cfg.num_slots, cfg.max_seq)
         cache["len"] = jnp.int32(cfg.prompt_capacity)
         staged, cache_len = self.dec.stage_cache(cache)
         start = jnp.full((cfg.num_slots,), cfg.prompt_capacity, jnp.int32)
         self.state = (staged, cache_len, start)
-        self._insert = jax.jit(lambda staged, upd, b: jax.tree.map(
-            lambda g, s: jax.lax.dynamic_update_slice_in_dim(g, s, b, axis=2),
-            staged, upd))
-
-    def _build(self, stage_blocks: Sequence[int]) -> None:
-        cfg = self.cfg
-        self.stage_blocks = tuple(stage_blocks)
-        self.dec = PipelinedDecoder(
-            self.api, self.mesh, num_stages=cfg.num_stages,
-            num_microbatches=cfg.num_microbatches,
-            seal_boundary=cfg.seal_boundary, use_kernel=cfg.use_kernel,
-            stage_blocks=self.stage_blocks)
-        self.staged_params = self.dec.stage_params(self.params)
-        self.step_fn = jax.jit(self.dec.build(
-            prestaged_params=True, prestaged_cache=True, per_slot_start=True))
-        self._probe = self.dec.build_stage_probe()
-        self._probe_warm = False
 
     @property
     def cache_len(self) -> int:
@@ -205,8 +265,8 @@ class PipelinedDecodeBackend:
     def insert_slot(self, slot: int, private_cache: Dict[str, Any]) -> None:
         slot_staged = self.dec._stage_tree(private_cache[self.seg.name])
         staged, cache_len, start = self.state
-        staged = self._insert(staged, slot_staged, slot)
-        start = start.at[slot].set(private_cache["start"][0])
+        staged, start = self._insert(staged, start, slot_staged,
+                                     private_cache["start"], jnp.int32(slot))
         self.state = (staged, cache_len, start)
 
     def swap(self, stage_blocks: Sequence[int]) -> bool:
@@ -262,16 +322,19 @@ class PagedLocalBackend:
 
     def __init__(self, api, params, cfg: EngineConfig,
                  stage_blocks: Sequence[int], num_pages: int,
-                 pages_per_slot: int):
+                 pages_per_slot: int, aot: Optional[AotRegistry] = None):
         self.api, self.params = api, params
         self.seg = api.model.segments[0]
         self.stage_blocks = tuple(stage_blocks)
-        self.cache = api.init_paged_cache(cfg.num_slots, num_pages,
-                                          cfg.page_size, pages_per_slot)
+        self.aot = aot or AotRegistry()
+        self._shape = (cfg.num_slots, num_pages, cfg.page_size,
+                       pages_per_slot)
+        self.reset_state()
         # use_kernel is bound statically at jit time: fused Pallas paged
         # attention on TPU, jnp page-gather otherwise
-        self._step = jax.jit(functools.partial(api.decode_paged_fn,
-                                               use_kernel=cfg.use_kernel))
+        self._step = self.aot.wrap("decode_step", jax.jit(
+            functools.partial(api.decode_paged_fn,
+                              use_kernel=cfg.use_kernel)))
         seg_name = self.seg.name
 
         def insert(cache, kk, vv, pages, offs, slot, bt_row, seq_len):
@@ -311,15 +374,48 @@ class PagedLocalBackend:
                              v_pool.at[:, dst].set(v_pool[:, src]))
             return out
 
-        self._insert = jax.jit(insert)
-        self._clear = jax.jit(clear)
-        self._set_bt = jax.jit(set_bt)
-        self._copy_pg = jax.jit(copy_pg)
+        def chunk(params, cache, batch):
+            # one prefill chunk against the live pools; block tables and
+            # seq_lens ride along untouched (commit_slot flips the slot
+            # from idle to decoding only after the LAST chunk lands)
+            logits, new_pools = api.prefill_chunk_fn(
+                params, {seg_name: cache[seg_name]}, batch)
+            out = dict(cache)
+            out.update(new_pools)
+            return logits, out
+
+        def commit(cache, slot, bt_row, seq_len):
+            out = dict(cache)
+            out["block_tables"] = cache["block_tables"].at[slot].set(bt_row)
+            out["seq_lens"] = cache["seq_lens"].at[slot].set(seq_len)
+            return out
+
+        self._insert = self.aot.wrap("insert", jax.jit(insert))
+        self._clear = self.aot.wrap("clear_slot", jax.jit(clear))
+        self._set_bt = self.aot.wrap("set_table_entry", jax.jit(set_bt))
+        self._copy_pg = self.aot.wrap("copy_page", jax.jit(copy_pg))
+        self._chunk = self.aot.wrap("prefill_chunk", jax.jit(chunk))
+        self._commit = self.aot.wrap("commit_slot", jax.jit(commit))
+
+    def reset_state(self) -> None:
+        self.cache = self.api.init_paged_cache(*self._shape)
 
     def step(self, tokens: jnp.ndarray, key) -> jnp.ndarray:
         logits, self.cache = self._step(self.params, self.cache,
                                         {"tokens": tokens})
         return logits
+
+    def prefill_chunk(self, toks, offset: int, chunk_len: int, bt_row,
+                      pages, offs) -> jnp.ndarray:
+        batch = {"tokens": toks, "offset": jnp.int32(offset),
+                 "chunk_len": jnp.int32(chunk_len), "bt_row": bt_row,
+                 "pages": pages, "offs": offs}
+        logits, self.cache = self._chunk(self.params, self.cache, batch)
+        return logits
+
+    def commit_slot(self, slot: int, bt_row, seq_len: int) -> None:
+        self.cache = self._commit(self.cache, jnp.int32(slot), bt_row,
+                                  jnp.int32(seq_len))
 
     def insert_slot(self, slot: int, kv, pages, offs, bt_row,
                     seq_len: int) -> None:
@@ -359,14 +455,15 @@ class PagedPipelinedBackend:
 
     def __init__(self, api, mesh, params, cfg: EngineConfig,
                  stage_blocks: Sequence[int], num_pages: int,
-                 pages_per_slot: int):
+                 pages_per_slot: int, aot: Optional[AotRegistry] = None):
         self.api, self.mesh, self.params, self.cfg = api, mesh, params, cfg
         self.seg = api.model.segments[0]
+        self.aot = aot or AotRegistry()
+        self._layouts: Dict[Tuple[int, ...], Tuple] = {}
+        self._shape = (cfg.num_slots, num_pages, cfg.page_size,
+                       pages_per_slot)
         self._build(stage_blocks)
-        cache = api.init_paged_cache(cfg.num_slots, num_pages,
-                                     cfg.page_size, pages_per_slot)
-        staged = self.dec._stage_tree(cache[self.seg.name])
-        self.state = (staged, cache["block_tables"], cache["seq_lens"])
+        self.reset_state()
 
         def insert(staged, bt, sl, kk_st, vv_st, pages, offs, slot, bt_row,
                    seq_len):
@@ -394,29 +491,92 @@ class PagedPipelinedBackend:
             return (k_pool.at[:, :, dst].set(k_pool[:, :, src]),
                     v_pool.at[:, :, dst].set(v_pool[:, :, src]))
 
-        self._insert = jax.jit(insert)
-        self._clear = jax.jit(clear)
-        self._set_bt = jax.jit(set_bt)
-        self._copy_pg = jax.jit(copy_pg)
+        def commit(bt, sl, slot, bt_row, seq_len):
+            return bt.at[slot].set(bt_row), sl.at[slot].set(seq_len)
+
+        wrap = functools.partial(self.aot.wrap, dispatch="jit")
+        self._insert = wrap("insert", jax.jit(insert))
+        self._clear = wrap("clear_slot", jax.jit(clear))
+        self._set_bt = wrap("set_table_entry", jax.jit(set_bt))
+        self._copy_pg = wrap("copy_page", jax.jit(copy_pg))
+        self._commit = wrap("commit_slot", jax.jit(commit))
+
+    def _make_chunk(self, dec):
+        """Chunked prefill against the STAGED pools: unstage -> run the
+        stacked-layer chunk fn -> restage, all inside one jit (the gathers
+        fuse with the chunk compute; page ids are layout-invariant so the
+        host's block tables/refcounts are oblivious to staging, same
+        contract as restage_cache)."""
+        api, seg_name = self.api, self.seg.name
+        S, bps, n = dec.num_stages, dec.bps, dec.seg.n
+        if dec.uniform:
+            def unstage(x):
+                return x.reshape((n,) + x.shape[2:])
+        else:
+            sidx = dec._scatter_idx
+
+            def unstage(x):
+                return jnp.take(x.reshape((S * bps,) + x.shape[2:]),
+                                jnp.asarray(sidx), axis=0)
+
+        def chunk(params, staged, batch):
+            stacked = jax.tree.map(unstage, staged)
+            logits, new_pools = api.prefill_chunk_fn(
+                params, {seg_name: stacked}, batch)
+            return logits, dec._stage_tree(new_pools[seg_name])
+
+        return chunk
 
     def _build(self, stage_blocks: Sequence[int]) -> None:
         cfg = self.cfg
-        self.stage_blocks = tuple(stage_blocks)
-        self.dec = PipelinedDecoder(
-            self.api, self.mesh, num_stages=cfg.num_stages,
-            num_microbatches=cfg.num_microbatches,
-            seal_boundary=cfg.seal_boundary, use_kernel=cfg.use_kernel,
-            stage_blocks=self.stage_blocks)
-        self.staged_params = self.dec.stage_params(self.params)
-        self.step_fn = jax.jit(self.dec.build(
-            prestaged_params=True, paged=True))
-        self._probe = self.dec.build_stage_probe(paged=True)
+        self.stage_blocks = key = tuple(stage_blocks)
+        hit = self._layouts.get(key)
+        if hit is None:
+            dec = PipelinedDecoder(
+                self.api, self.mesh, num_stages=cfg.num_stages,
+                num_microbatches=cfg.num_microbatches,
+                seal_boundary=cfg.seal_boundary, use_kernel=cfg.use_kernel,
+                stage_blocks=key)
+            staged_params = dec.stage_params(self.params)
+            step_fn = self.aot.wrap(f"step{key}", jax.jit(dec.build(
+                prestaged_params=True, paged=True)), dispatch="jit")
+            probe = self.aot.wrap(f"probe{key}",
+                                  dec.build_stage_probe(paged=True),
+                                  dispatch="jit")
+            chunk_fn = self.aot.wrap(f"chunk{key}",
+                                     jax.jit(self._make_chunk(dec)),
+                                     dispatch="jit")
+            hit = self._layouts[key] = (dec, staged_params, step_fn, probe,
+                                        chunk_fn)
+        (self.dec, self.staged_params, self.step_fn, self._probe,
+         self._chunk) = hit
         self._probe_warm = False
+
+    def reset_state(self) -> None:
+        cache = self.api.init_paged_cache(*self._shape)
+        staged = self.dec._stage_tree(cache[self.seg.name])
+        self.state = (staged, cache["block_tables"], cache["seq_lens"])
 
     def step(self, tokens: jnp.ndarray, key) -> jnp.ndarray:
         logits, self.state = self.step_fn(self.staged_params, self.state,
                                           {"tokens": tokens}, key)
         return logits
+
+    def prefill_chunk(self, toks, offset: int, chunk_len: int, bt_row,
+                      pages, offs) -> jnp.ndarray:
+        batch = {"tokens": toks, "offset": jnp.int32(offset),
+                 "chunk_len": jnp.int32(chunk_len), "bt_row": bt_row,
+                 "pages": pages, "offs": offs}
+        staged, bt, sl = self.state
+        logits, staged = self._chunk(self.params, staged, batch)
+        self.state = (staged, bt, sl)
+        return logits
+
+    def commit_slot(self, slot: int, bt_row, seq_len: int) -> None:
+        staged, bt, sl = self.state
+        bt, sl = self._commit(bt, sl, jnp.int32(slot), bt_row,
+                              jnp.int32(seq_len))
+        self.state = (staged, bt, sl)
 
     def insert_slot(self, slot: int, kv, pages, offs, bt_row,
                     seq_len: int) -> None:
@@ -486,6 +646,27 @@ class EngineEvent:
     detail: Any = None
 
 
+@dataclasses.dataclass
+class _ChunkState:
+    """Host state of one slot's in-flight chunked prefill: the full token
+    sequence being streamed in, the pages acquired so far (device block
+    table stays unset until the final chunk commits), and the COW ledger —
+    ``registered`` counts pages already frozen into the prefix index (a
+    page is registered only once FULLY written, so another admission can
+    never adopt a half-prefilled page)."""
+
+    req: Request
+    tokens: List[int]
+    keys: List[tuple]                   # COW prefix keys, one per page
+    t0: float                           # admission wall-clock start
+    pos: int = 0                        # tokens prefilled so far
+    chunks: int = 0
+    pages: List[int] = dataclasses.field(default_factory=list)
+    shared: List[bool] = dataclasses.field(default_factory=list)
+    registered: int = 0
+    logits: Any = None                  # last chunk's logits [1, V]
+
+
 class ServingEngine:
     """Continuous-batching serving over the planner/pipeline/ft subsystems.
 
@@ -545,7 +726,12 @@ class ServingEngine:
             self.replanner,
             monitor=HeartbeatMonitor(self.rm,
                                      timeout_s=cfg.heartbeat_timeout_s),
-            interval=cfg.telemetry_interval)
+            interval=cfg.telemetry_interval,
+            step_times_cap=cfg.step_times_cap)
+        # per-engine AOT compile ledger; every jitted serving function is
+        # registered here so warmup() can compile the full shape inventory
+        # and stats() can report post-warmup compile stalls
+        self.aot = AotRegistry()
 
         # --- paged KV page pool ------------------------------------------
         assert cfg.page_policy in ("demand", "reserve"), cfg.page_policy
@@ -578,21 +764,24 @@ class ServingEngine:
             if self.kv_layout == "paged":
                 self.backend = PagedPipelinedBackend(
                     api, mesh, self.params, cfg, self.stage_blocks,
-                    self.pool.num_pages, self.pages_per_slot)
+                    self.pool.num_pages, self.pages_per_slot, aot=self.aot)
             else:
                 self.backend = PipelinedDecodeBackend(
-                    api, mesh, self.params, cfg, self.stage_blocks)
+                    api, mesh, self.params, cfg, self.stage_blocks,
+                    aot=self.aot)
         else:
             if self.kv_layout == "paged":
                 self.backend = PagedLocalBackend(
                     api, self.params, cfg, self.stage_blocks,
-                    self.pool.num_pages, self.pages_per_slot)
+                    self.pool.num_pages, self.pages_per_slot, aot=self.aot)
             else:
                 self.backend = LocalDecodeBackend(api, self.params, cfg,
-                                                  self.stage_blocks)
+                                                  self.stage_blocks,
+                                                  aot=self.aot)
         self.backend_kind = backend
 
-        self.scheduler = SlotScheduler(cfg.num_slots)
+        self.scheduler = SlotScheduler(cfg.num_slots,
+                                       finished_cap=cfg.finished_cap)
         self.global_len = cfg.prompt_capacity
         self.pending = np.zeros(cfg.num_slots, np.int32)  # next input token
         self.steps = 0
@@ -601,16 +790,34 @@ class ServingEngine:
         self._blocked_rid = None        # back-pressure event dedup
         # bounded: the paged engine runs indefinitely, so per-admission
         # history must not grow with lifetime (p50/p99 over a rolling
-        # window; ROADMAP (n) covers the older unbounded transcripts)
-        self.admission_ms: Deque[float] = deque(maxlen=4096)
+        # window; lifetime aggregates live in scheduler/telemetry totals)
+        self.admission_ms: Deque[float] = deque(maxlen=cfg.admission_cap)
+        self.admissions = 0
         self.prefill_calls = 0
-        self.events: List[EngineEvent] = []
-        self._prefill = jax.jit(api.decode_fn)
+        # events are a ring buffer; step() reports the CURRENT step's
+        # events via _step_events, never by slicing the ring
+        self.events: Deque[EngineEvent] = deque(maxlen=cfg.events_cap)
+        self._step_events: List[EngineEvent] = []
+        disp = "jit" if backend == "pipelined" else "compiled"
+        self._prefill = self.aot.wrap("prefill_token",
+                                      jax.jit(api.decode_fn), dispatch=disp)
         if self.kv_layout == "paged":
-            self._prefill_at = jax.jit(api.prefill_at_fn)
+            self._prefill_at = self.aot.wrap(
+                "prefill_bucket", jax.jit(api.prefill_at_fn), dispatch=disp)
         self._key = jnp.uint32(0xC0FFEE)
         self.sampler = TokenSampler(cfg.temperature, cfg.top_k,
                                     cfg.sample_seed)
+        # chunked prefill state: slot -> _ChunkState for every admitted
+        # request whose prompt is still streaming in
+        assert cfg.prefill_chunk >= 0, cfg.prefill_chunk
+        self.chunking: Dict[int, _ChunkState] = {}
+        self.chunked_admissions = 0
+        self.chunk_steps = 0
+        self.warmup_s = 0.0
+        self.warmed = False
+        self._in_warmup = False
+        if cfg.warmup:
+            self.warmup()
 
     # ------------------------------------------------------------------
     def _blocks_from(self, spec: PlacementSpec) -> Tuple[int, ...]:
@@ -626,6 +833,11 @@ class ServingEngine:
         if self.mesh is not None and hasattr(jax, "set_mesh"):
             return jax.set_mesh(self.mesh)
         return contextlib.nullcontext()
+
+    def _emit(self, kind: str, detail: Any = None) -> None:
+        ev = EngineEvent(self.steps, kind, detail)
+        self.events.append(ev)
+        self._step_events.append(ev)
 
     # -- request API -------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
@@ -696,8 +908,17 @@ class ServingEngine:
         headroom, and supply is the free list plus index-only pages the
         allocator could evict — EXCLUDING pages this request's own prefix
         keys hit, which adoption is about to pin (counting them both as a
-        hit and as evictable would over-admit)."""
-        keys = self._prompt_page_keys(self._prompt_tokens(req))
+        hit and as evictable would over-admit).
+
+        Chunked admission (prefill_chunk > 0 and a longer prompt) gates on
+        the FIRST chunk's pages only: later chunks demand-allocate page by
+        page, preempting younger slots when the pool runs dry — the
+        submit-time worst-case assert still guarantees progress."""
+        tokens = self._prompt_tokens(req)
+        keys = self._prompt_page_keys(tokens)
+        C = self.config.prefill_chunk
+        if C > 0 and len(tokens) > C:
+            keys = keys[:self.pool.pages_needed(C)]
         if self.config.prefix_sharing:
             hit_pages = {self.pool.prefix_index[k] for k in keys
                          if k in self.pool.prefix_index}
@@ -727,6 +948,10 @@ class ServingEngine:
     def _prefill_slot(self, slot: int, req: Request) -> None:
         t0 = time.perf_counter()
         if self.kv_layout == "paged":
+            C = self.config.prefill_chunk
+            if C > 0 and len(self._prompt_tokens(req)) > C:
+                self._begin_chunked(slot, req, t0)
+                return
             logits, shared = self._prefill_paged(slot, req)
             detail = {"rid": req.rid, "slot": slot,
                       "pages": len(self.slot_pages[slot]), "shared": shared}
@@ -743,7 +968,8 @@ class ServingEngine:
         self.pending[slot] = first
         detail["ms"] = (time.perf_counter() - t0) * 1e3
         self.admission_ms.append(detail["ms"])
-        self.events.append(EngineEvent(self.steps, "admit", detail))
+        self.admissions += 1
+        self._emit("admit", detail)
         fin = self.scheduler.on_token(slot, first, step=self.steps)
         if fin is not None:
             self._on_finish(fin)
@@ -857,10 +1083,133 @@ class ServingEngine:
                                  P)
         return logits, int(sum(shared))
 
+    # -- chunked prefill: stream a long prompt in over many steps ----------
+    def _begin_chunked(self, slot: int, req: Request, t0: float) -> None:
+        """Admit ``req`` into ``slot`` WITHOUT prefilling: the prompt's KV
+        streams in one fixed-size chunk per engine step (_advance_chunks),
+        interleaved with the batch's decode ticks — a long prompt costs
+        its batch-mates at most one chunk of extra latency per token
+        instead of a whole-prompt admission stall. Until the final chunk
+        commits the block table, the device row stays idle (seq_len 0,
+        decode writes drop on the null page) and the request sits in
+        PREFILL state: it owns pages and can be preempted, but produces
+        no tokens and takes no decode batch work."""
+        tokens = self._prompt_tokens(req)
+        cs = _ChunkState(req=req, tokens=tokens,
+                         keys=self._prompt_page_keys(tokens), t0=t0)
+        if self.config.page_policy == "reserve":
+            need = self.pool.pages_needed(
+                len(req.prompt) + req.max_new_tokens)
+            pages = self.pool.alloc(need)
+            assert pages is not None, "gated by _fits"
+            cs.pages, cs.shared = pages, [False] * need
+        self.slot_pages[slot] = cs.pages
+        self.slot_len[slot] = 0
+        self.chunking[slot] = cs
+        self.scheduler.mark_prefill(slot)
+        self._emit("chunk_admit",
+                   {"rid": req.rid, "slot": slot, "prompt": len(tokens),
+                    "chunk": self.config.prefill_chunk})
+
+    def _advance_chunks(self) -> None:
+        """One chunk of ONE in-flight prompt per engine step (oldest rid
+        first — FIFO fairness), scheduled before the decode tick."""
+        if not self.chunking:
+            return
+        slot = min(self.chunking, key=lambda s: self.chunking[s].req.rid)
+        cs = self.chunking[slot]
+        self._run_chunk(slot, cs)
+        # _run_chunk may have preempted the slot mid-acquisition
+        if slot in self.chunking and cs.pos == len(cs.tokens):
+            self._finish_chunked(slot, cs)
+
+    def _run_chunk(self, slot: int, cs: _ChunkState) -> None:
+        cfg = self.config
+        req = cs.req
+        C, Pg, N = cfg.prefill_chunk, cfg.page_size, self.pool.num_pages
+        P, pos = len(cs.tokens), cs.pos
+        end = min(pos + C, P)
+        if cfg.page_policy == "demand":
+            # acquire pages covering [0, end): COW index hits adopt the
+            # frozen page by reference; misses demand-allocate, preempting
+            # the youngest slot when the pool runs dry — possibly US
+            while len(cs.pages) * Pg < end:
+                i = len(cs.pages)
+                pg, sh = None, False
+                if cfg.prefix_sharing:
+                    pg = self.pool.lookup_prefix(cs.keys[i])
+                    sh = pg is not None
+                if pg is None:
+                    pg = self._alloc_or_preempt(req)
+                    if pg is None:
+                        return          # req itself was preempted; requeued
+                cs.pages.append(pg)     # slot_pages aliases this list
+                cs.shared.append(sh)
+        Cp = end - pos
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :Cp] = cs.tokens[pos:end]
+        # scatter targets for the chunk's own KV: positions >= Cp (right
+        # padding) and positions in adopted shared pages go to the
+        # out-of-range drop sentinel, exactly like one-shot admission
+        idx = np.arange(C)
+        abs_pos = pos + idx
+        page_of = np.minimum(abs_pos, end - 1) // Pg
+        shared_of = np.asarray(cs.shared, bool)[page_of]
+        skip = (idx >= Cp) | shared_of
+        pages_vec = np.where(skip, N,
+                             np.asarray(cs.pages, np.int32)[page_of])
+        offs_vec = np.where(idx < Cp, abs_pos % Pg, 0).astype(np.int32)
+        bt_row = np.zeros((1, self.pages_per_slot), np.int32)
+        bt_row[0, :len(cs.pages)] = cs.pages
+        cs.logits = self.backend.prefill_chunk(
+            jnp.asarray(toks), pos, Cp, jnp.asarray(bt_row),
+            jnp.asarray(pages_vec.astype(np.int32)), jnp.asarray(offs_vec))
+        self.prefill_calls += 1
+        self.chunk_steps += 1
+        cs.pos, cs.chunks = end, cs.chunks + 1
+        if cfg.page_policy == "demand" and cfg.prefix_sharing:
+            # freeze pages into the COW index only once FULLY written —
+            # a half-prefilled page must never be adoptable
+            while cs.registered < len(cs.pages):
+                i = cs.registered
+                if cs.pos < min((i + 1) * Pg, P):
+                    break
+                if not cs.shared[i]:
+                    self.pool.register_prefix(cs.keys[i], cs.pages[i])
+                cs.registered += 1
+        self._emit("chunk", {"rid": req.rid, "slot": slot,
+                             "pos": cs.pos, "of": P})
+
+    def _finish_chunked(self, slot: int, cs: _ChunkState) -> None:
+        """Last chunk landed: commit the block table + seq_len (the row
+        joins the decode batch), sample the first token from the final
+        chunk's logits — the same logits position one-shot prefill reads —
+        and flip the request to RUNNING."""
+        req = cs.req
+        P = len(cs.tokens)
+        bt_row = np.zeros(self.pages_per_slot, np.int32)
+        bt_row[:len(cs.pages)] = cs.pages
+        self.backend.commit_slot(slot, jnp.asarray(bt_row), P)
+        self.slot_len[slot] = P
+        del self.chunking[slot]
+        self.scheduler.mark_running(slot)
+        first = self.sampler.sample_one(cs.logits, req.rid,
+                                        len(req.generated))
+        self.pending[slot] = first
+        ms = (time.perf_counter() - cs.t0) * 1e3
+        self.admission_ms.append(ms)
+        self.admissions += 1
+        self.chunked_admissions += 1
+        self._emit("admit", {"rid": req.rid, "slot": slot,
+                             "pages": len(cs.pages),
+                             "shared": int(sum(cs.shared)),
+                             "chunks": cs.chunks, "ms": ms})
+        fin = self.scheduler.on_token(slot, first, step=self.steps)
+        if fin is not None:
+            self._on_finish(fin)
+
     def _on_finish(self, fin: Request) -> None:
-        self.events.append(EngineEvent(self.steps, "finish",
-                                       {"rid": fin.rid,
-                                        "by": fin.finished_by}))
+        self._emit("finish", {"rid": fin.rid, "by": fin.finished_by})
         if self.kv_layout == "paged" and fin.slot in self.slot_pages:
             # release() decrefs: pages shared with other slots or frozen in
             # the COW index survive until their last reference drops
@@ -877,15 +1226,22 @@ class ServingEngine:
         along and re-prefill as a prompt extension on re-admission."""
         req.preemptions += 1
         self.preemptions += 1
+        cs = self.chunking.pop(slot, None)
         self.pool.release(self.slot_pages.pop(slot))
         self.slot_len.pop(slot)
         self.backend.clear_slot(slot)
         self.scheduler.preempt(slot)
         self.pending[slot] = 0
-        self.events.append(EngineEvent(
-            self.steps, "preempt",
-            {"rid": req.rid, "slot": slot,
-             "generated": len(req.generated)}))
+        detail = {"rid": req.rid, "slot": slot,
+                  "generated": len(req.generated)}
+        if cs is not None:
+            # mid-chunked-prefill eviction: the KV written so far is
+            # dropped with the pages; re-admission restarts the chunk
+            # stream from token 0 (registered prefix pages survive in the
+            # COW index, so the retry usually adopts them back for free)
+            detail["mid_prefill"] = True
+            detail["prefilled"] = cs.pos
+        self._emit("preempt", detail)
 
     def _alloc_or_preempt(self, requester: Request) -> Optional[int]:
         """One page for ``requester``, preempting the lowest-priority
@@ -912,11 +1268,13 @@ class ServingEngine:
         position enters a new page, and fork (copy) the target page first
         when it is shared (refcount > 1 — another slot or the COW index
         holds it). Runs oldest-request-first so preemption priority
-        (youngest dies first) is respected when the pool is tight."""
+        (youngest dies first) is respected when the pool is tight.
+        PREFILL (mid-chunk) slots are skipped: they write via the chunk
+        scatter path, which acquires its own pages."""
         if self.kv_layout != "paged" or self.config.page_policy != "demand":
             return
         Pg = self.config.page_size
-        for slot, req in sorted(self.scheduler.active(),
+        for slot, req in sorted(self.scheduler.decoding(),
                                 key=lambda t: t[1].rid):
             if self.scheduler.slots[slot] is not req:
                 continue                 # preempted earlier in this pass
@@ -940,9 +1298,8 @@ class ServingEngine:
                 pages[pi] = pg
                 self.pool.forks += 1
                 self.backend.set_table_entry(slot, pi, pg)
-                self.events.append(EngineEvent(
-                    self.steps, "fork",
-                    {"rid": req.rid, "slot": slot, "from": old, "to": pg}))
+                self._emit("fork", {"rid": req.rid, "slot": slot,
+                                    "from": old, "to": pg})
 
     def _admit(self) -> None:
         while True:
@@ -954,9 +1311,8 @@ class ServingEngine:
                     self._blocked_rid = nxt.rid
                     kind = ("pages" if self.kv_layout == "paged"
                             else "timeline")
-                    self.events.append(EngineEvent(
-                        self.steps, "backpressure",
-                        {"rid": nxt.rid, "waiting_on": kind}))
+                    self._emit("backpressure",
+                               {"rid": nxt.rid, "waiting_on": kind})
                 return
             self._blocked_rid = None
             hit = self.scheduler.admit_next(step=self.steps)
@@ -965,20 +1321,31 @@ class ServingEngine:
 
     # -- one decode step ---------------------------------------------------
     def step(self) -> List[EngineEvent]:
-        before = len(self.events)
+        self._step_events = []
         with self._mesh_ctx():
             self._admit()
-            # demand paging: back every active slot's next write position
+            # chunked prefill: at most ONE prompt chunk per engine step,
+            # interleaved with the decode tick below so batch-mates keep
+            # emitting tokens while a long prompt fills in
+            self._advance_chunks()
+            # demand paging: back every decoding slot's next write position
             # with a private page (grow / fork / preempt) BEFORE the step,
             # so the jitted decode never scatters into a shared page
             self._grow_active()
-            active = self.scheduler.active()
+            active = self.scheduler.decoding()
             if not active:
+                if self.chunking:
+                    # chunk-only step: prefill progressed, nothing decodes
+                    # yet — the engine clock still ticks (wait accounting)
+                    # but the shared timeline must NOT advance
+                    self.steps += 1
+                    self.stalled = False
+                    return self._step_events
                 # head-of-line blocked with nothing running: no completion
                 # can ever free the resource it waits on -> permanently
                 # stalled (callers stop driving; requests stay queued)
                 self.stalled = bool(self.scheduler.queue)
-                return self.events[before:]
+                return self._step_events
             self.stalled = False
             self.peak_running = max(self.peak_running, len(active))
             if self.kv_layout == "timeline":
@@ -1012,29 +1379,32 @@ class ServingEngine:
                 if fin is not None:
                     self._on_finish(fin)
 
-            # telemetry tick → maybe re-plan → maybe swap
-            self.telemetry.record_step(wall)
-            if self.steps % self.telemetry.interval == 0:
-                times = self.backend.stage_times()
-                if times is None:
-                    shares = self.telemetry.predicted_shares()
-                    times = [wall * s for s in shares]
-                if times:
-                    self.telemetry.record_stage_times(times)
-            new_spec = self.telemetry.maybe_observe(self.steps)
-            if new_spec is not None:
-                self.events.append(EngineEvent(
-                    self.steps, "replan",
-                    {"blocks": new_spec.stage_sizes(),
-                     "placement": new_spec.describe()}))
-                if self.config.allow_swap:
-                    self.try_swap(new_spec.stage_sizes())
-                # adopt the spec only once the executing layout matches it
-                # (swap applied, or sizes unchanged and only devices moved);
-                # a skipped swap keeps self.spec on what the backend runs
-                if new_spec.stage_sizes() == self.stage_blocks:
-                    self.spec = new_spec
-        return self.events[before:]
+            # telemetry tick → maybe re-plan → maybe swap. Warmup traffic is
+            # synthetic: keep it out of the measured wall clock and the
+            # replanner's EMAs so the first real serve starts clean.
+            if not self._in_warmup:
+                self.telemetry.record_step(wall)
+                if self.steps % self.telemetry.interval == 0:
+                    times = self.backend.stage_times()
+                    if times is None:
+                        shares = self.telemetry.predicted_shares()
+                        times = [wall * s for s in shares]
+                    if times:
+                        self.telemetry.record_stage_times(times)
+                new_spec = self.telemetry.maybe_observe(self.steps)
+                if new_spec is not None:
+                    self._emit("replan",
+                               {"blocks": new_spec.stage_sizes(),
+                                "placement": new_spec.describe()})
+                    if self.config.allow_swap:
+                        self.try_swap(new_spec.stage_sizes())
+                    # adopt the spec only once the executing layout matches
+                    # it (swap applied, or sizes unchanged and only devices
+                    # moved); a skipped swap keeps self.spec on what the
+                    # backend runs
+                    if new_spec.stage_sizes() == self.stage_blocks:
+                        self.spec = new_spec
+        return self._step_events
 
     # -- live boundary swap ------------------------------------------------
     def try_swap(self, blocks: Sequence[int]) -> bool:
@@ -1043,18 +1413,255 @@ class ServingEngine:
             return False
         if len(blocks) != self.config.num_stages or \
                 sum(blocks) != self.api.model.segments[0].n:
-            self.events.append(EngineEvent(self.steps, "swap_skipped",
-                                           {"blocks": blocks}))
+            self._emit("swap_skipped", {"blocks": blocks})
             return False
         with self._mesh_ctx():
             migrated = self.backend.swap(blocks)
-        self.events.append(EngineEvent(
-            self.steps, "swap", {"from": self.stage_blocks, "to": blocks,
-                                 "migrated": migrated and
-                                 self.backend.migrates_cache}))
+        self._emit("swap", {"from": self.stage_blocks, "to": blocks,
+                            "migrated": migrated and
+                            self.backend.migrates_cache})
         self.stage_blocks = blocks
         self.swaps += 1
         return True
+
+    # -- AOT warmup: compile the full serving shape inventory --------------
+    def warmup(self) -> float:
+        """Compile every shape the steady-state serving loop can dispatch,
+        then freeze the AOT registry: any XLA compilation after this point
+        is a bug, counted by ``stats()["post_warmup_compiles"]`` (asserted
+        zero in tests/CI) and named in ``stats()["compile_stalls"]``.
+
+        Three passes (DESIGN.md §AOT warmup & chunked prefill):
+
+        1. *traffic* — synthetic requests through the REAL submit/step path
+           (one per prefill bucket, a COW twin pair, a chunked long prompt),
+           so host-side eager ops and the backend's sharding evolution
+           (unsharded first insert → pod-sharded steady state) are exercised
+           exactly as serving will;
+        2. *direct* — every AOT entry point traffic can't reach is called
+           state-neutrally (all prefill buckets, page maintenance ops, the
+           chunk kernel, a null decode tick);
+        3. *layouts* — for swappable pipelined backends, tour up to
+           ``warmup_layouts`` alternative stage layouts so a live re-plan
+           swaps onto prebuilt decoders with seeded dispatch caches.
+
+        The engine state is then reset to factory-fresh (same rids, clocks
+        and telemetry a cold engine starts with — warmed and cold engines
+        produce token-identical streams) and pass 2 re-runs on the fresh
+        unsharded state. Idempotent in effect; meaningful only on a fresh
+        engine, asserted below."""
+        assert self.steps == 0 and not self.scheduler.has_work() \
+            and not self.chunking, "warmup() must run on a fresh engine"
+        t0 = time.perf_counter()
+        MONITOR.install()
+        self._in_warmup = True
+        try:
+            with self._mesh_ctx():
+                self._warm_traffic()
+                self._warm_direct()
+                if self.backend_kind == "pipelined" and \
+                        self.config.allow_swap:
+                    self._warm_layouts()
+            self._reset_state()
+            if self.kv_layout == "paged":
+                # the reset re-created unsharded device state: re-seed the
+                # (shape, sharding)-keyed dispatch caches for the first
+                # real admissions (state-neutral for paged layouts)
+                with self._mesh_ctx():
+                    self._warm_direct()
+        finally:
+            self._in_warmup = False
+        self.aot.freeze()
+        self.warmed = True
+        self.warmup_s = time.perf_counter() - t0
+        return self.warmup_s
+
+    def _bucket_inventory(self) -> List[int]:
+        """Every prefill bucket ``_bucket()`` can emit: pow2 sizes up to
+        prompt_capacity, plus the preemption-extended sizes up to
+        request_capacity under the paged layout."""
+        if self.kv_layout != "paged":
+            return []
+        cap = self.request_capacity
+        return sorted({self._bucket(n) for n in range(1, cap + 1)})
+
+    def _warm_traffic(self) -> None:
+        """Synthetic requests through the real serve path. Deterministic
+        token content (keyed off sample_seed) so COW twin adoption and the
+        fork-on-divergence growth path reproduce across runs."""
+        cfg = self.config
+        V = self.api.cfg.vocab_size
+
+        def toks(n: int, salt: int) -> List[int]:
+            return [int((cfg.sample_seed * 7919 + salt * 31 + j) % V)
+                    for j in range(n)]
+
+        prompts: List[List[int]] = []
+        if self.kv_layout == "paged":
+            for i, b in enumerate(x for x in self._bucket_inventory()
+                                  if x <= cfg.prompt_capacity):
+                prompts.append(toks(b, i))
+            # identical twins spanning a partial tail page: COW adoption at
+            # the second admission, then a fork when decode growth first
+            # writes into the shared tail
+            twin = toks(min(cfg.page_size + 2, cfg.prompt_capacity), 101)
+            prompts += [twin, list(twin)]
+            if cfg.prefill_chunk and cfg.prompt_capacity > cfg.prefill_chunk:
+                prompts.append(toks(cfg.prompt_capacity, 202))
+        else:
+            # timeline shapes are length-independent ([1,1] token prefill,
+            # fixed-horizon cache): one short request covers them
+            prompts.append(toks(2, 7))
+        for p in prompts:
+            if self.kv_layout == "paged":
+                mn = max(1, min(2, self.request_capacity - len(p)))
+                if self.pool.pages_needed(len(p) + mn) + 1 > \
+                        self.pool.num_pages - 1:
+                    continue            # unadmittable in real serve too
+            else:
+                mn = max(1, min(2, cfg.max_seq - self.global_len))
+            self.submit(p, mn)
+        guard = 0
+        while self.scheduler.has_work():
+            self.step()
+            assert not self.stalled, "warmup traffic stalled"
+            guard += 1
+            assert guard < 10_000, "warmup traffic failed to drain"
+
+    def _warm_direct(self) -> None:
+        """State-neutral direct calls into every AOT entry point: prefill
+        at every bucket + an insert whose page vector is all drop-sentinel
+        (nothing lands, null page stays zero), the page maintenance ops on
+        the null page / slot 0's already-clear row, one chunk against the
+        sentinel, a decode tick on idle slots, and the stage probes."""
+        if self.kv_layout != "paged":
+            if self.steps == 0:
+                # traffic had no room for a decode tick: take one here
+                # (pre-reset only — the timeline cache advances)
+                self._warm_step_neutral()
+            self.backend.stage_times()
+            return
+        seg = self.api.model.segments[0].name
+        N, MP = self.pool.num_pages, self.pages_per_slot
+        zeros_row = jnp.asarray(np.zeros(MP, np.int32))
+        for b in self._bucket_inventory():
+            if self.config.batched_prefill:
+                _, caches = self._prefill_at(
+                    self.params, {"tokens": jnp.asarray(
+                        np.zeros((1, b), np.int32)),
+                        "prompt_len": jnp.int32(b)})
+                kk, vv = caches[seg]
+                kv = (kk[:, 0], vv[:, 0])
+            else:
+                cache = self.api.init_cache(1, b)
+                _, cache = self._prefill(
+                    self.params, cache,
+                    {"tokens": jnp.asarray(np.zeros((1, 1), np.int32))})
+                kk, vv = cache[seg]
+                kv = (kk[:, 0, :, :b], vv[:, 0, :, :b])
+            self.backend.insert_slot(
+                0, kv, jnp.asarray(np.full(b, N, np.int32)),
+                jnp.asarray(np.zeros(b, np.int32)), zeros_row, 0)
+        self.backend.copy_page(0, 0)
+        self.backend.set_table_entry(0, 0, 0)
+        self.backend.commit_slot(0, zeros_row, 0)
+        self.backend.clear_slot(0)
+        C = self.config.prefill_chunk
+        if C > 0:
+            self.backend.prefill_chunk(
+                jnp.asarray(np.zeros((1, C), np.int32)), 0, C,
+                jnp.asarray(np.zeros((1, MP), np.int32)),
+                jnp.asarray(np.full(C, N, np.int32)),
+                jnp.asarray(np.zeros(C, np.int32)))
+        self._warm_step_neutral()
+        self.backend.stage_times()
+
+    def _warm_step_neutral(self) -> None:
+        """One decode tick on all-idle slots: every seq_len is 0, so paged
+        writes land on the null page's drop path and state is unchanged."""
+        toks = jnp.asarray(np.zeros((self.config.num_slots, 1), np.int32))
+        jax.block_until_ready(self.backend.step(toks,
+                                                self._key + self.steps))
+
+    def _swap_targets(self) -> List[Tuple[int, ...]]:
+        """Stage layouts to prewarm: ALL compositions of n blocks into
+        num_stages stages when that inventory is small enough, else the
+        adjacent single-block shifts of the planned layout (the replanner's
+        most likely moves), capped at ``warmup_layouts``."""
+        n = self.api.model.segments[0].n
+        S = self.config.num_stages
+        planned = self.stage_blocks
+        if S <= 1 or n < S:
+            return []
+        if math.comb(n - 1, S - 1) - 1 <= self.config.warmup_layouts:
+            out = []
+            for cuts in itertools.combinations(range(1, n), S - 1):
+                bounds = (0,) + cuts + (n,)
+                blocks = tuple(b - a for a, b in zip(bounds, bounds[1:]))
+                if blocks != planned:
+                    out.append(blocks)
+            return out
+        seen, out = {planned}, []
+        for i in range(S - 1):
+            for d in (1, -1):
+                blocks = list(planned)
+                blocks[i] -= d
+                blocks[i + 1] += d
+                t = tuple(blocks)
+                if min(blocks) >= 1 and t not in seen:
+                    seen.add(t)
+                    out.append(t)
+        return out[:self.config.warmup_layouts]
+
+    def _warm_layouts(self) -> None:
+        """Tour alternative stage layouts: each try_swap builds (and caches)
+        the target's decoder + staged params, runs its probes and two
+        neutral decode ticks, then swaps home — so a post-freeze re-plan
+        onto any toured layout (and the swap home) hits only prebuilt
+        executables. Swaps between two non-planned layouts the replanner
+        chains through are NOT prewarmed (the restage gather is shaped by
+        the specific pair); that one-off cost is accepted and visible in
+        compile_stalls."""
+        planned = self.stage_blocks
+        for target in self._swap_targets():
+            if not self.try_swap(target):
+                continue
+            self.backend.stage_times()
+            for _ in range(2):
+                self._warm_step_neutral()
+            self.try_swap(planned)
+        assert self.stage_blocks == planned
+
+    def _reset_state(self) -> None:
+        """Factory-reset every piece of serving state warmup traffic
+        touched — scheduler (rids restart at 0, so sampler keystreams match
+        a cold engine), page pool, device caches, clocks, counters, events,
+        measured telemetry — leaving only the compiled inventory behind."""
+        cfg = self.config
+        self.scheduler = SlotScheduler(cfg.num_slots,
+                                       finished_cap=cfg.finished_cap)
+        if self.kv_layout == "paged":
+            self.pool = PagePool(self.pool.num_pages, cfg.page_size)
+            self.slot_pages.clear()
+            self.slot_len.clear()
+        self.chunking.clear()
+        self.pending[:] = 0
+        self.steps = 0
+        self.global_len = cfg.prompt_capacity
+        self.swaps = 0
+        self.preemptions = 0
+        self.peak_running = 0
+        self.stalled = False
+        self._blocked_rid = None
+        self.admission_ms.clear()
+        self.admissions = 0
+        self.prefill_calls = 0
+        self.chunked_admissions = 0
+        self.chunk_steps = 0
+        self.events.clear()
+        self._step_events = []
+        self.telemetry.reset_measurements()
+        self.backend.reset_state()
 
     # -- drive to completion ----------------------------------------------
     def run(self, max_steps: Optional[int] = None) -> List[Request]:
@@ -1068,7 +1675,7 @@ class ServingEngine:
                 # return instead of spinning; queued requests stay queued
                 break
             n += 1
-        return self.scheduler.finished
+        return list(self.scheduler.finished)
 
     def run_trace(self, arrivals: Sequence[Tuple[int, Sequence[int], int,
                                                  Optional[int]]],
@@ -1107,7 +1714,7 @@ class ServingEngine:
 
     def stats(self) -> Dict[str, Any]:
         out = dict(self.scheduler.stats())
-        wall = sum(self.telemetry.step_times)
+        wall = self.telemetry.wall_s
         out.update({
             "steps": self.steps,
             "swaps": self.swaps,
@@ -1119,7 +1726,14 @@ class ServingEngine:
             "decode_wall_s": wall,
             "tok_per_s": (out["tokens_out"] / wall) if wall > 0 else 0.0,
             "prefill_calls": self.prefill_calls,
-            "admissions": len(self.admission_ms),
+            "admissions": self.admissions,
+            "warmed": self.warmed,
+            "warmup_s": self.warmup_s,
+            # None until warmup() froze the registry (or the compile monitor
+            # could not install); 0 is the steady-state guarantee
+            "post_warmup_compiles": self.aot.post_freeze_compiles,
+            "compile_stalls": [s.describe()
+                               for s in self.aot.post_freeze_stalls],
         })
         if self.admission_ms:
             arr = np.asarray(self.admission_ms)
@@ -1130,10 +1744,14 @@ class ServingEngine:
             out["num_pages"] = self.pool.num_pages
             out["free_pages"] = self.pool.free_pages
             out["peak_pages_in_use"] = self.pool.peak_in_use
+            out["peak_demand_pages"] = self.pool.peak_demand
             out["page_policy"] = self.config.page_policy
             out["preemptions"] = self.preemptions
             out["cow_hits"] = self.pool.cow_hits
             out["forks"] = self.pool.forks
             out["evictions"] = self.pool.evictions
             out["peak_running_slots"] = self.peak_running
+            out["prefill_chunk"] = self.config.prefill_chunk
+            out["chunked_admissions"] = self.chunked_admissions
+            out["prefill_chunks"] = self.chunk_steps
         return out

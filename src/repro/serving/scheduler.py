@@ -21,6 +21,7 @@ from collections import OrderedDict, deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 QUEUED = "queued"
+PREFILL = "prefill"          # admitted to a slot, prompt chunking in flight
 RUNNING = "running"
 DONE = "done"
 
@@ -61,14 +62,21 @@ class SlotScheduler:
       * a completed request's slot is immediately reusable.
     """
 
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int, finished_cap: Optional[int] = None):
         assert num_slots > 0
         self.num_slots = num_slots
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * num_slots
         self._free: Deque[int] = deque(range(num_slots))
         self._next_rid = 0
-        self.finished: List[Request] = []
+        # finished transcripts are a ring buffer when capped (a week-long
+        # serve must not grow host memory with completion count); the
+        # aggregates below keep stats() exact over the whole lifetime
+        self.finished: Deque[Request] = deque(maxlen=finished_cap)
+        self.completed_total = 0
+        self.tokens_out_total = 0
+        self._wait_sum = 0
+        self._wait_n = 0
 
     # -- submission / admission -------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
@@ -102,7 +110,28 @@ class SlotScheduler:
 
     # -- decode-step bookkeeping ------------------------------------------
     def active(self) -> List[Tuple[int, Request]]:
+        """Every occupied slot — RUNNING decoders and PREFILL (mid-chunk)
+        admissions alike (preemption victim selection spans both)."""
         return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def decoding(self) -> List[Tuple[int, Request]]:
+        """Slots actually decoding this step (excludes PREFILL slots whose
+        prompt is still chunking in — they produce no tokens yet)."""
+        return [(i, r) for i, r in enumerate(self.slots)
+                if r is not None and r.status == RUNNING]
+
+    def mark_prefill(self, slot: int) -> None:
+        """Flag an admitted request as mid-chunked-prefill: it occupies the
+        slot (pages, preemption priority) but is not decoding yet."""
+        req = self.slots[slot]
+        assert req is not None and req.status == RUNNING, (slot, req)
+        req.status = PREFILL
+
+    def mark_running(self, slot: int) -> None:
+        """Chunked prefill complete: the slot joins the decode batch."""
+        req = self.slots[slot]
+        assert req is not None and req.status == PREFILL, (slot, req)
+        req.status = RUNNING
 
     def on_token(self, slot: int, token: int, step: int = -1
                  ) -> Optional[Request]:
@@ -122,17 +151,23 @@ class SlotScheduler:
         req.status, req.finish_step = DONE, step
         self.slots[slot] = None
         self._free.append(slot)
+        self.completed_total += 1
+        self.tokens_out_total += len(req.generated)
+        if req.admit_step >= 0 and req.submit_step >= 0:
+            self._wait_sum += req.admit_step - req.submit_step
+            self._wait_n += 1
         self.finished.append(req)
         return req
 
     def preempt(self, slot: int) -> Request:
-        """Evict a RUNNING request back to the *front* of the queue (it was
-        admitted before anything still queued, so FIFO order by rid is
-        preserved). The request keeps its generated tokens; on re-admission
-        the engine prefills prompt + generated as one extended prompt and
-        decoding resumes token-exactly."""
+        """Evict a RUNNING (or mid-PREFILL) request back to the *front* of
+        the queue (it was admitted before anything still queued, so FIFO
+        order by rid is preserved). The request keeps its generated tokens;
+        on re-admission the engine prefills prompt + generated as one
+        extended prompt and decoding resumes token-exactly."""
         req = self.slots[slot]
-        assert req is not None and req.status == RUNNING, (slot, req)
+        assert req is not None and req.status in (RUNNING, PREFILL), \
+            (slot, req)
         req.status, req.slot = QUEUED, None
         self.slots[slot] = None
         self._free.append(slot)
@@ -154,20 +189,17 @@ class SlotScheduler:
         assert occupied | free == set(range(self.num_slots)), (occupied, free)
         for i, r in enumerate(self.slots):
             if r is not None:
-                assert r.slot == i and r.status == RUNNING, (i, r)
+                assert r.slot == i and r.status in (RUNNING, PREFILL), (i, r)
 
     def stats(self) -> Dict[str, float]:
-        done = self.finished
-        toks = sum(len(r.generated) for r in done)
-        waits = [r.admit_step - r.submit_step for r in done
-                 if r.admit_step >= 0 and r.submit_step >= 0]
+        # lifetime aggregates, not the (possibly capped) finished deque
         return {
-            "completed": len(done),
+            "completed": self.completed_total,
             "queued": len(self.queue),
             "running": self.num_slots - len(self._free),
-            "tokens_out": toks,
-            "mean_queue_wait_steps": (sum(waits) / len(waits)) if waits
-            else 0.0,
+            "tokens_out": self.tokens_out_total,
+            "mean_queue_wait_steps": (self._wait_sum / self._wait_n)
+            if self._wait_n else 0.0,
         }
 
 
@@ -207,6 +239,11 @@ class PagePool:
         self.prefix_index: "OrderedDict[Tuple, int]" = OrderedDict()
         self._page_key: Dict[int, Tuple] = {}   # reverse map for eviction
         self.peak_in_use = 0
+        # peak demand excludes evictable index-only pages: the prefix cache
+        # deliberately retains reclaimable pages, so peak_in_use overstates
+        # real pressure once the index warms up (page-savings comparisons
+        # must use this, not peak_in_use)
+        self.peak_demand = 0
         self.total_allocs = 0
         self.cow_hits = 0                       # admissions served by index
         self.evictions = 0                      # index pages reclaimed
@@ -225,6 +262,11 @@ class PagePool:
     def pages_needed(self, tokens: int) -> int:
         return max(1, -(-tokens // self.page_size))
 
+    def _note_usage(self) -> None:
+        in_use = self.num_pages - 1 - len(self._free)
+        self.peak_in_use = max(self.peak_in_use, in_use)
+        self.peak_demand = max(self.peak_demand, in_use - self.evictable_pages)
+
     # -- reserve regime (PR 5 baseline) -----------------------------------
     def alloc(self, n: int) -> Optional[List[int]]:
         """n pages, or None if the pool can't supply them (caller waits)."""
@@ -235,8 +277,7 @@ class PagePool:
             assert self.refcount[p] == 0, (p, self.refcount[p])
             self.refcount[p] = 1
         self.total_allocs += n
-        in_use = self.num_pages - 1 - len(self._free)
-        self.peak_in_use = max(self.peak_in_use, in_use)
+        self._note_usage()
         return out
 
     def release(self, pages: Sequence[int]) -> None:
@@ -270,8 +311,7 @@ class PagePool:
         assert self.refcount[p] == 0, (p, self.refcount[p])
         self.refcount[p] = 1
         self.total_allocs += 1
-        in_use = self.num_pages - 1 - len(self._free)
-        self.peak_in_use = max(self.peak_in_use, in_use)
+        self._note_usage()
         return p
 
     # -- demand regime: prefix index (copy-on-write sharing) ---------------
@@ -283,6 +323,7 @@ class PagePool:
         self.prefix_index.move_to_end(key)
         self.incref(page)
         self.cow_hits += 1
+        self._note_usage()          # the hit page is no longer reclaimable
         return page
 
     def register_prefix(self, key: Tuple, page: int) -> None:

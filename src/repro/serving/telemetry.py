@@ -24,7 +24,8 @@ homogeneous hardware.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from collections import deque
+from typing import Deque, Dict, Optional, Sequence
 
 from repro.core.planner import PlacementSpec
 from repro.runtime.ft import HeartbeatMonitor, OnlineReplanner
@@ -38,8 +39,16 @@ class StageTelemetry:
     ema: float = 0.5                    # new-sample weight
     _stage_ema: Dict[int, float] = dataclasses.field(default_factory=dict)
     _inject: Dict[int, float] = dataclasses.field(default_factory=dict)
-    step_times: List[float] = dataclasses.field(default_factory=list)
+    # recent window only (ring buffer) — wall_s/steps_recorded keep lifetime
+    # totals exact so a week-long serve doesn't grow host memory per step
+    step_times_cap: Optional[int] = None
+    step_times: Deque[float] = dataclasses.field(default_factory=deque)
+    wall_s: float = 0.0
+    steps_recorded: int = 0
     observations: int = 0
+
+    def __post_init__(self):
+        self.step_times = deque(self.step_times, maxlen=self.step_times_cap)
 
     # -- fault injection ----------------------------------------------------
     def inject(self, stage: int, factor: float) -> None:
@@ -53,6 +62,15 @@ class StageTelemetry:
     # -- measurement --------------------------------------------------------
     def record_step(self, wall_dt: float) -> None:
         self.step_times.append(wall_dt)
+        self.wall_s += wall_dt
+        self.steps_recorded += 1
+
+    def reset_measurements(self) -> None:
+        """Zero the wall-time accounting (warmup reset / benchmark phase
+        boundaries) without touching replanner state or stage EMAs."""
+        self.step_times.clear()
+        self.wall_s = 0.0
+        self.steps_recorded = 0
 
     def record_stage_times(self, times: Sequence[float]) -> None:
         """Fold one per-stage probe (host wall seconds, stage order) into the

@@ -1,0 +1,213 @@
+"""Chunked prefill: engine-level correctness.
+
+The contract under test (DESIGN.md §AOT warmup & chunked prefill): with
+``prefill_chunk=C`` a long prompt is prefilled in fixed-C-token chunks, at
+most one chunk per engine step between decode ticks, with KV written
+incrementally through the paged-write path.  Chunking is a *latency* policy
+only — every request's token stream must be identical to one-shot batched
+admission, across chunk sizes (including non-divisors of prompt/page/bucket
+lengths), COW-shared prefixes, and mid-prefill preemption under page
+back-pressure.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+
+
+@pytest.fixture(scope="module")
+def f32():
+    """Exact token comparisons need f32 end to end (params AND caches)."""
+    import repro.models.layers as L
+    old = L.DEFAULT_DTYPE
+    L.DEFAULT_DTYPE = jnp.float32
+    yield
+    L.DEFAULT_DTYPE = old
+
+
+@pytest.fixture(scope="module")
+def setup(f32):
+    from repro.models.api import build_model
+    cfg = reduced(get_arch("llama3.2-1b"))
+    api = build_model(cfg, max_seq=128)
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.float32)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        api.init(jax.random.PRNGKey(0)))
+    return cfg, api, params
+
+
+def _engine(api, params, **overrides):
+    from repro.serving import EngineConfig, ServingEngine
+    kw = dict(num_slots=4, num_microbatches=2, max_seq=128,
+              prompt_capacity=16, telemetry_interval=4, seal_boundary=False,
+              page_size=4)
+    kw.update(overrides)
+    return ServingEngine(api, config=EngineConfig(**kw), params=params,
+                         backend="local")
+
+
+def _drive(eng, workload):
+    """Submit with per-request inter-arrival gaps; step to drain."""
+    reqs, k, gap = [], 0, 0
+    while k < len(workload) or eng.scheduler.has_work():
+        if k < len(workload) and gap <= 0:
+            prompt, max_new, eos, gap = workload[k]
+            reqs.append(eng.submit(prompt, max_new, eos_id=eos))
+            k += 1
+        gap -= 1
+        eng.step()
+        assert eng.steps < 1200, "schedule failed to drain"
+    return reqs
+
+
+def _streams(reqs):
+    return [tuple(r.generated) for r in reqs]
+
+
+def _workload(seed, n_req, vocab, prompt_cap):
+    rng = np.random.RandomState(seed)
+    out = []
+    for _ in range(n_req):
+        prompt = rng.randint(0, vocab,
+                             size=int(rng.randint(2, prompt_cap))).tolist()
+        max_new = int(rng.randint(1, 9))
+        eos = int(rng.randint(0, vocab)) if rng.rand() < 0.5 else None
+        out.append((prompt, max_new, eos, int(rng.randint(0, 3))))
+    return out
+
+
+def _assert_drained(eng):
+    assert not eng.slot_pages
+    eng.check_page_invariants()
+    st = eng.stats()
+    retained = len(eng.pool.prefix_index)
+    assert st["free_pages"] + retained == st["num_pages"] - 1
+
+
+# ---------------------------------------------------------------------------
+# Property: chunked == one-shot, across chunk sizes
+# ---------------------------------------------------------------------------
+def test_chunked_equals_oneshot_across_chunk_sizes(setup):
+    """C=1 (degenerate per-token), C=3/5 (non-divisors of page size 4 AND of
+    the pow2 prefill buckets), C=4 (page-aligned), C=16 (= prompt_capacity,
+    so nothing actually chunks) must all reproduce the one-shot streams."""
+    cfg, api, params = setup
+    wl = _workload(7, 10, cfg.vocab_size, prompt_cap=16)
+
+    oracle = _engine(api, params)
+    want = _streams(_drive(oracle, wl))
+    _assert_drained(oracle)
+
+    for C in (1, 3, 4, 5, 16):
+        eng = _engine(api, params, prefill_chunk=C)
+        got = _streams(_drive(eng, wl))
+        assert got == want, f"chunk={C} diverged from one-shot"
+        _assert_drained(eng)
+        st = eng.stats()
+        if C < 16:
+            # the workload always contains prompts longer than C
+            assert st["chunked_admissions"] > 0
+            assert st["prefill_chunks"] > st["chunked_admissions"]
+        else:
+            assert st["chunked_admissions"] == 0
+
+
+def test_chunked_at_bucket_and_page_boundaries(setup):
+    """Prompt lengths straddling every pow2 prefill-bucket edge and page
+    edge; C=4 == page size, C=5 mis-aligned with both."""
+    cfg, api, params = setup
+    rng = np.random.RandomState(11)
+    wl = [(rng.randint(0, cfg.vocab_size, size=n).tolist(), 4, None, 1)
+          for n in (2, 3, 4, 5, 7, 8, 9, 15, 16)]
+
+    oracle = _engine(api, params)
+    want = _streams(_drive(oracle, wl))
+
+    for C in (4, 5):
+        eng = _engine(api, params, prefill_chunk=C)
+        assert _streams(_drive(eng, wl)) == want, f"chunk={C} diverged"
+        _assert_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill x COW prefix sharing
+# ---------------------------------------------------------------------------
+def test_chunked_with_shared_prefixes(setup):
+    """Chunk boundaries fall inside COW-shared prefix pages: registration is
+    deferred until a page is fully written, so sharers must still hit the
+    prefix index and streams must match the one-shot run."""
+    cfg, api, params = setup
+    rng = np.random.RandomState(13)
+    sys_prompt = rng.randint(0, cfg.vocab_size, size=8).tolist()
+    wl = [(sys_prompt
+           + rng.randint(0, cfg.vocab_size,
+                         size=int(rng.randint(0, 8))).tolist(),
+           int(rng.randint(2, 7)), None, int(rng.randint(0, 2)))
+          for _ in range(8)]
+
+    oracle = _engine(api, params, prefix_sharing=True)
+    want = _streams(_drive(oracle, wl))
+    assert oracle.pool.cow_hits > 0
+
+    for C in (3, 4):
+        eng = _engine(api, params, prefix_sharing=True, prefill_chunk=C)
+        assert _streams(_drive(eng, wl)) == want, f"chunk={C} diverged"
+        assert eng.pool.cow_hits > 0, "chunking must not defeat COW sharing"
+        _assert_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# Mid-prefill preemption under page back-pressure
+# ---------------------------------------------------------------------------
+def test_chunked_mid_prefill_preemption(setup):
+    """Pool pressure while a slot is still in PREFILL state: an older
+    request's decode growth collides with a younger request's chunked
+    prefill in a pool too small for both, so the prefilling slot (youngest
+    rid) is preempted mid-prefill.  The preempted prefill restarts from
+    scratch on re-admission, so streams still match a roomy-pool one-shot
+    oracle, and every page is recycled."""
+    cfg, api, params = setup
+    rng = np.random.RandomState(17)
+    # A: 1 prompt page, grows to 5 pages over 16 decode steps.  B: 15-token
+    # prompt = 4 pages across 5 chunks of 3.  Worst cases fit ALONE in the
+    # 6-usable-page pool (progress guarantee) but not together: A's growth
+    # exhausts the pool while B is mid-prefill -> B preempted.
+    wl = [(rng.randint(0, cfg.vocab_size, size=4).tolist(), 16, None, 0),
+          (rng.randint(0, cfg.vocab_size, size=15).tolist(), 2, None, 0)]
+
+    oracle = _engine(api, params, request_capacity=24)
+    want = _streams(_drive(oracle, wl))
+
+    eng = _engine(api, params, prefill_chunk=3, num_pages=7,
+                  request_capacity=24, page_policy="demand")
+    got = _streams(_drive(eng, wl))
+    assert got == want
+    _assert_drained(eng)
+    assert eng.preemptions > 0
+    mid = [e for e in eng.events
+           if e.kind == "preempt" and (e.detail or {}).get("mid_prefill")]
+    assert mid, "expected at least one mid-prefill preemption"
+    for e in mid:
+        assert 0 <= e.detail["prefilled"] < 15
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill x sampling
+# ---------------------------------------------------------------------------
+def test_chunked_sampled_streams_identical(setup):
+    """Sampler keys are (rid, token-index)-threaded, so even
+    temperature/top-k sampled streams must be chunking-invariant."""
+    cfg, api, params = setup
+    wl = _workload(19, 8, cfg.vocab_size, prompt_cap=16)
+
+    oracle = _engine(api, params, temperature=0.8, top_k=8, sample_seed=3)
+    want = _streams(_drive(oracle, wl))
+
+    eng = _engine(api, params, temperature=0.8, top_k=8, sample_seed=3,
+                  prefill_chunk=5)
+    assert _streams(_drive(eng, wl)) == want
+    assert eng.stats()["chunked_admissions"] > 0
+    _assert_drained(eng)
