@@ -25,7 +25,15 @@ determined by ``TraceConfig`` (seeded) — and replay through
 ``ServingEngine.run_trace``, so a trace is a reproducible experiment: same
 config, same trace, same token streams.
 
+``--preset swap-pressure`` is a named workload that bursts long-lived
+requests against a deliberately tight page pool, forcing mid-decode
+preemption — the regime the two-tier sealed KV swap serves; replay it at
+``--preempt-policy swap`` (default) vs ``recompute`` to compare resume
+behaviour on identical traffic.
+
   PYTHONPATH=src python benchmarks/load_trace.py --pattern bursty --smoke
+  PYTHONPATH=src python benchmarks/load_trace.py --preset swap-pressure \\
+      --smoke
   PYTHONPATH=src python benchmarks/load_trace.py --pattern diurnal \\
       --requests 64 --shared-ratio 0.7 --json BENCH_trace.json
 """
@@ -40,6 +48,20 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 Arrival = Tuple[int, List[int], int, Optional[int]]
+
+# Named workload presets (--preset): keys matching CLI args override the
+# args, keys matching TraceConfig fields feed the trace generator directly.
+PRESETS = {
+    # thundering herds against a pool sized for ~3 of 4 slots' worst cases:
+    # bursts overcommit device pages mid-decode, so the engine must preempt
+    # and resume long-lived requests — the regime the two-tier sealed swap
+    # exists for (compare --preempt-policy swap vs recompute on this trace)
+    "swap-pressure": dict(pattern="bursty", mean_gap=2.0, burst_size=6,
+                          shared_ratio=0.3, eos_prob=0.0,
+                          max_new_min=8, max_new_max=16,
+                          slots=4, page_size=4, num_pages=15,
+                          page_policy="demand"),
+}
 
 
 @dataclasses.dataclass
@@ -151,12 +173,25 @@ def main(argv=None):
     ap.add_argument("--num-pages", type=int, default=0)
     ap.add_argument("--page-policy", default="demand",
                     choices=["demand", "reserve"])
+    ap.add_argument("--preempt-policy", default="swap",
+                    choices=["swap", "recompute"],
+                    help="sealed host swap-out/swap-in vs drop-and-"
+                         "recompute on preemption")
+    ap.add_argument("--preset", default=None, choices=sorted(PRESETS),
+                    help="named workload preset (overrides matching args)")
     ap.add_argument("--json", default="",
                     help="write trace + replay stats to this path")
     ap.add_argument("--trace-only", action="store_true",
                     help="emit the trace without replaying it")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args(argv)
+    trace_over = {}
+    if args.preset:
+        for k, v in PRESETS[args.preset].items():
+            if hasattr(args, k):
+                setattr(args, k, v)
+            else:
+                trace_over[k] = v
     if args.smoke:
         args.requests = 12
 
@@ -168,7 +203,7 @@ def main(argv=None):
     tcfg = TraceConfig(seed=args.seed, num_requests=args.requests,
                        pattern=args.pattern, mean_gap=args.mean_gap,
                        vocab_size=arch.vocab_size,
-                       shared_ratio=args.shared_ratio)
+                       shared_ratio=args.shared_ratio, **trace_over)
     trace = generate_trace(tcfg)
     print(f"trace: {len(trace)} arrivals over {trace[-1][0] + 1} steps "
           f"({args.pattern}, shared_ratio={args.shared_ratio})")
@@ -185,15 +220,23 @@ def main(argv=None):
     params = api.init(jax.random.PRNGKey(0))
     ec = EngineConfig(num_slots=args.slots, num_stages=1, num_microbatches=1,
                       prompt_capacity=TraceConfig.prompt_max + 4,
-                      request_capacity=32, page_size=args.page_size,
+                      request_capacity=max(
+                          32, tcfg.prompt_max + tcfg.max_new_max + 4),
+                      page_size=args.page_size,
                       num_pages=args.num_pages, page_policy=args.page_policy,
+                      preempt_policy=args.preempt_policy,
                       telemetry_interval=64)
     eng = ServingEngine(api, config=ec, params=params, backend="local")
     reqs, st = replay(eng, trace)
     print(f"completed {st['trace_completed']}/{st['trace_requests']} "
           f"in {st['steps']} steps; preemptions={st.get('preemptions', 0)} "
+          f"swap_outs={st.get('swap_outs', 0)} "
+          f"swap_ins={st.get('swap_ins', 0)} "
           f"cow_hits={st.get('cow_hits', 0)} forks={st.get('forks', 0)} "
           f"peak_slots={st.get('peak_running_slots', 0)}")
+    if args.preset == "swap-pressure" and args.preempt_policy == "swap":
+        assert st.get("swap_outs", 0) > 0, \
+            "swap-pressure preset produced no swap-outs"
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"config": dataclasses.asdict(tcfg),

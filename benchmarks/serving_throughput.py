@@ -34,6 +34,11 @@ gap p50/p99:
   engine (first token pays the XLA compile stall) vs an AOT-warmed engine
   (``warmup()`` compiles every serving shape off the clock; steady state
   performs zero compilations — ``post_warmup_compiles`` is recorded);
+* ``preempt_recompute`` / ``preempt_swap`` — a request is forcibly
+  preempted after generating G tokens (G swept); resume latency p50/p99 is
+  the wall time from preemption to its next token. Recompute re-prefills
+  prompt+G tokens, swap restores sealed host-tier pages — O(pages) vs
+  O(generated), asserted >= 2x at G=256 (DESIGN.md §Two-tier KV & swap);
 * ``oneshot_long`` / ``chunked_long`` — a mixed short/long prompt stream
   with whole-prompt vs chunked prefill: one-shot admission of a long
   prompt stalls every in-flight decoder for the full prefill, chunking
@@ -88,6 +93,11 @@ def parse_args(argv=None):
                     help="chunk size for the chunked-prefill phases "
                          "(0 = auto: min(page_size, prompt_len // 2))")
     ap.add_argument("--arrival-every", type=int, default=1)
+    ap.add_argument("--preempt-gens", type=int, nargs="*", default=None,
+                    help="generated-token counts for the preemption-resume "
+                         "sweep (default: 32 64 128 256, smoke: 8 16)")
+    ap.add_argument("--preempt-reps", type=int, default=5,
+                    help="measured resume laps per (policy, G) point")
     ap.add_argument("--inject", default="1:10", metavar="STAGE:FACTOR")
     ap.add_argument("--telemetry-interval", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
@@ -215,7 +225,8 @@ KEEP = ("backend", "kv_layout", "completed", "tokens_out", "decode_wall_s",
         "admissions", "admission_p50_ms", "admission_p99_ms",
         "mean_queue_wait_steps", "replans", "swaps", "peak_pages_in_use",
         "peak_demand_pages",
-        "steps", "page_policy", "preemptions", "cow_hits", "forks",
+        "steps", "page_policy", "preempt_policy", "preemptions",
+        "swap_outs", "swap_ins", "swap_fallbacks", "cow_hits", "forks",
         "evictions", "peak_running_slots", "warmed", "warmup_s",
         "post_warmup_compiles", "prefill_chunk", "chunked_admissions",
         "prefill_chunks", "first_ttft_ms", "ttft_p50_ms", "ttft_p99_ms",
@@ -377,6 +388,66 @@ def main(argv=None):
         assert streams["chunked_long"] == streams["oneshot_long"], \
             "token streams diverged under chunked prefill"
 
+    # -- preemption resume: sealed swap-in vs recompute --------------------
+    # a single request generates G tokens, is forcibly preempted, and the
+    # wall time from preemption to its NEXT token is the resume latency:
+    # recompute re-prefills prompt+G tokens (O(generated tokens), through
+    # the pow2 prefill buckets), swap restores sealed pages (O(pages)) —
+    # the gap must widen with G (DESIGN.md §Two-tier KV & swap)
+    gen_counts = args.preempt_gens or ([8, 16] if args.smoke
+                                       else [32, 64, 128, 256])
+    preempt_section = {}
+    preempt_streams = {}
+    for policy in ("recompute", "swap"):
+        per_g = {}
+        for G in gen_counts:
+            ec = make_config(
+                args, "paged", True,
+                prompt_capacity=args.prompt_len + G,
+                request_capacity=args.prompt_len + G + 8,
+                page_policy="demand", preempt_policy=policy,
+                prefix_sharing=False)
+            eng = ServingEngine(api, mesh=mesh, config=ec, params=params)
+            rng = np.random.RandomState(args.seed + G)
+            lat, toks = [], []
+            # rep 0 is a discarded warm lap: it pays the one-off compiles
+            # (decode, the bucket(prompt+G) re-prefill, the swap gather/
+            # scatter executables) so the measured reps are steady-state
+            for rep in range(args.preempt_reps + 1):
+                prompt = rng.randint(0, api.cfg.vocab_size,
+                                     size=args.prompt_len).tolist()
+                req = eng.submit(prompt, G + 4)
+                while len(req.generated) < G:
+                    eng.step()
+                eng._preempt(req.slot, req)
+                t0 = time.perf_counter()
+                while len(req.generated) <= G:
+                    eng.step()
+                if rep:
+                    lat.append((time.perf_counter() - t0) * 1e3)
+                while eng.scheduler.has_work():
+                    eng.step()
+                toks.append(list(req.generated))
+            st = eng.stats()
+            per_g[G] = {
+                "resume_p50_ms": float(np.percentile(lat, 50)),
+                "resume_p99_ms": float(np.percentile(lat, 99)),
+                "resume_mean_ms": float(np.mean(lat)),
+                "preemptions": st["preemptions"],
+                "swap_outs": st.get("swap_outs", 0),
+                "swap_ins": st.get("swap_ins", 0),
+            }
+            preempt_streams[(policy, G)] = toks
+        preempt_section[f"preempt_{policy}"] = per_g
+    if args.f32:
+        # bit-exact resume is part of the contract, not just fast resume
+        # (f32 only: recompute's re-prefill is a different float reduction
+        # order, so bf16 argmax ties may flip between resume paths)
+        for G in gen_counts:
+            assert preempt_streams[("swap", G)] \
+                == preempt_streams[("recompute", G)], \
+                f"swap resume diverged from recompute oracle at G={G}"
+
     speedup = {
         # steady-state decode throughput (per-step decode wall only): the
         # dense timeline attends/copies over the engine-lifetime horizon,
@@ -423,6 +494,18 @@ def main(argv=None):
             os_.get("intertok_max_ms", 0.0)
             / max(ch.get("intertok_max_ms", 1e-9), 1e-9),
     }
+    for G in gen_counts:
+        speedup[f"swap_vs_recompute_resume_p50_at_{G}"] = (
+            preempt_section["preempt_recompute"][G]["resume_p50_ms"]
+            / max(preempt_section["preempt_swap"][G]["resume_p50_ms"], 1e-9))
+    g_max = max(gen_counts)
+    if g_max >= 256:
+        # the tentpole acceptance: O(pages) resume must beat O(recompute)
+        # by >= 2x once enough tokens have been generated
+        assert speedup[f"swap_vs_recompute_resume_p50_at_{g_max}"] >= 2.0, \
+            f"swap resume only " \
+            f"{speedup[f'swap_vs_recompute_resume_p50_at_{g_max}']:.2f}x " \
+            f"faster than recompute at G={g_max}"
 
     hdr = ("phase,backend,kv_layout,requests,tokens,tok_per_s,"
            "stream_tok_per_s,admission_p50_ms,admission_p99_ms,"
@@ -454,6 +537,14 @@ def main(argv=None):
           f"(warmup {results['warmed_start'].get('warmup_s', 0):.1f}s, "
           f"post-warmup compiles "
           f"{results['warmed_start'].get('post_warmup_compiles')})")
+    for G in gen_counts:
+        rc = preempt_section["preempt_recompute"][G]
+        sw = preempt_section["preempt_swap"][G]
+        print(f"preempt-resume G={G}: recompute "
+              f"p50={rc['resume_p50_ms']:.1f}ms p99={rc['resume_p99_ms']:.1f}"
+              f"ms | swap p50={sw['resume_p50_ms']:.1f}ms "
+              f"p99={sw['resume_p99_ms']:.1f}ms "
+              f"({speedup[f'swap_vs_recompute_resume_p50_at_{G}']:.1f}x)")
     print(f"chunked prefill (chunk={chunk}): inter-token p99 "
           f"{ch.get('intertok_p99_ms', 0):.1f}ms / max "
           f"{ch.get('intertok_max_ms', 0):.1f}ms vs one-shot "
@@ -491,6 +582,24 @@ def main(argv=None):
                 "chunked_intertok_max_ms": ch.get("intertok_max_ms"),
                 "streams_identical": streams["chunked_long"]
                 == streams["oneshot_long"],
+            },
+            "swap_preemption": {
+                "gen_counts": gen_counts,
+                "reps": args.preempt_reps,
+                "preempt_recompute":
+                    {str(g): v for g, v in
+                     preempt_section["preempt_recompute"].items()},
+                "preempt_swap":
+                    {str(g): v for g, v in
+                     preempt_section["preempt_swap"].items()},
+                "resume_speedup_p50":
+                    {str(g):
+                     speedup[f"swap_vs_recompute_resume_p50_at_{g}"]
+                     for g in gen_counts},
+                "streams_identical": not args.f32 or all(
+                    preempt_streams[("swap", g)]
+                    == preempt_streams[("recompute", g)]
+                    for g in gen_counts),
             },
             "overcommit": {
                 "pool_pages": over_pages - 1,

@@ -66,6 +66,35 @@ def unseal_array(cipher, scales, shape, key, step, dtype=jnp.bfloat16, *,
 
 
 # ---------------------------------------------------------------------------
+# Lossless page sealing (two-tier KV swap)
+# ---------------------------------------------------------------------------
+# Swapped-out KV pages must restore bit-exactly, so they go through the
+# seal_bits cipher (bitcast + keystream XOR) instead of the quantizing seal.
+# Counter discipline: each swap event gets a fresh monotonically increasing
+# sequence number from the engine; the K and V planes use distinct parts so
+# their keystreams never overlap, and the 0xA5A50000 tweak separates the
+# swap counter space from the activation-boundary ``_leaf_counter`` space.
+
+def _swap_counter(swap_seq, part: int):
+    return (jnp.uint32(0xA5A50000)
+            ^ (jnp.uint32(swap_seq) * jnp.uint32(2) + jnp.uint32(part)))
+
+
+def seal_pages(pages: jax.Array, key, swap_seq, *, part: int = 0,
+               use_kernel: bool = False):
+    """pages: [n_pages, row_bytes] float -> cipher uintN, bit-exact on
+    round trip via ``unseal_pages`` with the same (key, swap_seq, part)."""
+    return K.seal_bits(pages, key, _swap_counter(swap_seq, part),
+                       use_kernel=use_kernel)
+
+
+def unseal_pages(cipher: jax.Array, key, swap_seq, out_dtype, *,
+                 part: int = 0, use_kernel: bool = False):
+    return K.unseal_bits(cipher, key, _swap_counter(swap_seq, part),
+                         out_dtype=out_dtype, use_kernel=use_kernel)
+
+
+# ---------------------------------------------------------------------------
 # Attestation stub (the protocol endpoints exist; the quote is a hash chain)
 # ---------------------------------------------------------------------------
 def measure(code: bytes, params_digest: bytes) -> bytes:

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .seal import seal_pallas, unseal_pallas
+from .seal import (seal_bits_pallas, seal_pallas, unseal_bits_pallas,
+                   unseal_pallas)
 from .flash_attention import flash_attention_pallas
 from .paged_attention import paged_attention_pallas
 
@@ -39,6 +40,25 @@ def unseal(cipher, scales, key, counter, out_dtype=jnp.bfloat16,
         return unseal_pallas(cipher, scales, key, counter,
                              out_dtype=out_dtype, interpret=not _on_tpu())
     return ref.unseal_ref(cipher, scales, key, counter, out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def seal_bits(x, key, counter, use_kernel: bool = False):
+    """Losslessly cipher a 2D float array -> uintN of the same bit width.
+    Unlike ``seal`` there is no quantization: ``unseal_bits`` restores the
+    input bit-exactly (the KV swap tier's correctness contract)."""
+    if use_kernel:
+        return seal_bits_pallas(x, key, counter, interpret=not _on_tpu())
+    return ref.seal_bits_ref(x, key, counter)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "out_dtype"))
+def unseal_bits(cipher, key, counter, out_dtype=jnp.bfloat16,
+                use_kernel: bool = False):
+    if use_kernel:
+        return unseal_bits_pallas(cipher, key, counter, out_dtype=out_dtype,
+                                  interpret=not _on_tpu())
+    return ref.unseal_bits_ref(cipher, key, counter, out_dtype)
 
 
 # ---------------------------------------------------------------------------

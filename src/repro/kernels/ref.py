@@ -6,7 +6,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from .seal import keystream_u32
+from .seal import keystream_u32, uint_dtype_of
 
 
 # ---------------------------------------------------------------------------
@@ -39,6 +39,36 @@ def unseal_ref(cipher: jax.Array, scales: jax.Array, key: jax.Array,
     q = cipher.astype(jnp.int32) ^ ks8
     q = jnp.where(q >= 128, q - 256, q).astype(jnp.float32)
     return (q * scales).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# seal_bits / unseal_bits — lossless bitcast+XOR oracle (KV swap tier)
+# ---------------------------------------------------------------------------
+def _bits_keystream(shape, key, counter, udt):
+    rows, cols = shape
+    idx = (jnp.arange(rows, dtype=jnp.uint32)[:, None] * jnp.uint32(cols)
+           + jnp.arange(cols, dtype=jnp.uint32)[None, :])
+    ks = keystream_u32(key.astype(jnp.uint32).reshape(()),
+                       counter.astype(jnp.uint32).reshape(()), idx)
+    return ks.astype(udt)
+
+
+def seal_bits_ref(x: jax.Array, key: jax.Array, counter: jax.Array):
+    """Oracle for seal_bits_pallas: bitcast float -> uintN, XOR keystream.
+    Exactly invertible (XOR involution) — the swap tier's round trip must
+    restore KV pages bit-for-bit."""
+    udt = uint_dtype_of(x.dtype)
+    u = x if x.dtype == udt else jax.lax.bitcast_convert_type(x, udt)
+    return u ^ _bits_keystream(x.shape, key, counter, udt)
+
+
+def unseal_bits_ref(cipher: jax.Array, key: jax.Array, counter: jax.Array,
+                    out_dtype=jnp.bfloat16):
+    udt = uint_dtype_of(out_dtype)
+    assert cipher.dtype == udt, (cipher.dtype, out_dtype)
+    u = cipher ^ _bits_keystream(cipher.shape, key, counter, udt)
+    return u if jnp.dtype(out_dtype) == udt \
+        else jax.lax.bitcast_convert_type(u, out_dtype)
 
 
 # ---------------------------------------------------------------------------

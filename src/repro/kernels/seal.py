@@ -87,6 +87,73 @@ def _block_rows(rows: int) -> int:
     return max(b, 1)
 
 
+# ---------------------------------------------------------------------------
+# Lossless bit-seal (two-tier KV swap): bitcast + keystream XOR, no quantize
+# ---------------------------------------------------------------------------
+# The activation seal above trades precision for 4x boundary compression —
+# fine for hidden states re-entering a matmul, fatal for swapped KV pages
+# that must restore BIT-EXACTLY (the engine's swap-preemption contract is a
+# stream identical to an undisturbed run). seal_bits keeps the same
+# counter-mode keystream discipline but ciphers the raw float bits:
+# unseal(seal(x)) == x to the last mantissa bit, for f32 and bf16 alike.
+
+def uint_dtype_of(dtype) -> jnp.dtype:
+    """The same-width unsigned dtype a float array bitcasts to."""
+    return {2: jnp.dtype(jnp.uint16), 4: jnp.dtype(jnp.uint32)}[
+        jnp.dtype(dtype).itemsize]
+
+
+def _bits_kernel(x_ref, key_ref, ctr_ref, out_ref, *, cols: int, out_dtype):
+    i = pl.program_id(0)
+    x = x_ref[...]
+    udt = uint_dtype_of(x.dtype)
+    u = x if x.dtype == udt else jax.lax.bitcast_convert_type(x, udt)
+    rows = x.shape[0]
+    row_idx = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+    col_idx = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    gidx = (jnp.uint32(i) * jnp.uint32(rows) + row_idx) * jnp.uint32(cols) \
+        + col_idx
+    ks = keystream_u32(key_ref[0], ctr_ref[0], gidx).astype(udt)
+    c = u ^ ks
+    out_ref[...] = c if jnp.dtype(out_dtype) == udt \
+        else jax.lax.bitcast_convert_type(c, out_dtype)
+
+
+def _bits_pallas(x: jax.Array, key: jax.Array, counter: jax.Array,
+                 out_dtype, *, interpret: bool = True):
+    rows, cols = x.shape
+    bR = _block_rows(rows)
+    grid = (rows // bR,)
+    kernel = functools.partial(_bits_kernel, cols=cols, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bR, cols), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=None),   # key (full)
+            pl.BlockSpec(memory_space=None),   # counter
+        ],
+        out_specs=pl.BlockSpec((bR, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), out_dtype),
+        interpret=interpret,
+    )(x, key.reshape(1).astype(jnp.uint32), counter.reshape(1).astype(jnp.uint32))
+
+
+def seal_bits_pallas(x: jax.Array, key: jax.Array, counter: jax.Array,
+                     *, interpret: bool = True):
+    """x: [rows, cols] float -> cipher uintN [rows, cols] (same bit width).
+    XOR is an involution, so the keystream pass is its own inverse and the
+    round trip is exact — no scales, no clipping, no rounding."""
+    return _bits_pallas(x, key, counter, uint_dtype_of(x.dtype),
+                        interpret=interpret)
+
+
+def unseal_bits_pallas(cipher: jax.Array, key: jax.Array, counter: jax.Array,
+                       *, out_dtype=jnp.bfloat16, interpret: bool = True):
+    assert cipher.dtype == uint_dtype_of(out_dtype), (cipher.dtype, out_dtype)
+    return _bits_pallas(cipher, key, counter, out_dtype, interpret=interpret)
+
+
 def seal_pallas(x: jax.Array, key: jax.Array, counter: jax.Array,
                 *, interpret: bool = True):
     """x: [rows, cols] float -> (cipher uint8 [rows, cols], scales [rows, 1])."""

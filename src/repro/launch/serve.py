@@ -30,6 +30,15 @@ interleaved with decode ticks (bounded batch-mate inter-token latency);
 and asserts token-identical output (use with ``--f32 --no-seal`` — the
 chunked attention path is a different, equally-correct float reduction
 order, so bf16 argmax ties may flip).
+
+Two-tier KV swap (DESIGN.md §Two-tier KV & swap): under a tight
+``--num-pages`` pool the demand policy preempts; ``--preempt-policy swap``
+(the default) seals the victim's pages to a host-side swap tier and
+restores them bit-exactly on resume instead of recomputing the prefix.
+``--verify-preempt`` reruns the stream under the recompute oracle and
+undisturbed (``--num-pages 0``) and asserts all three token streams are
+identical (use with ``--f32`` — swap restore is bit-exact, so only float
+argmax ties could otherwise differ between resume paths).
 """
 from __future__ import annotations
 
@@ -93,6 +102,21 @@ def build_parser() -> argparse.ArgumentParser:
                          "reservation (PR 5 baseline)")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable the COW prefix index (demand policy)")
+    ap.add_argument("--preempt-policy", default="swap",
+                    choices=["swap", "recompute"],
+                    help="swap: seal victim pages to the host tier and "
+                         "restore them on resume (O(pages)); recompute: "
+                         "drop pages and re-prefill on resume (PR 6 "
+                         "baseline, O(generated tokens))")
+    ap.add_argument("--no-decode-cow", action="store_true",
+                    help="don't register decode-completed pages in the "
+                         "COW prefix index")
+    ap.add_argument("--verify-preempt", action="store_true",
+                    help="serve the stream again under the recompute "
+                         "oracle AND undisturbed (roomy pool) and assert "
+                         "all three token streams are identical (use with "
+                         "--f32; requires --preempt-policy swap and a "
+                         "pool tight enough to actually preempt)")
     ap.add_argument("--shared-system-prompt", type=float, default=0.0,
                     metavar="RATIO",
                     help="fraction of synthetic prompts extending one "
@@ -157,6 +181,8 @@ def _make_engine(api, params, mesh, args) -> ServingEngine:
         kv_layout=args.kv_layout, page_size=args.page_size,
         num_pages=args.num_pages, page_policy=args.page_policy,
         prefix_sharing=not args.no_prefix_sharing,
+        preempt_policy=args.preempt_policy,
+        decode_cow=not args.no_decode_cow,
         request_capacity=args.prompt_len + args.max_new,
         batched_prefill=not args.per_token_prefill,
         seal_boundary=not args.no_seal, solver=args.solver,
@@ -263,6 +289,11 @@ def main(argv=None):
               f"swaps={st['swaps']} final_blocks={st['stage_blocks']} "
               f"prefill_calls={st['prefill_calls']} "
               f"admission_p50={st.get('admission_p50_ms', 0):.1f}ms")
+        if st.get("swap_outs") or st.get("preemptions"):
+            print(f"preempt: policy={st['preempt_policy']} "
+                  f"preemptions={st['preemptions']} "
+                  f"swap_outs={st['swap_outs']} swap_ins={st['swap_ins']} "
+                  f"fallbacks={st['swap_fallbacks']}")
         if st.get("prefill_chunk"):
             print(f"chunked prefill: {st['chunked_admissions']} admissions "
                   f"in {st['prefill_chunks']} chunks of "
@@ -322,6 +353,28 @@ def main(argv=None):
                 f"  {a.generated}\n  {b.generated}"
         print(f"CHUNK-EXACT OK: {len(reqs)} token streams identical, "
               f"chunked ({args.prefill_chunk}) vs one-shot prefill")
+
+    if args.verify_preempt:
+        assert args.preempt_policy == "swap", \
+            "--verify-preempt compares the swap path against its oracles"
+        assert st.get("swap_outs", 0) > 0, \
+            "pool never swap-preempted: nothing verified " \
+            "(shrink --num-pages or raise --requests)"
+        oracle = copy.copy(args)
+        oracle.preempt_policy = "recompute"
+        _, reqs_rc = one_run(with_inject=True, run_args=oracle)
+        roomy = copy.copy(args)
+        roomy.num_pages = 0      # all slots at full capacity: no preemption
+        eng_ud, reqs_ud = one_run(with_inject=True, run_args=roomy)
+        assert eng_ud.stats().get("preemptions", 0) == 0
+        for a, b, c in zip(reqs, reqs_rc, reqs_ud):
+            assert a.generated == b.generated == c.generated, \
+                f"req {a.rid} diverged across preempt policies:\n" \
+                f"  swap      {a.generated}\n  recompute {b.generated}\n" \
+                f"  undisturbed {c.generated}"
+        print(f"PREEMPT-EXACT OK: {len(reqs)} token streams identical "
+              f"across swap resume / recompute oracle / undisturbed "
+              f"({st['swap_outs']} swap-outs)")
     return st
 
 

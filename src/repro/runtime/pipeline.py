@@ -37,11 +37,13 @@ zero new XLA compilations. Two sharp edges the serving layer accounts for:
 (pod-sharded step output), and jit's dispatch cache keys on
 (shape, sharding) — both variants must be warmed; (2) ``restage_cache``'s
 composed gather is shaped by the specific (old layout, new layout) PAIR —
-the warmup tour covers planned↔target pairs, while a chain of swaps
-between two non-planned layouts pays a one-off compile, surfaced in
-``stats()["compile_stalls"]``. Decoders themselves are cached per layout
-by the backends (``_layouts``): rebuilding a decoder for a layout already
-seen would discard the warmed dispatch caches with it.
+the warmup tour covers planned↔target pairs, and the backends lazily
+AOT-warm and memoize any other pair on first use (keyed by the pair in the
+per-layout decoder cache), so a chain of swaps between two non-planned
+layouts pays at most one wall-clock warm per pair and NO recorded compile
+stall on repeats. Decoders themselves are cached per layout by the
+backends (``_layouts``): rebuilding a decoder for a layout already seen
+would discard the warmed dispatch caches with it.
 """
 from __future__ import annotations
 

@@ -57,12 +57,14 @@ import numpy as np
 from repro.core.planner import (InfeasibleError, PlacementSpec,
                                 profiles_from_arch)
 from repro.core.privacy import LM_SIM_DELTA
+from repro.enclave import sealing
 from repro.enclave.domain import ResourceManager, two_enclave_manager
 from repro.runtime.ft import HeartbeatMonitor, OnlineReplanner
 from repro.runtime.pipeline import PipelinedDecoder, pipeline_applicable
 from repro.serving.aot import MONITOR, AotRegistry
 from repro.serving.sampling import TokenSampler
-from repro.serving.scheduler import PagePool, Request, SlotScheduler
+from repro.serving.scheduler import (QUEUED, RUNNING, PagePool, Request,
+                                     SlotScheduler)
 from repro.serving.telemetry import StageTelemetry
 
 
@@ -92,7 +94,21 @@ class EngineConfig:
     #   "reserve" — the PR 5 baseline: worst-case page count reserved at
     #               admission (kept as the property-test oracle)
     page_policy: str = "demand"
+    # preemption policy (DESIGN.md §Two-tier KV & swap; demand paging only):
+    #   "swap"      — seal the victim's private pages through the lossless
+    #                 bit-cipher into host swap space and restore them at
+    #                 re-admission: resume is O(pages transferred). COW-
+    #                 shared pages are never spilled — the swap manifest
+    #                 pins them in the prefix index and re-adopts in place.
+    #   "recompute" — the PR 6 baseline (kept as the oracle): discard KV,
+    #                 re-prefill prompt+generated teacher-forced, O(tokens).
+    # Both produce bit-identical streams (asserted by tests/test_swap.py).
+    preempt_policy: str = "swap"
     prefix_sharing: bool = True         # COW prefix index (demand only)
+    decode_cow: bool = True             # register pages COMPLETED during
+    #                                     decode in the COW index too, so
+    #                                     identical continuations (fan-out
+    #                                     resubmissions) share KV
     batched_prefill: bool = True        # whole-prompt prefill in one call
     seal_boundary: bool = True
     use_kernel: bool = False
@@ -211,10 +227,32 @@ class PipelinedDecodeBackend:
         # never recompiles (bounded by the composition count in practice;
         # warmup prewarms at most cfg.warmup_layouts of them)
         self._layouts: Dict[Tuple[int, ...], Tuple] = {}
+        self._restage: Dict[Tuple, Any] = {}    # (old, new) layout pair ->
+        #                                         memoized jitted restage
         self._build(stage_blocks)
         self.reset_state()
         self._insert = self.aot.wrap("insert", jax.jit(
             self._insert_impl), dispatch="jit")
+
+    def _restage_state(self, old_dec, old_key) -> None:
+        """Migrate ``self.state`` from ``old_dec``'s layout to the current
+        one through a per-(old, new)-pair memoized jitted gather. The first
+        occurrence of a pair AOT-warms it — a one-off wall-time cost that
+        stays off the post-freeze stall ledger — and every later swap
+        across the same pair dispatches through the seeded jit cache,
+        stall-free."""
+        pair = (old_key, self.stage_blocks)
+        fn = self._restage.get(pair)
+        if fn is None:
+            new_dec = self.dec
+            fn = self.aot.wrap(
+                f"restage{pair[0]}->{pair[1]}",
+                jax.jit(lambda st: old_dec.restage_cache(st, new_dec)),
+                dispatch="jit")
+            self._restage[pair] = fn
+            self.state = fn.warm(self.state)
+        else:
+            self.state = fn(self.state)
 
     @staticmethod
     def _insert_impl(staged, start, upd, upd_start, b):
@@ -271,11 +309,12 @@ class PipelinedDecodeBackend:
 
     def swap(self, stage_blocks: Sequence[int]) -> bool:
         """Rebuild the decoder on the new boundaries and migrate the staged
-        cache (unstage→restage composed into one gather). In-flight requests
-        keep their KV state; the next step() compiles the new layout."""
-        old_dec = self.dec
+        cache (unstage→restage composed into one gather, memoized per
+        layout pair). In-flight requests keep their KV state; the next
+        step() compiles the new layout."""
+        old_dec, old_key = self.dec, self.stage_blocks
         self._build(stage_blocks)
-        self.state = old_dec.restage_cache(self.state, self.dec)
+        self._restage_state(old_dec, old_key)
         return True
 
     def stage_times(self, repeats: int = 1) -> List[float]:
@@ -390,12 +429,51 @@ class PagedLocalBackend:
             out["seq_lens"] = cache["seq_lens"].at[slot].set(seq_len)
             return out
 
+        use_kernel = cfg.use_kernel
+
+        def gather(cache, pages, key, ctr):
+            # two-tier swap-out: gather the slot's PRIVATE pages from the
+            # pools and seal them losslessly (bitcast+XOR) in one jitted
+            # pass — rows whose logical page is COW-shared (or padding)
+            # carry page id 0, so they gather the all-zero null page and
+            # their payload rows are never restored. [MP] -> [MP, L*KVH*Pg*D]
+            k_pool, v_pool = cache[seg_name]
+
+            def sealed(pool, part):
+                g = pool[:, pages].transpose(1, 0, 2, 3, 4)
+                g = g.reshape(pages.shape[0], -1)
+                return sealing.seal_pages(g, key, ctr, part=part,
+                                          use_kernel=use_kernel)
+
+            return sealed(k_pool, 0), sealed(v_pool, 1)
+
+        def scatter(cache, ck, cv, pages, key, ctr):
+            # swap-in: unseal the host payload and scatter each row into a
+            # freshly allocated device page; rows to skip (shared pages
+            # re-adopted in place, padding) carry the out-of-range sentinel
+            # and are dropped — the same drop discipline as admission
+            k_pool, v_pool = cache[seg_name]
+
+            def restored(pool, c, part):
+                rows = sealing.unseal_pages(c, key, ctr, pool.dtype,
+                                            part=part, use_kernel=use_kernel)
+                g = rows.reshape(pages.shape[0], pool.shape[0],
+                                 pool.shape[2], pool.shape[3], pool.shape[4])
+                return pool.at[:, pages].set(
+                    g.transpose(1, 0, 2, 3, 4), mode="drop")
+
+            out = dict(cache)
+            out[seg_name] = (restored(k_pool, ck, 0), restored(v_pool, cv, 1))
+            return out
+
         self._insert = self.aot.wrap("insert", jax.jit(insert))
         self._clear = self.aot.wrap("clear_slot", jax.jit(clear))
         self._set_bt = self.aot.wrap("set_table_entry", jax.jit(set_bt))
         self._copy_pg = self.aot.wrap("copy_page", jax.jit(copy_pg))
         self._chunk = self.aot.wrap("prefill_chunk", jax.jit(chunk))
         self._commit = self.aot.wrap("commit_slot", jax.jit(commit))
+        self._gather = self.aot.wrap("gather_pages", jax.jit(gather))
+        self._scatter = self.aot.wrap("scatter_pages", jax.jit(scatter))
 
     def reset_state(self) -> None:
         self.cache = self.api.init_paged_cache(*self._shape)
@@ -434,6 +512,17 @@ class PagedLocalBackend:
         self.cache = self._copy_pg(self.cache, jnp.int32(dst),
                                    jnp.int32(src))
 
+    def gather_pages(self, pages, key, ctr):
+        """Seal ``pages`` (fixed [pages_per_slot] int32 vector; 0 = skip
+        row) out of the pools. Returns (k_cipher, v_cipher) device arrays —
+        the caller fetches them to host (the pinned swap tier)."""
+        return self._gather(self.cache, pages, key, ctr)
+
+    def scatter_pages(self, ck, cv, pages, key, ctr) -> None:
+        """Unseal and scatter payload rows into ``pages`` (sentinel
+        ``num_pages`` = drop the row)."""
+        self.cache = self._scatter(self.cache, ck, cv, pages, key, ctr)
+
     def swap(self, stage_blocks: Sequence[int]) -> bool:
         self.stage_blocks = tuple(stage_blocks)
         return True
@@ -460,6 +549,8 @@ class PagedPipelinedBackend:
         self.seg = api.model.segments[0]
         self.aot = aot or AotRegistry()
         self._layouts: Dict[Tuple[int, ...], Tuple] = {}
+        self._restage: Dict[Tuple, Any] = {}    # (old, new) layout pair ->
+        #                                         memoized jitted restage
         self._shape = (cfg.num_slots, num_pages, cfg.page_size,
                        pages_per_slot)
         self._build(stage_blocks)
@@ -527,6 +618,52 @@ class PagedPipelinedBackend:
 
         return chunk
 
+    def _make_swapio(self, dec):
+        """``gather_pages``/``scatter_pages`` over the STAGED pools (the
+        two-tier swap transfer primitives): unstage → page gather → lossless
+        seal fused in one jit for swap-out, and the inverse (unseal → stage
+        → drop-scatter) for swap-in. Page ids are layout-invariant, so the
+        host-side swap manifest is oblivious to staging — the same contract
+        as restage_cache, and a manifest written under one stage layout
+        restores correctly after a live boundary swap."""
+        use_kernel = self.cfg.use_kernel
+        S, bps, n = dec.num_stages, dec.bps, dec.seg.n
+        if dec.uniform:
+            def unstage(x):
+                return x.reshape((n,) + x.shape[2:])
+        else:
+            sidx = dec._scatter_idx
+
+            def unstage(x):
+                return jnp.take(x.reshape((S * bps,) + x.shape[2:]),
+                                jnp.asarray(sidx), axis=0)
+
+        def gather(staged, pages, key, ctr):
+            k_st, v_st = staged
+
+            def sealed(pool_st, part):
+                g = unstage(pool_st)[:, pages].transpose(1, 0, 2, 3, 4)
+                g = g.reshape(pages.shape[0], -1)
+                return sealing.seal_pages(g, key, ctr, part=part,
+                                          use_kernel=use_kernel)
+
+            return sealed(k_st, 0), sealed(v_st, 1)
+
+        def scatter(staged, ck, cv, pages, key, ctr):
+            k_st, v_st = staged
+
+            def restored(pool_st, c, part):
+                rows = sealing.unseal_pages(c, key, ctr, pool_st.dtype,
+                                            part=part, use_kernel=use_kernel)
+                g = rows.reshape(pages.shape[0], n, pool_st.shape[3],
+                                 pool_st.shape[4], pool_st.shape[5])
+                g_st = dec._stage_tree(g.transpose(1, 0, 2, 3, 4))
+                return pool_st.at[:, :, pages].set(g_st, mode="drop")
+
+            return (restored(k_st, ck, 0), restored(v_st, cv, 1))
+
+        return gather, scatter
+
     def _build(self, stage_blocks: Sequence[int]) -> None:
         cfg = self.cfg
         self.stage_blocks = key = tuple(stage_blocks)
@@ -546,10 +683,15 @@ class PagedPipelinedBackend:
             chunk_fn = self.aot.wrap(f"chunk{key}",
                                      jax.jit(self._make_chunk(dec)),
                                      dispatch="jit")
+            g_fn, s_fn = self._make_swapio(dec)
+            gather_fn = self.aot.wrap(f"gather_pages{key}", jax.jit(g_fn),
+                                      dispatch="jit")
+            scatter_fn = self.aot.wrap(f"scatter_pages{key}", jax.jit(s_fn),
+                                       dispatch="jit")
             hit = self._layouts[key] = (dec, staged_params, step_fn, probe,
-                                        chunk_fn)
+                                        chunk_fn, gather_fn, scatter_fn)
         (self.dec, self.staged_params, self.step_fn, self._probe,
-         self._chunk) = hit
+         self._chunk, self._gather, self._scatter) = hit
         self._probe_warm = False
 
     def reset_state(self) -> None:
@@ -602,13 +744,41 @@ class PagedPipelinedBackend:
         self.state = (self._copy_pg(staged, jnp.int32(dst), jnp.int32(src)),
                       bt, sl)
 
+    def gather_pages(self, pages, key, ctr):
+        """Seal ``pages`` out of the staged pools (0 = skip row). Returns
+        (k_cipher, v_cipher); the caller fetches them to host."""
+        staged, _bt, _sl = self.state
+        return self._gather(staged, pages, key, ctr)
+
+    def scatter_pages(self, ck, cv, pages, key, ctr) -> None:
+        staged, bt, sl = self.state
+        self.state = (self._scatter(staged, ck, cv, pages, key, ctr), bt, sl)
+
+    def _restage_state(self, old_dec, old_key) -> None:
+        """Same per-pair memoized restage as PipelinedDecodeBackend: the
+        first occurrence of a layout pair AOT-warms the composed gather
+        (one-off wall cost, off the stall ledger); every later swap across
+        it dispatches from the memo, stall-free."""
+        pair = (old_key, self.stage_blocks)
+        fn = self._restage.get(pair)
+        if fn is None:
+            new_dec = self.dec
+            fn = self.aot.wrap(
+                f"restage{pair[0]}->{pair[1]}",
+                jax.jit(lambda st: old_dec.restage_cache(st, new_dec)),
+                dispatch="jit")
+            self._restage[pair] = fn
+            self.state = fn.warm(self.state)
+        else:
+            self.state = fn(self.state)
+
     def swap(self, stage_blocks: Sequence[int]) -> bool:
         """Rebuild on the new boundaries and migrate the staged pools (the
-        same composed unstage→restage gather as the dense layout; block
-        tables and seq_lens ride along unchanged)."""
-        old_dec = self.dec
+        same composed unstage→restage gather as the dense layout, memoized
+        per layout pair; block tables and seq_lens ride along unchanged)."""
+        old_dec, old_key = self.dec, self.stage_blocks
         self._build(stage_blocks)
-        self.state = old_dec.restage_cache(self.state, self.dec)
+        self._restage_state(old_dec, old_key)
         return True
 
     def stage_times(self, repeats: int = 1) -> List[float]:
@@ -735,6 +905,7 @@ class ServingEngine:
 
         # --- paged KV page pool ------------------------------------------
         assert cfg.page_policy in ("demand", "reserve"), cfg.page_policy
+        assert cfg.preempt_policy in ("swap", "recompute"), cfg.preempt_policy
         if self.kv_layout == "paged":
             self.request_capacity = cfg.request_capacity or \
                 (cfg.prompt_capacity + 64)
@@ -751,6 +922,11 @@ class ServingEngine:
             self.pool = None
         self.preemptions = 0
         self.peak_running = 0
+        # two-tier swap: monotone per-engine swap sequence keys the cipher
+        # keystream (no (key, counter) pair ever reused across swap events);
+        # swap_fallbacks counts manifests dropped to break pin-deadlocks
+        self._swap_seq = 0
+        self.swap_fallbacks = 0
 
         # --- decode backend ----------------------------------------------
         if backend is None:
@@ -871,6 +1047,12 @@ class ServingEngine:
         never for resources that can't come back (the legacy timeline)."""
         if self.kv_layout == "paged":
             if self.config.page_policy == "demand":
+                if self.pool.has_swap(req.rid):
+                    # swapped-out resume: needs one fresh device page per
+                    # SEALED manifest row (+1 growth headroom) — shared
+                    # rows re-adopt their pinned index pages for free
+                    need, supply = self._swap_budget(req)
+                    return supply >= need
                 # demand paging admits on the *prompt's* pages (+1 headroom
                 # for the first growth/fork), not the worst case — shared
                 # prefix pages already resident in the COW index are free
@@ -931,6 +1113,15 @@ class ServingEngine:
             if self.pool.refcount[p] == 1 and p not in hit_pages)
         return fresh + 1, supply
 
+    def _swap_budget(self, req: Request) -> Tuple[int, int]:
+        """Resume budget for a swapped-out request: one fresh page per
+        sealed manifest row plus one page of growth/fork headroom; supply
+        is free + evictable pages (manifest-pinned shared pages hold
+        refcount >= 2, so they are never counted as evictable)."""
+        man = self.pool.manifest(req.rid)
+        supply = self.pool.free_pages + self.pool.evictable_pages
+        return man.sealed_pages + 1, supply
+
     def _bucket(self, n: int) -> int:
         """Pad prompt lengths to power-of-two buckets (capped at
         prompt_capacity — or request_capacity for prompts a preemption
@@ -948,6 +1139,13 @@ class ServingEngine:
     def _prefill_slot(self, slot: int, req: Request) -> None:
         t0 = time.perf_counter()
         if self.kv_layout == "paged":
+            if self.pool.has_swap(req.rid):
+                # two-tier resume: restore the sealed pages instead of
+                # re-prefilling — no logits, no new token (the token the
+                # victim sampled just before preemption rides along in
+                # req.generated and becomes the next decode input)
+                self._swap_in(slot, req, t0)
+                return
             C = self.config.prefill_chunk
             if C > 0 and len(self._prompt_tokens(req)) > C:
                 self._begin_chunked(slot, req, t0)
@@ -1219,11 +1417,20 @@ class ServingEngine:
 
     # -- demand paging: preemption + per-step growth/fork ------------------
     def _preempt(self, slot: int, req: Request) -> None:
-        """Evict ``req`` from its slot to reclaim pages: decref everything
-        it holds, zero its device row, and requeue it at the FRONT of the
-        queue (victims were admitted before anything still queued, so
-        appendleft keeps the queue rid-ordered). Its generated tokens ride
-        along and re-prefill as a prompt extension on re-admission."""
+        """Evict ``req`` from its slot to reclaim pages. Under
+        ``preempt_policy="swap"`` a RUNNING victim's private pages are
+        sealed to the host swap tier first (resume is then O(pages), not
+        O(recompute)); mid-chunked-prefill victims and the ``"recompute"``
+        oracle discard their KV — the generated tokens requeue as a prompt
+        extension and re-prefill teacher-forced. Either way the request
+        goes to the FRONT of the queue (victims were admitted before
+        anything still queued, so appendleft keeps the queue rid-ordered)
+        and the resumed stream is bit-identical."""
+        if (self.config.preempt_policy == "swap"
+                and self.config.page_policy == "demand"
+                and req.status == RUNNING and slot not in self.chunking):
+            self._preempt_swap(slot, req)
+            return
         req.preemptions += 1
         self.preemptions += 1
         cs = self.chunking.pop(slot, None)
@@ -1242,6 +1449,115 @@ class ServingEngine:
             detail["mid_prefill"] = True
             detail["prefilled"] = cs.pos
         self._emit("preempt", detail)
+
+    def _preempt_swap(self, slot: int, req: Request) -> None:
+        """Two-tier eviction: seal the slot's PRIVATE pages (refcount 1)
+        into host buffers through the lossless bit-cipher and record a swap
+        manifest; COW-shared pages (refcount > 1 — necessarily frozen in
+        the prefix index, since eviction requires refcount == 1) are never
+        spilled: the manifest pins them in place and swap-in re-adopts
+        them. The gather uses a fixed-shape [pages_per_slot] page vector
+        (0 = null page for shared/pad rows), so one warmed executable
+        covers every swap."""
+        assert req.generated, "RUNNING victim must hold a sampled token"
+        req.preemptions += 1
+        self.preemptions += 1
+        pages = self.slot_pages.pop(slot)
+        n_tokens = self.slot_len.pop(slot)
+        MP = self.pages_per_slot
+        entries: List[Tuple[str, Any]] = []
+        gather_vec = np.zeros(MP, np.int32)
+        for i, pg in enumerate(pages):
+            if self.pool.refcount[pg] > 1:
+                key = self.pool._page_key.get(pg)
+                assert key is not None, \
+                    f"shared page {pg} missing from the prefix index"
+                entries.append(("shared", (key, pg)))
+            else:
+                entries.append(("sealed", i))
+                gather_vec[i] = pg
+        seq = self._swap_seq
+        self._swap_seq += 1
+        ck, cv = self.backend.gather_pages(
+            jnp.asarray(gather_vec), self._key, jnp.uint32(seq))
+        # fetch to host: the swap tier is host memory — device pages free
+        # the moment release() drops their last reference below
+        payload = (np.asarray(ck), np.asarray(cv))
+        self.pool.swap_out(req.rid, entries, payload, n_tokens, seq)
+        self.pool.release(pages)        # manifest pins outlive slot refs
+        self.backend.clear_slot(slot)
+        self.scheduler.preempt(slot, swapped=True)
+        self.pending[slot] = 0
+        self._emit("preempt", {
+            "rid": req.rid, "slot": slot, "policy": "swap",
+            "generated": len(req.generated),
+            "sealed_pages": sum(1 for t, _ in entries if t == "sealed"),
+            "shared_pages": sum(1 for t, _ in entries if t == "shared")})
+
+    def _swap_in(self, slot: int, req: Request, t0: float) -> None:
+        """Resume a swapped-out request: allocate one fresh device page per
+        sealed manifest row, unseal+scatter the host payload into them in
+        one warmed call, re-adopt shared pages in place (the manifest's pin
+        reference transfers to the slot's block table), and rebuild the
+        block table at the saved seq_len. No recompute, no logits, no new
+        sample: the pre-preemption token (generated[-1]) was never written
+        to KV — it is the next decode input, exactly as in the undisturbed
+        run, so the stream continues bit-identically."""
+        man = self.pool.swap_in(req.rid)
+        MP, N = self.pages_per_slot, self.pool.num_pages
+        pages: List[int] = []
+        scatter_vec = np.full(MP, N, np.int32)
+        restored = 0
+        for i, (tag, val) in enumerate(man.entries):
+            if tag == "shared":
+                pages.append(val[1])
+            else:
+                pg = self.pool.alloc_one()
+                assert pg is not None, "gated by _fits/_swap_budget"
+                pages.append(pg)
+                scatter_vec[i] = pg
+                restored += 1
+        ck, cv = man.payload
+        self.backend.scatter_pages(
+            jnp.asarray(ck), jnp.asarray(cv), jnp.asarray(scatter_vec),
+            self._key, jnp.uint32(man.counter))
+        bt_row = np.zeros(MP, np.int32)
+        bt_row[:len(pages)] = pages
+        self.backend.commit_slot(slot, jnp.asarray(bt_row), man.n_tokens)
+        self.slot_pages[slot] = pages
+        self.slot_len[slot] = man.n_tokens
+        self.pending[slot] = req.generated[-1]
+        ms = (time.perf_counter() - t0) * 1e3
+        self.admission_ms.append(ms)
+        self.admissions += 1
+        self._emit("admit", {"rid": req.rid, "slot": slot,
+                             "resumed": "swap", "pages": len(pages),
+                             "restored": restored,
+                             "shared": len(pages) - restored, "ms": ms})
+
+    def _maybe_break_swap_deadlock(self, nxt: Request) -> bool:
+        """Pin-deadlock breaker: with nothing active and nothing chunking,
+        no completion will ever free pages — only swap-manifest pins and
+        the (evictable) COW index hold them. Drop manifests youngest-first
+        (the head's own manifest last) until the head fits; each dropped
+        request reverts to the recompute oracle (its sealed payload is
+        discarded, its shared pins released), restoring PR 6's progress
+        guarantee. Returns True when the head now fits."""
+        if self.kv_layout != "paged" or not self.pool.swap_manifest:
+            return False
+        if self.scheduler.active() or self.chunking:
+            return False                # completions can still free pages
+        while not self._fits(nxt) and self.pool.swap_manifest:
+            others = sorted(r for r in self.pool.swap_manifest
+                            if r != nxt.rid)
+            rid = others[-1] if others else nxt.rid
+            self.pool.drop_swap(rid)
+            self.swap_fallbacks += 1
+            for q in self.scheduler.queue:
+                if q.rid == rid:
+                    q.status = QUEUED   # back to the recompute resume path
+            self._emit("swap_fallback", {"rid": rid})
+        return self._fits(nxt)
 
     def _alloc_or_preempt(self, requester: Request) -> Optional[int]:
         """One page for ``requester``, preempting the lowest-priority
@@ -1307,6 +1623,8 @@ class ServingEngine:
             if nxt is None:
                 return
             if not self._fits(nxt):
+                if self._maybe_break_swap_deadlock(nxt):
+                    continue
                 if self._blocked_rid != nxt.rid:
                     self._blocked_rid = nxt.rid
                     kind = ("pages" if self.kv_layout == "paged"
@@ -1343,8 +1661,15 @@ class ServingEngine:
                     return self._step_events
                 # head-of-line blocked with nothing running: no completion
                 # can ever free the resource it waits on -> permanently
-                # stalled (callers stop driving; requests stay queued)
-                self.stalled = bool(self.scheduler.queue)
+                # stalled (callers stop driving; requests stay queued) —
+                # UNLESS swap-manifest pins remain: _grow_active may have
+                # just swap-preempted the last active slots, and the next
+                # _admit's deadlock breaker can still drop pins to make
+                # the head fit, so the stall is not permanent yet
+                recoverable = (self.kv_layout == "paged"
+                               and self.pool is not None
+                               and bool(self.pool.swap_manifest))
+                self.stalled = bool(self.scheduler.queue) and not recoverable
                 return self._step_events
             self.stalled = False
             self.peak_running = max(self.peak_running, len(active))
@@ -1374,6 +1699,7 @@ class ServingEngine:
                 self.pending[slot] = toks[slot]
                 if self.kv_layout == "paged":
                     self.slot_len[slot] += 1   # this step's KV write landed
+                    self._maybe_register_decode_page(slot, req)
                 fin = self.scheduler.on_token(slot, int(toks[slot]),
                                               step=self.steps)
                 if fin is not None:
@@ -1405,6 +1731,40 @@ class ServingEngine:
                     if new_spec.stage_sizes() == self.stage_blocks:
                         self.spec = new_spec
         return self._step_events
+
+    def _maybe_register_decode_page(self, slot: int, req: Request) -> None:
+        """Decode-time COW registration (``decode_cow``): when this step's
+        KV write filled a page to capacity, freeze it into the prefix index
+        under its content key — an identical continuation (a fan-out
+        resubmission whose prompt extends through this page) then adopts it
+        instead of re-prefilling, counted by the existing ``cow_hits``
+        stat. Only full pages register (the owner never writes a full page
+        again — growth moved on — so indexed content stays immutable), and
+        only private un-indexed pages (a shared or already-frozen page is
+        either someone else's or already registered)."""
+        cfg = self.config
+        if not (cfg.decode_cow and cfg.prefix_sharing
+                and cfg.page_policy == "demand"):
+            return
+        Pg = cfg.page_size
+        sl = self.slot_len[slot]
+        if sl % Pg:
+            return                      # page not full yet
+        pi = sl // Pg - 1
+        pages = self.slot_pages[slot]
+        if pi >= len(pages):
+            return
+        pg = pages[pi]
+        if self.pool.refcount[pg] != 1 or pg in self.pool._page_key:
+            return
+        # content key = every token whose KV the page and its predecessors
+        # hold: positions [0, sl) carry prompt + generated[:g] (the token
+        # sampled THIS step is pending, not yet written — exactly sl tokens)
+        key = tuple(req.prompt) + tuple(int(t) for t in req.generated)
+        assert len(key) == sl, (len(key), sl)
+        if key in self.pool.prefix_index:
+            return                      # another slot froze this content
+        self.pool.register_prefix(key, pg)
 
     # -- live boundary swap ------------------------------------------------
     def try_swap(self, blocks: Sequence[int]) -> bool:
@@ -1573,8 +1933,31 @@ class ServingEngine:
                 jnp.asarray(np.zeros((1, MP), np.int32)),
                 jnp.asarray(np.full(C, N, np.int32)),
                 jnp.asarray(np.zeros(C, np.int32)))
+        self._warm_swap_io()
         self._warm_step_neutral()
         self.backend.stage_times()
+
+    def _warm_swap_io(self) -> None:
+        """State-neutral warm of the two-tier swap transfer path: gather
+        the null page for every row (seal + device→host fetch, exactly the
+        swap-out shapes) and scatter the payload back with every row on
+        the drop sentinel (unseal + scatter executable, nothing lands).
+        Runs under the planned layout here and under each toured layout in
+        ``_warm_layouts`` — swap traffic then causes zero post-warmup
+        compiles regardless of which layout is live."""
+        if self.kv_layout != "paged" or \
+                self.config.preempt_policy != "swap":
+            return
+        MP, N = self.pages_per_slot, self.pool.num_pages
+        ctr = jnp.uint32(0)
+        ck, cv = self.backend.gather_pages(
+            jnp.asarray(np.zeros(MP, np.int32)), self._key, ctr)
+        # round-trip through host numpy: real swap-in feeds host-resident
+        # payload buffers, and the AOT signature must match it exactly
+        ck, cv = np.asarray(ck), np.asarray(cv)
+        self.backend.scatter_pages(
+            jnp.asarray(ck), jnp.asarray(cv),
+            jnp.asarray(np.full(MP, N, np.int32)), self._key, ctr)
 
     def _warm_step_neutral(self) -> None:
         """One decode tick on all-idle slots: every seq_len is 0, so paged
@@ -1619,9 +2002,10 @@ class ServingEngine:
         neutral decode ticks, then swaps home — so a post-freeze re-plan
         onto any toured layout (and the swap home) hits only prebuilt
         executables. Swaps between two non-planned layouts the replanner
-        chains through are NOT prewarmed (the restage gather is shaped by
-        the specific pair); that one-off cost is accepted and visible in
-        compile_stalls."""
+        chains through hit the backends' lazy restage memo instead: the
+        first occurrence of a (from, to) pair AOT-warms its composed
+        gather off the stall ledger (one-off wall cost, no recorded
+        stall), and every repeat dispatches from the memo."""
         planned = self.stage_blocks
         for target in self._swap_targets():
             if not self.try_swap(target):
@@ -1629,6 +2013,8 @@ class ServingEngine:
             self.backend.stage_times()
             for _ in range(2):
                 self._warm_step_neutral()
+            if self.kv_layout == "paged":
+                self._warm_swap_io()    # per-layout swap transfer fns
             self.try_swap(planned)
         assert self.stage_blocks == planned
 
@@ -1641,9 +2027,13 @@ class ServingEngine:
         self.scheduler = SlotScheduler(cfg.num_slots,
                                        finished_cap=cfg.finished_cap)
         if self.kv_layout == "paged":
+            # a fresh pool also clears the swap manifests (warmup traffic
+            # may have swapped); their host payloads die with them
             self.pool = PagePool(self.pool.num_pages, cfg.page_size)
             self.slot_pages.clear()
             self.slot_len.clear()
+        self._swap_seq = 0
+        self.swap_fallbacks = 0
         self.chunking.clear()
         self.pending[:] = 0
         self.steps = 0
@@ -1747,6 +2137,10 @@ class ServingEngine:
             out["peak_demand_pages"] = self.pool.peak_demand
             out["page_policy"] = self.config.page_policy
             out["preemptions"] = self.preemptions
+            out["preempt_policy"] = self.config.preempt_policy
+            out.update(self.pool.stats())   # swapped_pages/swap_outs/ins
+            out["swap_fallbacks"] = self.swap_fallbacks
+            out["decode_cow"] = self.config.decode_cow
             out["cow_hits"] = self.pool.cow_hits
             out["forks"] = self.pool.forks
             out["evictions"] = self.pool.evictions

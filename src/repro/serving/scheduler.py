@@ -18,11 +18,12 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict, deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 QUEUED = "queued"
 PREFILL = "prefill"          # admitted to a slot, prompt chunking in flight
 RUNNING = "running"
+SWAPPED = "swapped"          # preempted with KV sealed to the host swap tier
 DONE = "done"
 
 
@@ -159,16 +160,23 @@ class SlotScheduler:
         self.finished.append(req)
         return req
 
-    def preempt(self, slot: int) -> Request:
+    def preempt(self, slot: int, swapped: bool = False) -> Request:
         """Evict a RUNNING (or mid-PREFILL) request back to the *front* of
         the queue (it was admitted before anything still queued, so FIFO
-        order by rid is preserved). The request keeps its generated tokens;
-        on re-admission the engine prefills prompt + generated as one
-        extended prompt and decoding resumes token-exactly."""
+        order by rid is preserved). The request keeps its generated tokens.
+
+        ``swapped=False`` (recompute oracle): on re-admission the engine
+        prefills prompt + generated as one extended prompt and decoding
+        resumes token-exactly. ``swapped=True``: the engine sealed the
+        victim's KV pages to the host swap tier (PagePool.swap_out) — the
+        request re-queues in the SWAPPED state and re-admission restores the
+        pages (O(pages) transfer) instead of re-prefilling (O(tokens)
+        recompute)."""
         req = self.slots[slot]
         assert req is not None and req.status in (RUNNING, PREFILL), \
             (slot, req)
-        req.status, req.slot = QUEUED, None
+        req.status = SWAPPED if swapped else QUEUED
+        req.slot = None
         self.slots[slot] = None
         self._free.append(slot)
         self.queue.appendleft(req)
@@ -201,6 +209,37 @@ class SlotScheduler:
             "mean_queue_wait_steps": (self._wait_sum / self._wait_n)
             if self._wait_n else 0.0,
         }
+
+
+@dataclasses.dataclass
+class SwapManifest:
+    """Host-side record of one swapped-out request's KV (two-tier paging).
+
+    ``entries[i]`` describes logical page ``i`` of the victim's block table:
+    ``("sealed", i)`` — the page was private (refcount 1); its contents were
+    sealed through the lossless bit-cipher into ``payload`` row ``i`` and the
+    device page was freed. ``("shared", (key, page))`` — the page is
+    COW-shared; it is never spilled: the manifest pins it in the prefix
+    index (one extra reference) and swap-in re-adopts it in place.
+
+    ``payload`` is opaque to the pool: host-resident (device-fetched) sealed
+    buffers the engine's backend produced; ``counter`` is the swap sequence
+    number that keys the cipher keystream; ``n_tokens`` restores slot_len.
+    """
+
+    rid: int
+    n_tokens: int
+    entries: List[Tuple[str, Any]]
+    payload: Any
+    counter: int
+
+    @property
+    def sealed_pages(self) -> int:
+        return sum(1 for tag, _ in self.entries if tag == "sealed")
+
+    @property
+    def shared_pages(self) -> int:
+        return sum(1 for tag, _ in self.entries if tag == "shared")
 
 
 class PagePool:
@@ -248,6 +287,13 @@ class PagePool:
         self.cow_hits = 0                       # admissions served by index
         self.evictions = 0                      # index pages reclaimed
         self.forks = 0                          # copy-on-write forks
+        # two-tier swap ledger: rid -> manifest of sealed/shared pages.
+        # Sealed pages live on the HOST — their device pages are freed at
+        # swap-out, so neither peak_in_use nor peak_demand ever counts them
+        # as device pressure (the swap-aware accounting contract).
+        self.swap_manifest: Dict[int, SwapManifest] = {}
+        self.swap_outs = 0
+        self.swap_ins = 0
 
     @property
     def free_pages(self) -> int:
@@ -349,12 +395,78 @@ class PagePool:
                 return True
         return False
 
+    # -- two-tier swap (sealed host tier) ----------------------------------
+    def has_swap(self, rid: int) -> bool:
+        return rid in self.swap_manifest
+
+    def manifest(self, rid: int) -> SwapManifest:
+        return self.swap_manifest[rid]
+
+    @property
+    def swapped_pages(self) -> int:
+        """Host-resident sealed pages across all manifests (not device
+        pressure — their device pages were freed at swap-out)."""
+        return sum(m.sealed_pages for m in self.swap_manifest.values())
+
+    def swap_out(self, rid: int, entries: Sequence[Tuple[str, Any]],
+                 payload: Any, n_tokens: int, counter: int) -> SwapManifest:
+        """Record a victim's sealed spill. The caller has already gathered
+        and sealed the private pages into ``payload`` (and will release the
+        slot's page references afterwards); this pins every shared page with
+        one manifest reference so the prefix index cannot evict it while the
+        request is swapped out — re-adoption at swap-in is guaranteed."""
+        assert rid not in self.swap_manifest, rid
+        man = SwapManifest(rid, n_tokens, list(entries), payload, counter)
+        for tag, val in man.entries:
+            if tag == "shared":
+                key, page = val
+                assert self._page_key.get(page) == key, \
+                    f"shared page {page} not frozen under its key"
+                self.incref(page)
+        self.swap_manifest[rid] = man
+        self.swap_outs += 1
+        return man
+
+    def swap_in(self, rid: int) -> SwapManifest:
+        """Pop the manifest for restore. Shared entries' pin references
+        TRANSFER to the caller (who assigns the pages into the resumed
+        slot's block table) — no refcount movement here, so the pages are
+        never transiently evictable during the restore."""
+        man = self.swap_manifest.pop(rid)
+        for tag, val in man.entries:
+            if tag == "shared":
+                key, page = val
+                assert self._page_key.get(page) == key, (key, page)
+                assert self.refcount[page] >= 2, (page, self.refcount[page])
+        self.swap_ins += 1
+        return man
+
+    def drop_swap(self, rid: int) -> SwapManifest:
+        """Discard a manifest (deadlock fallback: the request reverts to the
+        recompute oracle). Unpins its shared pages; the sealed host payload
+        is simply dropped."""
+        man = self.swap_manifest.pop(rid)
+        for tag, val in man.entries:
+            if tag == "shared":
+                self.decref(val[1])
+        return man
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "swapped_pages": self.swapped_pages,
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+        }
+
     # -- auditing -----------------------------------------------------------
     def check_invariants(self, live_tables: Dict[int, Sequence[int]]) -> None:
         """Audit the ledger against the engine's live block tables:
         refcount(p) == (# live block-table references to p) + (1 if the
-        prefix index holds p); free/allocated partition the non-null ids;
-        no page is both free and referenced; the null page is never held."""
+        prefix index holds p) + (# swap-manifest pins on p); free/allocated
+        partition the non-null ids; no page is both free and referenced; the
+        null page is never held; every manifest-pinned shared page is still
+        frozen in the index under its manifest key (so no device page is
+        simultaneously free and claimed by a swapped-out request)."""
         expect = [0] * self.num_pages
         for _slot, pages in live_tables.items():
             for p in pages:
@@ -363,6 +475,16 @@ class PagePool:
         for key, p in self.prefix_index.items():
             assert self._page_key.get(p) == key, (p, key)
             expect[p] += 1
+        for rid, man in self.swap_manifest.items():
+            assert man.rid == rid, (rid, man.rid)
+            for tag, val in man.entries:
+                if tag == "shared":
+                    key, p = val
+                    assert p != 0, "manifest pins the null page"
+                    assert self._page_key.get(p) == key, \
+                        f"swapped rid {rid}: shared page {p} no longer " \
+                        f"frozen under its key"
+                    expect[p] += 1
         free = list(self._free)
         assert len(free) == len(set(free)), "free list holds duplicates"
         for p in range(1, self.num_pages):
