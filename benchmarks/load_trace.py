@@ -28,11 +28,19 @@ config, same trace, same token streams.
 ``--preset swap-pressure`` is a named workload that bursts long-lived
 requests against a deliberately tight page pool, forcing mid-decode
 preemption — the regime the two-tier sealed KV swap serves; replay it at
-``--preempt-policy swap`` (default) vs ``recompute`` to compare resume
-behaviour on identical traffic.
+``--preempt-policy swap`` (the ``auto`` resolution on the paged layout) vs
+``recompute`` to compare resume behaviour on identical traffic.
+
+``--preset disagg-burst`` replays the same thundering-herd shape through the
+disaggregated prefill/decode orchestrator (``--disagg``): bursts land on the
+prefill role and hand off sealed KV manifests to the decode role, so the
+replay exercises back-pressure (prompts parked at prefill while decode's
+admission queue is full) on top of demand paging.
 
   PYTHONPATH=src python benchmarks/load_trace.py --pattern bursty --smoke
   PYTHONPATH=src python benchmarks/load_trace.py --preset swap-pressure \\
+      --smoke
+  PYTHONPATH=src python benchmarks/load_trace.py --preset disagg-burst \\
       --smoke
   PYTHONPATH=src python benchmarks/load_trace.py --pattern diurnal \\
       --requests 64 --shared-ratio 0.7 --json BENCH_trace.json
@@ -61,6 +69,16 @@ PRESETS = {
                           max_new_min=8, max_new_max=16,
                           slots=4, page_size=4, num_pages=15,
                           page_policy="demand"),
+    # thundering herds against the disaggregated pair: bursts pile prompts
+    # onto the prefill role faster than the decode role can admit sealed
+    # handoffs, exercising orchestrator back-pressure (prompts parked in
+    # the prefill queue, NOT unbounded manifests in the decode pool) — the
+    # regime the transfer-manifest protocol's flow control exists for
+    "disagg-burst": dict(pattern="bursty", mean_gap=2.0, burst_size=8,
+                         shared_ratio=0.4, eos_prob=0.1,
+                         max_new_min=6, max_new_max=12,
+                         slots=4, page_size=4,
+                         page_policy="demand", disagg=True),
 }
 
 
@@ -173,10 +191,14 @@ def main(argv=None):
     ap.add_argument("--num-pages", type=int, default=0)
     ap.add_argument("--page-policy", default="demand",
                     choices=["demand", "reserve"])
-    ap.add_argument("--preempt-policy", default="swap",
-                    choices=["swap", "recompute"],
+    ap.add_argument("--preempt-policy", default="auto",
+                    choices=["auto", "swap", "recompute"],
                     help="sealed host swap-out/swap-in vs drop-and-"
-                         "recompute on preemption")
+                         "recompute on preemption (auto: swap on the "
+                         "paged layout)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="replay through the disaggregated prefill/decode "
+                         "orchestrator instead of one engine")
     ap.add_argument("--preset", default=None, choices=sorted(PRESETS),
                     help="named workload preset (overrides matching args)")
     ap.add_argument("--json", default="",
@@ -226,7 +248,11 @@ def main(argv=None):
                       num_pages=args.num_pages, page_policy=args.page_policy,
                       preempt_policy=args.preempt_policy,
                       telemetry_interval=64)
-    eng = ServingEngine(api, config=ec, params=params, backend="local")
+    if args.disagg:
+        from repro.serving import build_disagg
+        eng = build_disagg(api, params=params, config=ec, backend="local")
+    else:
+        eng = ServingEngine(api, config=ec, params=params, backend="local")
     reqs, st = replay(eng, trace)
     print(f"completed {st['trace_completed']}/{st['trace_requests']} "
           f"in {st['steps']} steps; preemptions={st.get('preemptions', 0)} "
@@ -234,9 +260,21 @@ def main(argv=None):
           f"swap_ins={st.get('swap_ins', 0)} "
           f"cow_hits={st.get('cow_hits', 0)} forks={st.get('forks', 0)} "
           f"peak_slots={st.get('peak_running_slots', 0)}")
-    if args.preset == "swap-pressure" and args.preempt_policy == "swap":
+    if args.disagg:
+        eng.check_invariants()
+        print(f"disagg: handoffs={st.get('handoffs', 0)} "
+              f"backpressure_events={st.get('backpressure_events', 0)} "
+              f"finished_at_prefill={st.get('prefill_completed', 0)} "
+              f"transfer_demotions={st.get('transfer_demotions', 0)}")
+    if args.preset == "swap-pressure" and \
+            args.preempt_policy in ("swap", "auto"):
         assert st.get("swap_outs", 0) > 0, \
             "swap-pressure preset produced no swap-outs"
+    if args.preset == "disagg-burst":
+        assert st.get("handoffs", 0) > 0, \
+            "disagg-burst preset produced no sealed handoffs"
+        assert st["trace_completed"] == st["trace_requests"], \
+            "disagg-burst replay left requests unfinished"
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"config": dataclasses.asdict(tcfg),

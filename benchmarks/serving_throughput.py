@@ -12,7 +12,15 @@ trajectory (DESIGN.md §Paged KV cache):
                         engine configuration; isolates the admission win);
 * ``paged_replan``    — paged_batched plus an injected straggler driving a
                         telemetry re-plan with live cache migration (the
-                        tok/s delta IS the swap overhead).
+                        tok/s delta IS the swap overhead);
+* ``disagg_prefill_decode`` — the same stream through the disaggregated
+                        prefill/decode pair at matched per-engine pools
+                        (DESIGN.md §Disaggregated prefill/decode): prefill
+                        seals KV pages into transfer manifests, decode
+                        unseals and resumes; TTFT and inter-token p50/p99
+                        land next to ``paged_batched``, streams asserted
+                        identical under ``--f32``, and both roles must
+                        report zero post-warmup compiles.
 
 Two capacity phases then rerun the stream against a deliberately small
 page pool (~half the reserve worst case) at both page policies
@@ -212,6 +220,72 @@ def run_stream(api, params, mesh, args, ec: EngineConfig, inject=None,
     return eng, reqs, st
 
 
+def run_disagg_stream(api, params, mesh, args, ec: EngineConfig,
+                      prompts=None, warm=True):
+    """The orchestrator twin of ``run_stream``: same prompt stream and
+    submission order through the disaggregated prefill/decode pair, with
+    the same TTFT / inter-token instrumentation (DESIGN.md §Disaggregated
+    prefill/decode)."""
+    from repro.serving import build_disagg
+    orch = build_disagg(api, params=params, config=ec, mesh=mesh,
+                        warmup=warm)
+    rng = np.random.RandomState(args.seed)
+    if prompts is None:
+        prompts = [rng.randint(0, api.cfg.vocab_size,
+                               size=int(rng.randint(2, args.prompt_len + 1))
+                               ).tolist()
+                   for _ in range(args.requests)]
+    reqs, k = [], 0
+    submit_t, first_t, token_t = {}, {}, {}
+    t0 = time.perf_counter()
+    while k < len(prompts) or orch.has_work():
+        if (k < len(prompts)
+                and len(orch.eng_prefill.scheduler.queue) < args.slots
+                and orch.decode.steps % max(1, args.arrival_every) == 0):
+            r = orch.submit(prompts[k], args.max_new)
+            submit_t[r.rid] = time.perf_counter()
+            reqs.append(r)
+            k += 1
+        if k < len(prompts) and not orch.has_work():
+            r = orch.submit(prompts[k], args.max_new)
+            submit_t[r.rid] = time.perf_counter()
+            reqs.append(r)
+            k += 1
+        orch.step()
+        now = time.perf_counter()
+        for r in reqs:
+            ts = token_t.setdefault(r.rid, [])
+            n = len(r.generated)
+            if n > len(ts):
+                if not ts:
+                    first_t[r.rid] = now
+                ts.extend([now] * (n - len(ts)))
+        if orch.decode.stalled and not orch.prefill.has_work():
+            break
+    wall = time.perf_counter() - t0
+    st = orch.stats()
+    # decode-side tokens_out misses the first token each request (sampled
+    # prefill-side); the stream rate counts what the client actually saw
+    stream_toks = sum(len(r.generated) for r in reqs)
+    st["stream_wall_s"] = wall
+    st["stream_tok_per_s"] = stream_toks / wall if wall > 0 else 0.0
+    ttft = [(first_t[r.rid] - submit_t[r.rid]) * 1e3
+            for r in reqs if r.rid in first_t]
+    gaps = []
+    for r in reqs:
+        ts = token_t.get(r.rid, [])
+        gaps += [(b - a) * 1e3 for a, b in zip(ts, ts[1:])]
+    if ttft:
+        st["first_ttft_ms"] = ttft[0]
+        st["ttft_p50_ms"] = float(np.percentile(ttft, 50))
+        st["ttft_p99_ms"] = float(np.percentile(ttft, 99))
+    if gaps:
+        st["intertok_p50_ms"] = float(np.percentile(gaps, 50))
+        st["intertok_p99_ms"] = float(np.percentile(gaps, 99))
+        st["intertok_max_ms"] = float(np.max(gaps))
+    return orch, reqs, st
+
+
 PHASES = [
     # name, kv_layout, batched_prefill, injected straggler
     ("timeline", "timeline", False, False),
@@ -230,7 +304,9 @@ KEEP = ("backend", "kv_layout", "completed", "tokens_out", "decode_wall_s",
         "evictions", "peak_running_slots", "warmed", "warmup_s",
         "post_warmup_compiles", "prefill_chunk", "chunked_admissions",
         "prefill_chunks", "first_ttft_ms", "ttft_p50_ms", "ttft_p99_ms",
-        "intertok_p50_ms", "intertok_p99_ms", "intertok_max_ms")
+        "intertok_p50_ms", "intertok_p99_ms", "intertok_max_ms",
+        "handoffs", "backpressure_events", "transfers_in",
+        "transfer_demotions", "prefill_completed")
 
 
 def main(argv=None):
@@ -293,6 +369,24 @@ def main(argv=None):
         eng, reqs, st = run_stream(api, params, mesh, args, ec,
                                    inject=inject if with_inject else None)
         record(name, eng, reqs, st)
+
+    # -- disaggregated prefill/decode: sealed KV handoff at matched pools --
+    # same stream, same per-engine config as paged_batched; TTFT and
+    # inter-token percentiles land side by side in the results table
+    orch, dreqs, dst = run_disagg_stream(api, params, mesh, args,
+                                         make_config(args, "paged", True))
+    record("disagg_prefill_decode", orch.decode, dreqs, dst)
+    orch.check_invariants()
+    assert dst["handoffs"] + dst["prefill_completed"] == args.requests, dst
+    assert dst["post_warmup_compiles"] in (None, 0), \
+        f"disagg decode recompiled under handoff traffic: " \
+        f"{dst['post_warmup_compiles']}"
+    pre_compiles = dst["prefill_stats"]["post_warmup_compiles"]
+    assert pre_compiles in (None, 0), \
+        f"disagg prefill recompiled under handoff traffic: {pre_compiles}"
+    if args.f32:
+        assert streams["disagg_prefill_decode"] == streams["paged_batched"], \
+            "disaggregated token streams diverged from monolithic"
 
     # -- overcommit: same stream, pool ~half the reserve worst case --------
     # reserve admits only while worst-case reservations fit; demand admits
@@ -493,6 +587,17 @@ def main(argv=None):
         "chunked_intertok_max":
             os_.get("intertok_max_ms", 0.0)
             / max(ch.get("intertok_max_ms", 1e-9), 1e-9),
+        # disaggregation at matched pools: the decode role never stalls
+        # behind a peer's prefill (>1 = disagg bounds the decode stream's
+        # tail latency tighter than the colocated engine)
+        "disagg_vs_mono_intertok_p99":
+            results["paged_batched"].get("intertok_p99_ms", 0.0)
+            / max(results["disagg_prefill_decode"].get(
+                "intertok_p99_ms", 1e-9), 1e-9),
+        "disagg_vs_mono_ttft_p50":
+            results["paged_batched"].get("ttft_p50_ms", 0.0)
+            / max(results["disagg_prefill_decode"].get(
+                "ttft_p50_ms", 1e-9), 1e-9),
     }
     for G in gen_counts:
         speedup[f"swap_vs_recompute_resume_p50_at_{G}"] = (
@@ -552,6 +657,14 @@ def main(argv=None):
           f"{os_.get('intertok_max_ms', 0):.1f}ms, "
           f"{ch['chunked_admissions']} chunked admissions in "
           f"{ch['prefill_chunks']} chunks")
+    dg = results["disagg_prefill_decode"]
+    mono = results["paged_batched"]
+    print(f"disagg prefill/decode: {dg['handoffs']} sealed handoffs "
+          f"({dg.get('backpressure_events', 0)} backpressure), TTFT p50 "
+          f"{dg.get('ttft_p50_ms', 0):.1f}ms vs mono "
+          f"{mono.get('ttft_p50_ms', 0):.1f}ms, inter-token p99 "
+          f"{dg.get('intertok_p99_ms', 0):.1f}ms vs mono "
+          f"{mono.get('intertok_p99_ms', 0):.1f}ms")
 
     if args.json:
         payload = {
@@ -600,6 +713,23 @@ def main(argv=None):
                     preempt_streams[("swap", g)]
                     == preempt_streams[("recompute", g)]
                     for g in gen_counts),
+            },
+            "disagg": {
+                "handoffs": dg["handoffs"],
+                "backpressure_events": dg.get("backpressure_events", 0),
+                "transfer_demotions": dg.get("transfer_demotions", 0),
+                "finished_at_prefill": dg.get("prefill_completed", 0),
+                "ttft_p50_ms": dg.get("ttft_p50_ms"),
+                "ttft_p99_ms": dg.get("ttft_p99_ms"),
+                "intertok_p50_ms": dg.get("intertok_p50_ms"),
+                "intertok_p99_ms": dg.get("intertok_p99_ms"),
+                "mono_ttft_p50_ms": mono.get("ttft_p50_ms"),
+                "mono_ttft_p99_ms": mono.get("ttft_p99_ms"),
+                "mono_intertok_p50_ms": mono.get("intertok_p50_ms"),
+                "mono_intertok_p99_ms": mono.get("intertok_p99_ms"),
+                "post_warmup_compiles": dg.get("post_warmup_compiles"),
+                "streams_identical": streams["disagg_prefill_decode"]
+                == streams["paged_batched"],
             },
             "overcommit": {
                 "pool_pages": over_pages - 1,

@@ -66,7 +66,7 @@ def unseal_array(cipher, scales, shape, key, step, dtype=jnp.bfloat16, *,
 
 
 # ---------------------------------------------------------------------------
-# Lossless page sealing (two-tier KV swap)
+# Lossless page sealing (two-tier KV swap + cross-engine KV transfer)
 # ---------------------------------------------------------------------------
 # Swapped-out KV pages must restore bit-exactly, so they go through the
 # seal_bits cipher (bitcast + keystream XOR) instead of the quantizing seal.
@@ -74,6 +74,34 @@ def unseal_array(cipher, scales, shape, key, step, dtype=jnp.bfloat16, *,
 # sequence number from the engine; the K and V planes use distinct parts so
 # their keystreams never overlap, and the 0xA5A50000 tweak separates the
 # swap counter space from the activation-boundary ``_leaf_counter`` space.
+#
+# Three disjoint counter spaces share the one keystream cipher:
+#
+#   * activation boundaries — ``_leaf_counter(step, leaf)`` =
+#     ``step * 65537 + leaf``: small products of the step clock, never
+#     carrying the 0xA5A50000 tweak;
+#   * swap events — ``_swap_counter(seq, part)`` with engine-local
+#     ``seq < TRANSFER_SEQ_BASE``: the tweak XOR a SMALL ``2*seq + part``,
+#     so bit 31 of the tweaked value stays clear;
+#   * cross-engine transfers (disaggregated prefill→decode handoff) —
+#     ``_swap_counter(transfer_seq(n), part)`` where ``transfer_seq`` maps
+#     the handoff sequence into ``[TRANSFER_SEQ_BASE, 2*TRANSFER_SEQ_BASE)``:
+#     ``2*seq`` then sets bit 31, which no swap counter ever does.
+#
+# Transfer seals therefore reuse the SAME warmed seal/unseal executables as
+# swap (the counter is a traced argument) while their keystreams can never
+# collide with a swap or activation seal under the same key.
+
+TRANSFER_SEQ_BASE = 0x4000_0000
+
+
+def transfer_seq(n: int) -> int:
+    """Map handoff sequence number ``n`` into the transfer counter space
+    (disjoint from engine-local swap sequences, which stay far below the
+    base; asserted rather than silently wrapped)."""
+    assert 0 <= n < TRANSFER_SEQ_BASE, n
+    return TRANSFER_SEQ_BASE + n
+
 
 def _swap_counter(swap_seq, part: int):
     return (jnp.uint32(0xA5A50000)

@@ -102,12 +102,15 @@ def build_parser() -> argparse.ArgumentParser:
                          "reservation (PR 5 baseline)")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable the COW prefix index (demand policy)")
-    ap.add_argument("--preempt-policy", default="swap",
-                    choices=["swap", "recompute"],
+    ap.add_argument("--preempt-policy", default="auto",
+                    choices=["auto", "swap", "recompute"],
                     help="swap: seal victim pages to the host tier and "
                          "restore them on resume (O(pages)); recompute: "
                          "drop pages and re-prefill on resume (PR 6 "
-                         "baseline, O(generated tokens))")
+                         "baseline, O(generated tokens)); auto (default): "
+                         "swap on the paged layout, recompute on the "
+                         "legacy timeline (which cannot swap — asking "
+                         "for swap there is a config-time error)")
     ap.add_argument("--no-decode-cow", action="store_true",
                     help="don't register decode-completed pages in the "
                          "COW prefix index")
@@ -138,6 +141,21 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--per-token-prefill", action="store_true",
                     help="disable one-call batched prefill (admission-"
                          "latency baseline)")
+    ap.add_argument("--prefill-pack", type=int, default=0,
+                    help="pack up to K queued short prompts into ONE "
+                         "bucketed prefill call (paged + batched prefill "
+                         "only; 0 = off)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving: a prefill-role engine "
+                         "seals each prompt's KV pages and hands them to "
+                         "a decode-role engine over the transfer-manifest "
+                         "protocol (paged layout only)")
+    ap.add_argument("--verify-disagg", action="store_true",
+                    help="with --disagg: serve the same stream three ways "
+                         "— disaggregated, monolithic, and orchestrator-"
+                         "fallback (no prefill peer) — and assert all "
+                         "three token streams are identical (use with "
+                         "--f32)")
     ap.add_argument("--no-seal", action="store_true")
     ap.add_argument("--topology", default="two-enclave",
                     choices=sorted(TOPOLOGIES),
@@ -170,7 +188,7 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
-def _make_engine(api, params, mesh, args) -> ServingEngine:
+def _make_config(args):
     max_seq = args.max_seq or (
         args.prompt_len + args.requests * args.arrival_every
         + args.max_new * args.requests // args.slots + args.max_new + 16)
@@ -185,6 +203,7 @@ def _make_engine(api, params, mesh, args) -> ServingEngine:
         decode_cow=not args.no_decode_cow,
         request_capacity=args.prompt_len + args.max_new,
         batched_prefill=not args.per_token_prefill,
+        prefill_pack=args.prefill_pack,
         seal_boundary=not args.no_seal, solver=args.solver,
         space=args.space, delta=args.delta,
         temperature=args.temperature, top_k=args.top_k,
@@ -192,12 +211,16 @@ def _make_engine(api, params, mesh, args) -> ServingEngine:
         warmup=args.warmup, prefill_chunk=args.prefill_chunk)
     backend = None if args.backend == "auto" else args.backend
     rm = TOPOLOGIES[args.topology](args.stages)
+    return ec, backend, rm
+
+
+def _make_engine(api, params, mesh, args) -> ServingEngine:
+    ec, backend, rm = _make_config(args)
     return ServingEngine(api, mesh=mesh, rm=rm, config=ec, params=params,
                          backend=backend)
 
 
-def _serve_stream(eng: ServingEngine, args, cfg):
-    """Submit a deterministic synthetic arrival stream and drain it."""
+def _gen_prompts(args, cfg):
     rng = np.random.RandomState(args.seed)
     sys_prompt = rng.randint(0, cfg.vocab_size,
                              size=max(2, args.prompt_len // 2)).tolist()
@@ -213,6 +236,12 @@ def _serve_stream(eng: ServingEngine, args, cfg):
             prompts.append(rng.randint(
                 0, cfg.vocab_size,
                 size=int(rng.randint(2, args.prompt_len + 1))).tolist())
+    return prompts
+
+
+def _serve_stream(eng: ServingEngine, args, cfg):
+    """Submit a deterministic synthetic arrival stream and drain it."""
+    prompts = _gen_prompts(args, cfg)
     reqs = []
     k = 0
     while k < len(prompts) or eng.scheduler.has_work():
@@ -231,6 +260,87 @@ def _serve_stream(eng: ServingEngine, args, cfg):
             reqs.append(eng.submit(prompts[k], args.max_new))
             k += 1
     return reqs
+
+
+def _serve_stream_orch(orch, args, cfg):
+    """The orchestrator twin of ``_serve_stream`` (same prompt stream, same
+    submission order — so rids, and therefore sampler keystreams, match a
+    monolithic run exactly)."""
+    prompts = _gen_prompts(args, cfg)
+    reqs, k = [], 0
+    while k < len(prompts) or orch.has_work():
+        if k < len(prompts) and orch.decode.steps % args.arrival_every == 0:
+            reqs.append(orch.submit(prompts[k], args.max_new))
+            k += 1
+        orch.step()
+        if orch.decode.stalled and not (
+                orch.prefill is not None and orch.prefill.has_work()):
+            break
+        if k < len(prompts) and not orch.has_work():
+            reqs.append(orch.submit(prompts[k], args.max_new))
+            k += 1
+    return reqs
+
+
+def _disagg_main(api, params, mesh, args, cfg):
+    """--disagg: serve through the prefill/decode orchestrator; with
+    --verify-disagg, re-serve monolithically AND through the no-peer
+    fallback orchestrator and assert all three streams are identical."""
+    from repro.serving import (DisaggOrchestrator, build_disagg,
+                               plan_disagg_roles)
+    ec, backend, rm = _make_config(args)
+    plan = plan_disagg_roles(rm, cfg, prompt_len=max(args.prompt_len, 16),
+                             max_new=args.max_new,
+                             page_size=args.page_size)
+    print(f"role plan: {plan.describe()}")
+    orch = build_disagg(api, params=params, config=ec, backend=backend,
+                        mesh=mesh, rm=rm)
+    print(f"disagg: prefill backend={orch.eng_prefill.backend_kind} "
+          f"decode backend={orch.decode.backend_kind} "
+          f"kv_layout={orch.decode.kv_layout}")
+    reqs = _serve_stream_orch(orch, args, cfg)
+    orch.check_invariants()
+    st = orch.stats()
+    print(f"served {st['completed'] + st['prefill_completed']} requests, "
+          f"{st['tokens_out']} tokens ({st['tok_per_s']:.1f} tok/s) "
+          f"handoffs={st['handoffs']} "
+          f"backpressure={st['backpressure_events']} "
+          f"finished_at_prefill={st['prefill_completed']}")
+    ps = st["prefill_stats"]
+    print(f"prefill side: admissions={ps['admissions']} "
+          f"prefill_calls={ps['prefill_calls']} "
+          f"transfers_out={ps['transfers_out']} "
+          f"packed={ps['packed_admissions']}")
+    if reqs:
+        print("sample tokens:", reqs[0].generated)
+
+    if args.assert_no_recompile:
+        assert args.warmup, "--assert-no-recompile needs --warmup"
+        for side, n, stalls in (
+                ("decode", st["post_warmup_compiles"], st["compile_stalls"]),
+                ("prefill", ps["post_warmup_compiles"],
+                 orch.eng_prefill.stats()["compile_stalls"])):
+            assert n in (None, 0), \
+                f"{side}: {n} XLA compilations after warmup (stalls: " \
+                f"{stalls})"
+            assert not stalls, (side, stalls)
+        print("NO-RECOMPILE OK: zero post-warmup compiles on both roles")
+
+    if args.verify_disagg:
+        mono_reqs = _serve_stream(_make_engine(api, params, mesh, args),
+                                  args, cfg)
+        fb = DisaggOrchestrator(_make_engine(api, params, mesh, args))
+        fb_reqs = _serve_stream_orch(fb, args, cfg)
+        assert fb.stats()["handoffs"] == 0
+        for a, b, c in zip(reqs, mono_reqs, fb_reqs):
+            assert a.generated == b.generated == c.generated, \
+                f"req {a.rid} diverged across serving modes:\n" \
+                f"  disagg     {a.generated}\n  monolithic {b.generated}\n" \
+                f"  fallback   {c.generated}"
+        print(f"DISAGG-EXACT OK: {len(reqs)} token streams identical "
+              f"across disaggregated / monolithic / fallback "
+              f"({st['handoffs']} sealed handoffs)")
+    return st
 
 
 def main(argv=None):
@@ -253,6 +363,9 @@ def main(argv=None):
         params = jax.tree.map(
             lambda x: x.astype(jnp.float32)
             if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+    if args.disagg:
+        return _disagg_main(api, params, mesh, args, cfg)
 
     inject = None
     if args.inject_straggler:

@@ -83,6 +83,11 @@ class ModelAPI:
         """Right-padded whole-prompt prefill (see StackedLM.prefill_at_fn)."""
         return self.model.prefill_at_fn(params, batch)
 
+    def prefill_packed_fn(self, params, batch):
+        """K packed prompts in one bucketed prefill with per-row logit
+        extraction (see StackedLM.prefill_packed_fn)."""
+        return self.model.prefill_packed_fn(params, batch)
+
     def prefill_chunk_fn(self, params, pools, batch):
         """One prefill chunk resuming at an offset with the paged cache
         carried in (see StackedLM.prefill_chunk_fn)."""

@@ -358,6 +358,32 @@ class StackedLM:
         logits = constrain(logits, ("act_batch", "act_vocab"))
         return logits, self._constrain_caches(caches)
 
+    # -- public: packed batched prefill (K prompts, one call) --------------
+    def prefill_packed_fn(self, params, batch):
+        """``prefill_at_fn`` over K prompts at once: ``tokens`` [K, S_pad]
+        holds K right-padded prompts, ``prompt_lens`` [K] their true
+        lengths. Rows never attend to each other (the batch dim is
+        independent) and causal attention hides each row's right padding,
+        so row b's logits — read at its own ``prompt_lens[b] - 1`` — and
+        cache positions ``< prompt_lens[b]`` are bit-identical to a solo
+        ``prefill_at_fn`` call at the same bucket; the serving engine packs
+        several short admissions into one dispatch (one compile per bucket
+        at fixed K)."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.arange(S)[None, :]
+        x = self.embed(params, tokens)
+        x = self._fuse_frontend(params, x, batch)
+        x, caches = self.run_segments(params, x, positions, mode="prefill",
+                                      pos3=batch.get("pos3"))
+        x = L.rmsnorm(x, params["ln_f"], self.cfg.norm_eps)
+        h_last = jnp.take_along_axis(
+            x, (batch["prompt_lens"] - 1)[:, None, None], axis=1)[:, 0]
+        logits = jnp.einsum("bd,dv->bv", h_last, self.head_weights(params),
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, ("act_batch", "act_vocab"))
+        return logits, self._constrain_caches(caches)
+
     # -- public: chunked prefill (resume at an offset, cache carried in) ---
     def prefill_chunk_fn(self, params, pools, batch):
         """One fixed-size prefill chunk against the paged cache: ``tokens``

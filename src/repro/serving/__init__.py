@@ -26,20 +26,31 @@ Four decoupled layers over the planner/pipeline/ft stack:
    segment placements (possibly non-prefix); decoding is greedy or
    temperature/top-k sampled (**sampling** — per-request PRNG threading
    keeps sampled streams batch-independent).
+
+Plus **disagg** (DESIGN.md §Disaggregated prefill/decode): a prefill-role
+engine seals each prompt's KV pages into a ``TransferManifest`` that a
+decode-role engine unseals into its own pool, with ``DisaggOrchestrator``
+routing, back-pressure, and bit-identical streams, and
+``plan_disagg_roles`` picking role placement across trust domains.
 """
 from .aot import MONITOR, AotFn, AotRegistry, CompileMonitor, CompileStall
+from .disagg import (DisaggOrchestrator, PrefillEngine, RoleCandidate,
+                     RolePlan, build_disagg, plan_disagg_roles)
 from .engine import (EngineConfig, EngineEvent, LocalDecodeBackend,
                      PagedLocalBackend, PagedPipelinedBackend,
                      PipelinedDecodeBackend, ServingEngine,
                      pipelined_backend_available)
 from .sampling import TokenSampler
-from .scheduler import PagePool, Request, SlotScheduler
+from .scheduler import (HANDOFF, PagePool, Request, SlotScheduler,
+                        TransferManifest)
 from .telemetry import StageTelemetry
 
 __all__ = [
-    "AotFn", "AotRegistry", "CompileMonitor", "CompileStall", "EngineConfig",
-    "EngineEvent", "LocalDecodeBackend", "MONITOR", "PagePool",
-    "PagedLocalBackend", "PagedPipelinedBackend", "PipelinedDecodeBackend",
-    "Request", "ServingEngine", "SlotScheduler", "StageTelemetry",
-    "TokenSampler", "pipelined_backend_available",
+    "AotFn", "AotRegistry", "CompileMonitor", "CompileStall",
+    "DisaggOrchestrator", "EngineConfig", "EngineEvent", "HANDOFF",
+    "LocalDecodeBackend", "MONITOR", "PagePool", "PagedLocalBackend",
+    "PagedPipelinedBackend", "PipelinedDecodeBackend", "PrefillEngine",
+    "Request", "RoleCandidate", "RolePlan", "ServingEngine", "SlotScheduler",
+    "StageTelemetry", "TokenSampler", "TransferManifest", "build_disagg",
+    "pipelined_backend_available", "plan_disagg_roles",
 ]

@@ -64,7 +64,7 @@ from repro.runtime.pipeline import PipelinedDecoder, pipeline_applicable
 from repro.serving.aot import MONITOR, AotRegistry
 from repro.serving.sampling import TokenSampler
 from repro.serving.scheduler import (QUEUED, RUNNING, PagePool, Request,
-                                     SlotScheduler)
+                                     SlotScheduler, TransferManifest)
 from repro.serving.telemetry import StageTelemetry
 
 
@@ -95,21 +95,41 @@ class EngineConfig:
     #               admission (kept as the property-test oracle)
     page_policy: str = "demand"
     # preemption policy (DESIGN.md §Two-tier KV & swap; demand paging only):
+    #   "auto"      — resolve by layout at construction: "swap" on the paged
+    #                 layout, "recompute" on the timeline fallback (sliding-
+    #                 window / quantized caches have no page pool to gather
+    #                 from). stats()["preempt_policy"] reports the resolved
+    #                 value.
     #   "swap"      — seal the victim's private pages through the lossless
     #                 bit-cipher into host swap space and restore them at
     #                 re-admission: resume is O(pages transferred). COW-
     #                 shared pages are never spilled — the swap manifest
     #                 pins them in the prefix index and re-adopts in place.
+    #                 Raises ValueError on timeline-layout models.
     #   "recompute" — the PR 6 baseline (kept as the oracle): discard KV,
     #                 re-prefill prompt+generated teacher-forced, O(tokens).
     # Both produce bit-identical streams (asserted by tests/test_swap.py).
-    preempt_policy: str = "swap"
+    preempt_policy: str = "auto"
+    # disaggregated prefill/decode (DESIGN.md §Disaggregated prefill/decode;
+    # serving/disagg.py): "" = monolithic, "prefill" = this engine seals and
+    # exports finished prefills (export_transfer), "decode" = it ingests
+    # TransferManifests from a prefill peer (ingest_transfer). Either role
+    # requires the paged layout + demand paging; timeline-layout models
+    # raise ValueError at construction.
+    disagg_role: str = ""
     prefix_sharing: bool = True         # COW prefix index (demand only)
     decode_cow: bool = True             # register pages COMPLETED during
     #                                     decode in the COW index too, so
     #                                     identical continuations (fan-out
     #                                     resubmissions) share KV
     batched_prefill: bool = True        # whole-prompt prefill in one call
+    prefill_pack: int = 0               # pack up to this many short prompts
+    #                                     into ONE shared bucketed prefill
+    #                                     call with per-request logit
+    #                                     extraction (0/1 = off; paged +
+    #                                     batched_prefill only) — amortizes
+    #                                     dispatch on the prefill role,
+    #                                     streams unchanged
     seal_boundary: bool = True
     use_kernel: bool = False
     solver: str = "dp"
@@ -905,7 +925,37 @@ class ServingEngine:
 
         # --- paged KV page pool ------------------------------------------
         assert cfg.page_policy in ("demand", "reserve"), cfg.page_policy
-        assert cfg.preempt_policy in ("swap", "recompute"), cfg.preempt_policy
+        assert cfg.preempt_policy in ("auto", "swap", "recompute"), \
+            cfg.preempt_policy
+        assert cfg.disagg_role in ("", "prefill", "decode"), cfg.disagg_role
+        # features that need a page pool fail HERE, by name, instead of deep
+        # inside the pool on a layout that never built one
+        if self.kv_layout != "paged":
+            why = ("kv_layout='timeline' was requested" if api.paged_ok
+                   else f"model '{api.cfg.name}' has no paged-cache support "
+                        f"(sliding-window / quantized / recurrent cache)")
+            if cfg.preempt_policy == "swap":
+                raise ValueError(
+                    f"preempt_policy='swap' requires the paged KV layout, "
+                    f"but this engine runs the legacy timeline layout "
+                    f"({why}): sealed page swap has no page pool to gather "
+                    f"from. Use preempt_policy='auto' (resolves to "
+                    f"'recompute' here) or 'recompute'.")
+            if cfg.disagg_role:
+                raise ValueError(
+                    f"disagg_role='{cfg.disagg_role}' requires the paged KV "
+                    f"layout, but this engine runs the legacy timeline "
+                    f"layout ({why}): the prefill/decode handoff transfers "
+                    f"sealed KV *pages* between page pools. Serve this "
+                    f"model monolithically.")
+        if cfg.disagg_role:
+            assert cfg.page_policy == "demand", \
+                "disaggregated serving needs demand paging (COW adoption " \
+                "+ per-row allocation at transfer-in)"
+        # "auto" resolves by layout; explicit values passed validation above
+        self.preempt_policy = cfg.preempt_policy if \
+            cfg.preempt_policy != "auto" else \
+            ("swap" if self.kv_layout == "paged" else "recompute")
         if self.kv_layout == "paged":
             self.request_capacity = cfg.request_capacity or \
                 (cfg.prompt_capacity + 64)
@@ -927,6 +977,11 @@ class ServingEngine:
         # swap_fallbacks counts manifests dropped to break pin-deadlocks
         self._swap_seq = 0
         self.swap_fallbacks = 0
+        # disaggregated handoff: transfer sequence numbers key the cipher
+        # in the dedicated transfer counter space (sealing.transfer_seq),
+        # so handoff seals never collide with swap or activation seals
+        self._transfer_seq = 0
+        self.transfers_out = 0
 
         # --- decode backend ----------------------------------------------
         if backend is None:
@@ -980,6 +1035,18 @@ class ServingEngine:
         if self.kv_layout == "paged":
             self._prefill_at = self.aot.wrap(
                 "prefill_bucket", jax.jit(api.prefill_at_fn), dispatch=disp)
+        # packed prefill: K prompts share one bucketed call, logits read
+        # per-row at each prompt's own last position (satellite of the
+        # disaggregated prefill role, but usable monolithically too)
+        assert cfg.prefill_pack >= 0, cfg.prefill_pack
+        self._prefill_at_packed = None
+        if (cfg.prefill_pack > 1 and self.kv_layout == "paged"
+                and cfg.batched_prefill):
+            self._prefill_at_packed = self.aot.wrap(
+                "prefill_packed", jax.jit(api.prefill_packed_fn),
+                dispatch=disp)
+        self.packed_admissions = 0
+        self.packed_prefills = 0
         self._key = jnp.uint32(0xC0FFEE)
         self.sampler = TokenSampler(cfg.temperature, cfg.top_k,
                                     cfg.sample_seed)
@@ -1047,6 +1114,13 @@ class ServingEngine:
         never for resources that can't come back (the legacy timeline)."""
         if self.kv_layout == "paged":
             if self.config.page_policy == "demand":
+                if self.pool.has_transfer(req.rid):
+                    # disaggregated handoff admission: one fresh page per
+                    # sealed manifest row (+1 headroom) — rows resolved
+                    # against this pool's COW index at ingest are pinned
+                    # and re-adopt for free, exactly like swap resume
+                    need, supply = self._transfer_budget(req)
+                    return supply >= need
                 if self.pool.has_swap(req.rid):
                     # swapped-out resume: needs one fresh device page per
                     # SEALED manifest row (+1 growth headroom) — shared
@@ -1122,6 +1196,14 @@ class ServingEngine:
         supply = self.pool.free_pages + self.pool.evictable_pages
         return man.sealed_pages + 1, supply
 
+    def _transfer_budget(self, req: Request) -> Tuple[int, int]:
+        """Admission budget for an ingested handoff: same shape as
+        ``_swap_budget`` — one fresh page per sealed row plus growth/fork
+        headroom; shared (COW-resolved) rows are pinned and free."""
+        man = self.pool.transfer_manifest[req.rid]
+        supply = self.pool.free_pages + self.pool.evictable_pages
+        return man.sealed_pages + 1, supply
+
     def _bucket(self, n: int) -> int:
         """Pad prompt lengths to power-of-two buckets (capped at
         prompt_capacity — or request_capacity for prompts a preemption
@@ -1139,6 +1221,12 @@ class ServingEngine:
     def _prefill_slot(self, slot: int, req: Request) -> None:
         t0 = time.perf_counter()
         if self.kv_layout == "paged":
+            if self.pool.has_transfer(req.rid):
+                # disaggregated handoff: restore the peer-sealed pages in
+                # one warmed scatter — no prefill, no logits, no sample
+                # (the prefill engine already sampled the first token)
+                self._transfer_in(slot, req, t0)
+                return
             if self.pool.has_swap(req.rid):
                 # two-tier resume: restore the sealed pages instead of
                 # re-prefilling — no logits, no new token (the token the
@@ -1426,7 +1514,7 @@ class ServingEngine:
         goes to the FRONT of the queue (victims were admitted before
         anything still queued, so appendleft keeps the queue rid-ordered)
         and the resumed stream is bit-identical."""
-        if (self.config.preempt_policy == "swap"
+        if (self.preempt_policy == "swap"
                 and self.config.page_policy == "demand"
                 and req.status == RUNNING and slot not in self.chunking):
             self._preempt_swap(slot, req)
@@ -1535,18 +1623,158 @@ class ServingEngine:
                              "restored": restored,
                              "shared": len(pages) - restored, "ms": ms})
 
+    # -- disaggregated handoff: sealed cross-engine KV transfer ------------
+    def export_transfer(self, slot: int) -> Tuple[Request, "TransferManifest"]:
+        """Prefill-side handoff: seal EVERY page of ``slot`` (shared pages
+        included — the payload keeps all rows, so decode-side pin demotion
+        is lossless) in one warmed ``gather_pages`` call keyed by a counter
+        from the dedicated transfer sequence space, free this engine's
+        pages, and vacate the slot (HANDOFF state). Returns the request and
+        the manifest the orchestrator ships to the decode engine. The first
+        sampled token rides in ``req.generated`` and was never written to
+        KV — it becomes the decode engine's first input, exactly as the
+        pre-preemption token does at swap-in."""
+        assert self.kv_layout == "paged" \
+            and self.config.page_policy == "demand"
+        req = self.scheduler.slots[slot]
+        assert req is not None and req.status == RUNNING and req.generated, \
+            (slot, req)
+        pages = self.slot_pages.pop(slot)
+        n_tokens = self.slot_len.pop(slot)
+        # content keys for the decode pool's COW resolution: the tokens
+        # whose KV is actually written (generated[-1] is pending, unwritten)
+        tokens = list(req.prompt) + [int(t) for t in req.generated[:-1]]
+        assert len(tokens) == n_tokens, (len(tokens), n_tokens)
+        keys = self._prompt_page_keys(tokens)
+        MP = self.pages_per_slot
+        gather_vec = np.zeros(MP, np.int32)
+        entries: List[Tuple[str, Any]] = []
+        for i, pg in enumerate(pages):
+            gather_vec[i] = pg
+            entries.append(("sealed",
+                            (i, keys[i] if i < len(keys) else None)))
+        seq = sealing.transfer_seq(self._transfer_seq)
+        self._transfer_seq += 1
+        ck, cv = self.backend.gather_pages(
+            jnp.asarray(gather_vec), self._key, jnp.uint32(seq))
+        payload = (np.asarray(ck), np.asarray(cv))
+        man = TransferManifest(req.rid, n_tokens, entries, payload, seq)
+        self.pool.release(pages)
+        self.backend.clear_slot(slot)
+        self.scheduler.handoff(slot, step=self.steps)
+        self.pending[slot] = 0
+        self.transfers_out += 1
+        self._emit("handoff_out", {"rid": req.rid, "slot": slot,
+                                   "pages": len(pages),
+                                   "n_tokens": n_tokens})
+        return req, man
+
+    def ingest_transfer(self, req: Request, man: "TransferManifest") -> None:
+        """Decode-side handoff ingestion: resolve each keyed sealed row
+        against THIS pool's COW prefix index (hits flip to pinned shared
+        entries — their payload rows will scatter to the drop sentinel),
+        park the manifest, and adopt the request into the admission queue.
+        ``_fits`` then gates on the remaining sealed rows and
+        ``_prefill_slot`` routes to ``_transfer_in``."""
+        assert self.kv_layout == "paged" \
+            and self.config.page_policy == "demand"
+        total = man.n_tokens + (req.max_new_tokens - len(req.generated)) + 1
+        assert total <= self.request_capacity, \
+            f"handoff rid {req.rid}: {total} tokens > decode " \
+            f"request_capacity {self.request_capacity}"
+        assert self.pool.pages_needed(total) + 1 <= self.pool.num_pages - 1, \
+            f"handoff rid {req.rid} cannot fit the decode pool"
+        entries = list(man.entries)
+        adopted = 0
+        if self.config.prefix_sharing:
+            for i, (tag, val) in enumerate(entries):
+                assert tag == "sealed", (i, tag)
+                _row, key = val
+                if key is None:
+                    continue
+                pg = self.pool.lookup_prefix(key)
+                if pg is not None:      # the lookup pinned pg (manifest ref)
+                    entries[i] = ("shared", (key, pg))
+                    adopted += 1
+        self.pool.register_transfer(req.rid, entries, man.payload,
+                                    man.n_tokens, man.counter)
+        self.scheduler.adopt(req)
+        self._emit("handoff_in", {"rid": req.rid,
+                                  "sealed": len(entries) - adopted,
+                                  "shared": adopted})
+
+    def _transfer_in(self, slot: int, req: Request, t0: float) -> None:
+        """Admit an ingested handoff: allocate one fresh device page per
+        sealed row, unseal+scatter the peer's payload in ONE warmed call
+        (the same ``scatter_pages`` executable swap-in uses — the counter
+        is a traced argument), adopt COW-resolved shared pages in place,
+        rebuild the block table at the transferred seq_len, and register
+        freshly landed prompt pages in this pool's prefix index (the same
+        freezing one-shot admission performs). No sample: the prefill
+        engine's first token (generated[-1]) is the next decode input, so
+        the stream continues bit-identically to the monolithic engine."""
+        man = self.pool.transfer_in(req.rid)
+        MP, N = self.pages_per_slot, self.pool.num_pages
+        pages: List[int] = []
+        scatter_vec = np.full(MP, N, np.int32)
+        fresh_keys: List[Tuple[tuple, int]] = []
+        restored = 0
+        for i, (tag, val) in enumerate(man.entries):
+            if tag == "shared":
+                pages.append(val[1])
+            else:
+                row, key = val
+                pg = self.pool.alloc_one()
+                assert pg is not None, "gated by _fits/_transfer_budget"
+                pages.append(pg)
+                scatter_vec[row] = pg
+                restored += 1
+                if key is not None:
+                    fresh_keys.append((key, pg))
+        ck, cv = man.payload
+        self.backend.scatter_pages(
+            jnp.asarray(ck), jnp.asarray(cv), jnp.asarray(scatter_vec),
+            self._key, jnp.uint32(man.counter))
+        bt_row = np.zeros(MP, np.int32)
+        bt_row[:len(pages)] = pages
+        self.backend.commit_slot(slot, jnp.asarray(bt_row), man.n_tokens)
+        self.slot_pages[slot] = pages
+        self.slot_len[slot] = man.n_tokens
+        if self.config.prefix_sharing:
+            for key, pg in fresh_keys:
+                if key not in self.pool.prefix_index:
+                    self.pool.register_prefix(key, pg)
+        self.pending[slot] = req.generated[-1]
+        ms = (time.perf_counter() - t0) * 1e3
+        self.admission_ms.append(ms)
+        self.admissions += 1
+        self._emit("admit", {"rid": req.rid, "slot": slot,
+                             "resumed": "transfer", "pages": len(pages),
+                             "restored": restored,
+                             "shared": len(pages) - restored, "ms": ms})
+
     def _maybe_break_swap_deadlock(self, nxt: Request) -> bool:
         """Pin-deadlock breaker: with nothing active and nothing chunking,
-        no completion will ever free pages — only swap-manifest pins and
-        the (evictable) COW index hold them. Drop manifests youngest-first
-        (the head's own manifest last) until the head fits; each dropped
-        request reverts to the recompute oracle (its sealed payload is
-        discarded, its shared pins released), restoring PR 6's progress
-        guarantee. Returns True when the head now fits."""
-        if self.kv_layout != "paged" or not self.pool.swap_manifest:
+        no completion will ever free pages — only swap-/transfer-manifest
+        pins and the (evictable) COW index hold them. First demote
+        transfer-manifest pins (LOSSLESS: the handoff payload retains every
+        row, so shared entries flip back to sealed and admission scatters
+        them from the payload instead of adopting index pages), then drop
+        swap manifests youngest-first (the head's own manifest last) until
+        the head fits; each dropped swap reverts to the recompute oracle
+        (its sealed payload is discarded, its shared pins released),
+        restoring PR 6's progress guarantee. Returns True when the head
+        now fits."""
+        if self.kv_layout != "paged" or not (self.pool.swap_manifest
+                                             or self.pool.transfer_manifest):
             return False
         if self.scheduler.active() or self.chunking:
             return False                # completions can still free pages
+        for rid in sorted(self.pool.transfer_manifest):
+            if self._fits(nxt):
+                break
+            if self.pool.demote_transfer(rid):
+                self._emit("transfer_demote", {"rid": rid})
         while not self._fits(nxt) and self.pool.swap_manifest:
             others = sorted(r for r in self.pool.swap_manifest
                             if r != nxt.rid)
@@ -1633,9 +1861,100 @@ class ServingEngine:
                                {"rid": nxt.rid, "waiting_on": kind})
                 return
             self._blocked_rid = None
+            if self._prefill_at_packed is not None and self._packable(nxt):
+                self._admit_packed()
+                continue
             hit = self.scheduler.admit_next(step=self.steps)
             assert hit is not None
             self._prefill_slot(*hit)
+
+    def _packable(self, req: Request) -> bool:
+        """Can ``req`` join a packed prefill group? Plain one-shot paged
+        admissions only — swap resumes and handoff ingests restore KV
+        instead of prefilling, and chunked prompts stream over steps."""
+        if self.pool.has_swap(req.rid) or self.pool.has_transfer(req.rid):
+            return False
+        C = self.config.prefill_chunk
+        return not (C > 0 and len(self._prompt_tokens(req)) > C)
+
+    def _admit_packed(self) -> None:
+        """Greedily admit up to ``prefill_pack`` packable queued requests,
+        acquiring each one's pages as it joins (so the next mate's _fits
+        gate sees the pool state its own allocation will find), then
+        prefill the whole group in ONE shared bucketed call."""
+        t0 = time.perf_counter()
+        group: List[Tuple[int, Request, List[int], List[int], List[bool]]] \
+            = []
+        while len(group) < self.config.prefill_pack:
+            nxt = self.scheduler.peek()
+            if nxt is None or not self._packable(nxt) \
+                    or not self._fits(nxt):
+                break
+            slot, req = self.scheduler.admit_next(step=self.steps)
+            tokens = self._prompt_tokens(req)
+            pages, shared = self._acquire_pages(req)
+            self.slot_pages[slot] = pages
+            self.slot_len[slot] = len(tokens)
+            group.append((slot, req, tokens, pages, shared))
+        assert group, "caller verified the head fits and is packable"
+        self._prefill_packed(group, t0)
+
+    def _prefill_packed(self, group, t0: float) -> None:
+        """One shared bucketed prefill over the group: tokens padded to
+        [K, S_pad] (K = prefill_pack always — dummy all-pad rows keep the
+        compiled shape inventory at one entry per bucket), logits read
+        per-row at each prompt's own last position, KV scattered per slot
+        with the same drop-sentinel discipline as one-shot admission. Each
+        row's stream is bit-identical to its solo admission: rows are
+        batch-independent and padding positions never reach the extracted
+        logit or the pools."""
+        cfg = self.config
+        K = cfg.prefill_pack
+        seg = self.api.model.segments[0].name
+        Pg, N = cfg.page_size, self.pool.num_pages
+        S_pad = self._bucket(max(len(t) for _, _, t, _, _ in group))
+        toks = np.zeros((K, S_pad), np.int32)
+        plens = np.ones(K, np.int32)    # dummy rows extract position 0
+        for b, (_, _, tokens, _, _) in enumerate(group):
+            toks[b, :len(tokens)] = tokens
+            plens[b] = len(tokens)
+        logits, caches = self._prefill_at_packed(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "prompt_lens": jnp.asarray(plens)})
+        kk_all, vv_all = caches[seg]    # [L, K, KVH, S_pad, D]
+        self.prefill_calls += 1
+        self.packed_prefills += 1
+        for b, (slot, req, tokens, pages, shared) in enumerate(group):
+            P = len(tokens)
+            bt_row = np.zeros(self.pages_per_slot, np.int32)
+            bt_row[:len(pages)] = pages
+            idx = np.arange(S_pad)
+            page_of = np.minimum(idx, P - 1) // Pg
+            shared_of = np.asarray(shared, bool)[page_of]
+            skip = (idx >= P) | shared_of
+            pages_vec = np.where(skip, N,
+                                 np.asarray(pages, np.int32)[page_of])
+            offs_vec = np.where(idx < P, idx % Pg, 0).astype(np.int32)
+            self.backend.insert_slot(
+                slot, (kk_all[:, b], vv_all[:, b]),
+                jnp.asarray(pages_vec.astype(np.int32)),
+                jnp.asarray(offs_vec), jnp.asarray(bt_row), P)
+            first = self.sampler.sample_one(logits[b:b + 1], req.rid,
+                                            len(req.generated))
+            self.pending[slot] = first
+            ms = (time.perf_counter() - t0) * 1e3
+            self.admission_ms.append(ms)
+            self.admissions += 1
+            self.packed_admissions += 1
+            detail = {"rid": req.rid, "slot": slot, "pages": len(pages),
+                      "shared": int(sum(shared)), "packed": len(group),
+                      "ms": ms}
+            if req.generated:
+                detail["resumed_at"] = len(req.generated)
+            self._emit("admit", detail)
+            fin = self.scheduler.on_token(slot, first, step=self.steps)
+            if fin is not None:
+                self._on_finish(fin)
 
     # -- one decode step ---------------------------------------------------
     def step(self) -> List[EngineEvent]:
@@ -1922,6 +2241,16 @@ class ServingEngine:
             self.backend.insert_slot(
                 0, kv, jnp.asarray(np.full(b, N, np.int32)),
                 jnp.asarray(np.zeros(b, np.int32)), zeros_row, 0)
+        if self._prefill_at_packed is not None:
+            # packed prefill compiles one shape per bucket at the fixed
+            # group width K (dummy rows pad short groups); the per-row
+            # inserts reuse the single-path shapes warmed just above
+            K = self.config.prefill_pack
+            for b in self._bucket_inventory():
+                self._prefill_at_packed(
+                    self.params,
+                    {"tokens": jnp.asarray(np.zeros((K, b), np.int32)),
+                     "prompt_lens": jnp.asarray(np.ones(K, np.int32))})
         self.backend.copy_page(0, 0)
         self.backend.set_table_entry(0, 0, 0)
         self.backend.commit_slot(0, zeros_row, 0)
@@ -1944,9 +2273,12 @@ class ServingEngine:
         the drop sentinel (unseal + scatter executable, nothing lands).
         Runs under the planned layout here and under each toured layout in
         ``_warm_layouts`` — swap traffic then causes zero post-warmup
-        compiles regardless of which layout is live."""
-        if self.kv_layout != "paged" or \
-                self.config.preempt_policy != "swap":
+        compiles regardless of which layout is live. Disaggregated engines
+        warm it whatever their preempt policy: handoff export/ingest reuse
+        these exact executables (the counter is a traced argument)."""
+        if self.kv_layout != "paged" or (
+                self.preempt_policy != "swap"
+                and not self.config.disagg_role):
             return
         MP, N = self.pages_per_slot, self.pool.num_pages
         ctr = jnp.uint32(0)
@@ -2034,6 +2366,10 @@ class ServingEngine:
             self.slot_len.clear()
         self._swap_seq = 0
         self.swap_fallbacks = 0
+        self._transfer_seq = 0
+        self.transfers_out = 0
+        self.packed_admissions = 0
+        self.packed_prefills = 0
         self.chunking.clear()
         self.pending[:] = 0
         self.steps = 0
@@ -2137,9 +2473,16 @@ class ServingEngine:
             out["peak_demand_pages"] = self.pool.peak_demand
             out["page_policy"] = self.config.page_policy
             out["preemptions"] = self.preemptions
-            out["preempt_policy"] = self.config.preempt_policy
+            out["preempt_policy"] = self.preempt_policy
             out.update(self.pool.stats())   # swapped_pages/swap_outs/ins
+            #                                 + pending_transfers/
+            #                                 transfers_in/demotions
             out["swap_fallbacks"] = self.swap_fallbacks
+            out["disagg_role"] = self.config.disagg_role
+            out["transfers_out"] = self.transfers_out
+            out["prefill_pack"] = self.config.prefill_pack
+            out["packed_admissions"] = self.packed_admissions
+            out["packed_prefills"] = self.packed_prefills
             out["decode_cow"] = self.config.decode_cow
             out["cow_hits"] = self.pool.cow_hits
             out["forks"] = self.pool.forks

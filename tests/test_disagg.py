@@ -1,0 +1,470 @@
+"""Disaggregated prefill/decode across trust domains (DESIGN.md
+§Disaggregated prefill/decode).
+
+The contract under test: a prefill-role engine seals each prompt's KV
+pages into a ``TransferManifest`` (dedicated transfer counter space —
+never colliding with swap or activation seals under the same key); a
+decode-role engine unseals them into its own pool in one warmed
+``scatter_pages`` call and resumes generation, and the resulting token
+streams are **bit-identical** to a monolithic engine receiving the same
+submissions in the same order — property-tested over randomized
+admission / EOS / shared-prefix / tight-pool schedules with the transfer
+ledger's refcount/pin invariants audited after every step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.enclave import sealing
+from repro.serving.scheduler import DONE, PagePool
+
+
+@pytest.fixture(scope="module")
+def f32():
+    """Exact token comparisons need f32 end to end (params AND caches)."""
+    import repro.models.layers as L
+    old = L.DEFAULT_DTYPE
+    L.DEFAULT_DTYPE = jnp.float32
+    yield
+    L.DEFAULT_DTYPE = old
+
+
+@pytest.fixture(scope="module")
+def setup(f32):
+    from repro.models.api import build_model
+    cfg = reduced(get_arch("llama3.2-1b"))
+    api = build_model(cfg, max_seq=128)
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.float32)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        api.init(jax.random.PRNGKey(0)))
+    return cfg, api, params
+
+
+_BASE = dict(num_slots=4, num_microbatches=2, max_seq=128,
+             prompt_capacity=16, telemetry_interval=4, seal_boundary=False,
+             page_size=4, request_capacity=24)
+
+
+def _engine(api, params, **overrides):
+    from repro.serving import EngineConfig, ServingEngine
+    kw = dict(_BASE)
+    kw.update(overrides)
+    return ServingEngine(api, config=EngineConfig(**kw), params=params,
+                         backend="local")
+
+
+def _orch(api, params, prefill_overrides=None, **overrides):
+    from repro.serving import EngineConfig, build_disagg
+    kw = dict(_BASE)
+    kw.update(overrides)
+    return build_disagg(api, params=params, config=EngineConfig(**kw),
+                        prefill_overrides=prefill_overrides, backend="local")
+
+
+def _drive_eng(eng, wl, max_steps=900):
+    reqs, k, gap = [], 0, 0
+    while k < len(wl) or eng.scheduler.has_work():
+        if k < len(wl) and gap <= 0:
+            prompt, max_new, eos, gap = wl[k]
+            reqs.append(eng.submit(prompt, max_new, eos_id=eos))
+            k += 1
+        else:
+            gap -= 1
+        eng.step()
+        eng.scheduler.check_invariants()
+        eng.check_page_invariants()
+        assert eng.steps < max_steps, "schedule failed to drain"
+    assert all(r.status == DONE for r in reqs)
+    return [r.generated for r in reqs]
+
+
+def _drive_orch(orch, wl, max_steps=900):
+    """Submit with arrival gaps; audit BOTH engines' scheduler + pool +
+    transfer-ledger invariants after every orchestrator tick."""
+    reqs, k, gap, steps = [], 0, 0, 0
+    while k < len(wl) or orch.has_work():
+        if k < len(wl) and gap <= 0:
+            prompt, max_new, eos, gap = wl[k]
+            reqs.append(orch.submit(prompt, max_new, eos_id=eos))
+            k += 1
+        else:
+            gap -= 1
+        orch.step()
+        orch.check_invariants()
+        steps += 1
+        assert steps < max_steps, "disagg schedule failed to drain"
+    assert all(r.status == DONE for r in reqs)
+    assert not orch.decode.pool.transfer_manifest, "undrained transfers"
+    return [r.generated for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# Counter-space partition + sealed-transfer round trip
+# ---------------------------------------------------------------------------
+def test_transfer_counter_space_disjoint_from_swap():
+    """Transfer seqs live in [BASE, 2*BASE): ``2*seq + part`` sets bit 31
+    of the pre-tweak value, which no engine-local swap counter (seq < BASE)
+    ever does — so the two spaces can never share a keystream under one
+    key. After the 0xA5A50000 XOR (tweak bit 31 is set) the partition shows
+    as: swap counters keep bit 31, transfer counters clear it."""
+    swap = {int(sealing._swap_counter(s, p))
+            for s in (0, 1, 7, sealing.TRANSFER_SEQ_BASE - 1)
+            for p in (0, 1)}
+    xfer = {int(sealing._swap_counter(sealing.transfer_seq(n), p))
+            for n in (0, 1, 7, sealing.TRANSFER_SEQ_BASE - 1)
+            for p in (0, 1)}
+    assert not swap & xfer
+    assert all(c & 0x80000000 for c in swap)
+    assert not any(c & 0x80000000 for c in xfer)
+    with pytest.raises(AssertionError):
+        sealing.transfer_seq(sealing.TRANSFER_SEQ_BASE)
+    with pytest.raises(AssertionError):
+        sealing.transfer_seq(-1)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sealed_transfer_roundtrip_bit_exact(dtype):
+    """Pages sealed under a transfer seq restore bit-exactly, and the
+    transfer keystream differs from the swap keystream at the same n."""
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(5, 64).astype(np.float32)).astype(dtype)
+    key = jnp.uint32(0xC0FFEE)
+    seq = sealing.transfer_seq(2)
+    ck = sealing.seal_pages(x, key, seq, part=0)
+    cv = sealing.seal_pages(x, key, seq, part=1)
+    assert not np.array_equal(np.asarray(ck), np.asarray(cv))
+    back = sealing.unseal_pages(ck, key, seq, dtype, part=0)
+    assert np.array_equal(np.asarray(x, np.float32),
+                          np.asarray(back, np.float32))
+    swap_ck = sealing.seal_pages(x, key, 2, part=0)
+    assert not np.array_equal(np.asarray(ck), np.asarray(swap_ck))
+
+
+# ---------------------------------------------------------------------------
+# Transfer ledger (PagePool) unit coverage
+# ---------------------------------------------------------------------------
+def test_transfer_manifest_ledger_pins_and_demotes():
+    """register_transfer pins shared rows via the prefix index;
+    demote_transfer losslessly rewrites them to sealed payload rows and
+    releases the pins; transfer_in re-pins for the consuming slot."""
+    pool = PagePool(num_pages=16, page_size=4)
+    # a frozen shared page (as if a COW prefix hit), held by the index only
+    shared = pool.alloc(1)[0]
+    pool.register_prefix(("k",) * 4, shared)
+    pool.release([shared])
+    got = pool.lookup_prefix(("k",) * 4)       # transfer pin (incref)
+    assert got == shared and pool.refcount[shared] == 2
+    payload = (np.zeros((3, 8), np.uint32), np.zeros((3, 8), np.uint32))
+    entries = [("shared", (("k",) * 4, shared)),
+               ("sealed", (1, None)), ("sealed", (2, None))]
+    pool.register_transfer(7, entries, payload, n_tokens=12, counter=5)
+    assert pool.has_transfer(7) and pool.pending_transfers == 1
+    pool.check_invariants({})
+    # demotion: every entry becomes a sealed payload row, pin released
+    freed = pool.demote_transfer(7)
+    assert freed == 1
+    man = pool.transfer_manifest[7]
+    assert man.shared_pages == 0 and man.sealed_pages == 3
+    assert [e for e in man.entries] == [("sealed", (0, ("k",) * 4)),
+                                        ("sealed", (1, None)),
+                                        ("sealed", (2, None))]
+    pool.check_invariants({})
+    assert pool.transfer_demotions == 1
+    man2 = pool.transfer_in(7)
+    assert man2 is man and not pool.has_transfer(7)
+    assert pool.transfers_in == 1
+    # original shared page still frozen in the index, refcount back to 1
+    assert pool.refcount[shared] == 1
+    pool.check_invariants({})
+
+
+def test_transfer_drop_releases_pins():
+    pool = PagePool(num_pages=8, page_size=4)
+    shared = pool.alloc(1)[0]
+    pool.register_prefix(("p",) * 4, shared)
+    pool.release([shared])
+    pool.lookup_prefix(("p",) * 4)
+    payload = (np.zeros((1, 8), np.uint32), np.zeros((1, 8), np.uint32))
+    pool.register_transfer(3, [("shared", (("p",) * 4, shared))], payload,
+                           n_tokens=4, counter=1)
+    assert pool.refcount[shared] == 2
+    pool.check_invariants({})
+    pool.drop_transfer(3)
+    assert not pool.has_transfer(3)
+    assert pool.refcount[shared] == 1
+    pool.check_invariants({})
+
+
+# ---------------------------------------------------------------------------
+# Disagg == monolithic
+# ---------------------------------------------------------------------------
+def test_disagg_matches_monolithic_basic(setup):
+    cfg, api, params = setup
+    rng = np.random.RandomState(0)
+    wl = [(rng.randint(0, cfg.vocab_size, size=n).tolist(), m, None, g)
+          for n, m, g in ((5, 6, 0), (3, 4, 1), (9, 7, 0), (2, 5, 2))]
+    mono = _drive_eng(_engine(api, params), wl)
+    orch = _orch(api, params)
+    got = _drive_orch(orch, wl)
+    assert got == mono
+    st = orch.stats()
+    assert st["handoffs"] == len(wl)
+    assert st["transfers_in"] == len(wl)
+    assert st["prefill_stats"]["transfers_out"] == len(wl)
+
+
+def test_fallback_without_prefill_peer_matches_monolithic(setup):
+    """No prefill peer: the orchestrator degrades to driving the decode
+    engine monolithically — same streams, zero handoffs."""
+    from repro.serving import DisaggOrchestrator
+    cfg, api, params = setup
+    rng = np.random.RandomState(1)
+    wl = [(rng.randint(0, cfg.vocab_size, size=n).tolist(), 5, None, 0)
+          for n in (4, 7, 3)]
+    mono = _drive_eng(_engine(api, params), wl)
+    orch = DisaggOrchestrator(_engine(api, params))
+    got = _drive_orch(orch, wl)
+    assert got == mono
+    assert orch.stats()["handoffs"] == 0
+    assert orch.stats()["disagg"] is False
+
+
+def test_finished_at_prefill_never_ships(setup):
+    """max_new_tokens=1 completes on the prefill side (the first token is
+    sampled there); nothing crosses the boundary for it."""
+    cfg, api, params = setup
+    rng = np.random.RandomState(2)
+    p1 = rng.randint(0, cfg.vocab_size, size=6).tolist()
+    p2 = rng.randint(0, cfg.vocab_size, size=4).tolist()
+    mono = _drive_eng(_engine(api, params), [(p1, 1, None, 0),
+                                             (p2, 5, None, 0)])
+    orch = _orch(api, params)
+    got = _drive_orch(orch, [(p1, 1, None, 0), (p2, 5, None, 0)])
+    assert got == mono
+    st = orch.stats()
+    assert st["handoffs"] == 1 and st["prefill_completed"] == 1
+
+
+def test_backpressure_holds_prompts_at_prefill(setup):
+    """A one-slot decode engine under a burst: the orchestrator skips
+    prefill pumping while decode has no admission room, counts the events,
+    and streams still match the monolithic engine."""
+    cfg, api, params = setup
+    rng = np.random.RandomState(3)
+    wl = [(rng.randint(0, cfg.vocab_size, size=int(n)).tolist(), 6, None, 0)
+          for n in rng.randint(2, 10, size=6)]
+    mono = _drive_eng(_engine(api, params, num_slots=1, num_microbatches=1),
+                      wl)
+    orch = _orch(api, params, num_slots=1, num_microbatches=1)
+    got = _drive_orch(orch, wl)
+    assert got == mono
+    assert orch.stats()["backpressure_events"] > 0
+
+
+def test_disagg_adopts_shared_prefixes_cow(setup):
+    """Prompts sharing a page-aligned prefix: the decode pool resolves the
+    manifest's keyed rows against its own COW index, so the second
+    transfer-in shares pages instead of scattering fresh ones."""
+    cfg, api, params = setup
+    rng = np.random.RandomState(4)
+    base = rng.randint(0, cfg.vocab_size, size=8).tolist()   # two pages
+    wl = [(base + [1], 5, None, 0), (base + [2], 5, None, 2)]
+    mono = _drive_eng(_engine(api, params), wl)
+    orch = _orch(api, params)
+    got = _drive_orch(orch, wl)
+    assert got == mono
+    assert orch.decode.pool.cow_hits > 0
+
+
+# ---------------------------------------------------------------------------
+# Config-time layout rejection + auto policy (satellite bugfix)
+# ---------------------------------------------------------------------------
+def test_timeline_layout_rejects_swap_and_disagg(setup):
+    cfg, api, params = setup
+    with pytest.raises(ValueError, match="timeline"):
+        _engine(api, params, kv_layout="timeline", preempt_policy="swap")
+    with pytest.raises(ValueError, match="timeline"):
+        _engine(api, params, kv_layout="timeline", disagg_role="decode")
+
+
+def test_quantized_cache_model_rejects_swap_and_disagg(f32):
+    """A cache-quantized model has no paged layout; asking for swap
+    preemption or a disagg role must fail loudly at config time, naming
+    the model."""
+    from repro.models.api import build_model
+    cfg = reduced(get_arch("llama3.2-1b"))
+    api = build_model(cfg, max_seq=128, cache_quant=True)
+    assert not api.paged_ok
+    params = api.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match=cfg.name):
+        _engine(api, params, preempt_policy="swap")
+    with pytest.raises(ValueError, match=cfg.name):
+        _engine(api, params, disagg_role="prefill")
+    # the auto default resolves to recompute instead of erroring
+    eng = _engine(api, params)
+    assert eng.preempt_policy == "recompute"
+
+
+def test_auto_policy_resolves_by_layout(setup):
+    cfg, api, params = setup
+    eng = _engine(api, params)
+    assert eng.preempt_policy == "swap"
+    assert eng.stats()["preempt_policy"] == "swap"
+    tl = _engine(api, params, kv_layout="timeline")
+    assert tl.preempt_policy == "recompute"
+
+
+# ---------------------------------------------------------------------------
+# Packed prefill (satellite)
+# ---------------------------------------------------------------------------
+def test_packed_prefill_streams_unchanged(setup):
+    """prefill_pack groups short prompts into one bucketed call; streams
+    are bit-identical to the unpacked engine and packing actually fires."""
+    cfg, api, params = setup
+    rng = np.random.RandomState(5)
+    wl = [(rng.randint(0, cfg.vocab_size, size=int(n)).tolist(), int(m))
+          for n, m in zip(rng.randint(2, 10, size=8),
+                          rng.randint(2, 7, size=8))]
+
+    def run(**over):
+        eng = _engine(api, params, **over)
+        reqs = [eng.submit(p, m) for p, m in wl]   # all queued before step 1
+        while eng.scheduler.has_work():
+            eng.step()
+            eng.scheduler.check_invariants()
+            eng.check_page_invariants()
+            assert eng.steps < 900
+        assert all(r.status == DONE for r in reqs)
+        return eng, [r.generated for r in reqs]
+
+    _, plain = run()
+    packed_eng, packed = run(prefill_pack=4)
+    assert packed == plain
+    st = packed_eng.stats()
+    assert st["packed_admissions"] >= 4
+    # a full-queue admission packs several prompts into ONE prefill call
+    assert st["packed_prefills"] < st["packed_admissions"]
+
+
+def test_disagg_with_packed_prefill(setup):
+    cfg, api, params = setup
+    rng = np.random.RandomState(6)
+    wl = [(rng.randint(0, cfg.vocab_size, size=int(n)).tolist(), 5, None, 0)
+          for n in rng.randint(2, 10, size=6)]
+    mono = _drive_eng(_engine(api, params), wl)
+    orch = _orch(api, params, prefill_overrides={"prefill_pack": 3})
+    got = _drive_orch(orch, wl)
+    assert got == mono
+    assert orch.stats()["prefill_stats"]["packed_admissions"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Role planning (trust domains)
+# ---------------------------------------------------------------------------
+def test_plan_disagg_roles_two_pod():
+    """Canonical topology at serving concurrency: the untrusted full-rate
+    pod takes prefill, decode stays in the enclave, and the leakage price
+    of the exposed prompt is recorded — not silently zero."""
+    from repro.enclave.domain import default_two_pod_manager
+    from repro.serving import plan_disagg_roles
+    cfg = get_arch("llama3.2-1b")
+    plan = plan_disagg_roles(default_two_pod_manager(), cfg)
+    assert (plan.prefill_domain, plan.decode_domain) == ("pod1", "pod0")
+    assert plan.leakage > 0
+    assert plan.handoff_bytes > 0
+    # every candidate decodes in a trusted domain
+    rm = default_two_pod_manager()
+    for c in plan.candidates:
+        assert rm.get(c.decode_domain).trusted
+        assert c.interference_s == 0 or c.prefill_domain == c.decode_domain
+
+
+def test_plan_disagg_roles_colocates_at_low_concurrency():
+    from repro.enclave.domain import default_two_pod_manager
+    from repro.serving import plan_disagg_roles
+    cfg = get_arch("llama3.2-1b")
+    plan = plan_disagg_roles(default_two_pod_manager(), cfg, concurrency=1)
+    assert plan.prefill_domain == plan.decode_domain == "pod0"
+    assert plan.leakage == 0
+
+
+def test_plan_disagg_roles_all_trusted_no_leakage():
+    from repro.enclave.domain import two_enclave_manager
+    from repro.serving import plan_disagg_roles
+    cfg = get_arch("llama3.2-1b")
+    plan = plan_disagg_roles(two_enclave_manager(), cfg)
+    assert plan.leakage == 0
+    assert all(c.leakage == 0 for c in plan.candidates)
+
+
+# ---------------------------------------------------------------------------
+# THE property: disagg == monolithic over randomized schedules
+# ---------------------------------------------------------------------------
+def _workload(rng, vocab, n, share_ratio):
+    base = rng.randint(0, vocab, size=8).tolist()
+    wl = []
+    for _ in range(n):
+        if rng.rand() < share_ratio:
+            prompt = base + rng.randint(
+                0, vocab, size=int(rng.randint(1, 5))).tolist()
+        else:
+            prompt = rng.randint(0, vocab,
+                                 size=int(rng.randint(2, 13))).tolist()
+        eos = int(rng.randint(0, vocab)) if rng.rand() < 0.4 else None
+        wl.append((prompt, int(rng.randint(1, 9)), eos,
+                   int(rng.randint(0, 3))))
+    return wl
+
+
+@pytest.mark.parametrize("seed,num_pages,share_ratio",
+                         [(11, 9, 0.0), (23, 11, 0.5), (37, 14, 0.9)])
+def test_disagg_tight_pool_matches_monolithic(setup, seed, num_pages,
+                                              share_ratio):
+    """Deterministic twin of the hypothesis property (runs in environments
+    without hypothesis): tight decode pools force swap preemption of
+    transferred-in requests; streams still match the roomy monolithic
+    engine and both hosts' tiers drain."""
+    cfg, api, params = setup
+    rng = np.random.RandomState(seed)
+    wl = _workload(rng, cfg.vocab_size, int(rng.randint(4, 10)), share_ratio)
+    mono = _drive_eng(_engine(api, params, page_policy="reserve"), wl)
+    orch = _orch(api, params, page_policy="demand", num_pages=num_pages)
+    got = _drive_orch(orch, wl)
+    assert got == mono
+    assert not orch.decode.pool.swap_manifest
+    assert not orch.eng_prefill.pool.swap_manifest
+
+
+def test_disagg_property_matches_monolithic(setup):
+    """THE tentpole property (hypothesis): over randomized admission / EOS
+    / shared-prefix schedules with a TIGHT decode pool (so transferred-in
+    requests get swap-preempted mid-decode), disaggregated streams are
+    bit-identical to the roomy monolithic engine, with scheduler + page
+    pool + transfer-ledger invariants audited on both engines after every
+    orchestrator tick and all manifests drained."""
+    pytest.importorskip("hypothesis", reason="hypothesis not installed")
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    cfg, api, params = setup
+
+    @settings(deadline=None, max_examples=5, print_blob=True,
+              suppress_health_check=list(HealthCheck))
+    @given(seed=st.integers(0, 2**16 - 1),
+           num_pages=st.sampled_from([9, 11, 14, 0]),
+           share_ratio=st.sampled_from([0.0, 0.5, 0.9]))
+    def prop(seed, num_pages, share_ratio):
+        rng = np.random.RandomState(seed)
+        wl = _workload(rng, cfg.vocab_size, int(rng.randint(4, 10)),
+                       share_ratio)
+        mono = _drive_eng(_engine(api, params, page_policy="reserve"), wl)
+        orch = _orch(api, params, page_policy="demand", num_pages=num_pages)
+        got = _drive_orch(orch, wl)
+        assert got == mono
+        # host tiers fully drained on both sides
+        assert not orch.decode.pool.swap_manifest
+        assert not orch.decode.pool.transfer_manifest
+        assert not orch.eng_prefill.pool.swap_manifest
+
+    prop()

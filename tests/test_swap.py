@@ -138,7 +138,9 @@ def test_page_pool_swap_manifest_accounting():
                payload, 8, counter=1)
     p.release(b)
     assert p.swapped_pages == 3          # sealed rows only, not pins
-    assert p.stats() == {"swapped_pages": 3, "swap_outs": 2, "swap_ins": 0}
+    assert p.stats() == {"swapped_pages": 3, "swap_outs": 2, "swap_ins": 0,
+                     "pending_transfers": 0, "transfers_in": 0,
+                     "transfer_demotions": 0}
     p.check_invariants({})               # pins vs free list vs index agree
     man = p.swap_in(7)
     assert man.n_tokens == 8 and man.sealed_pages == 2
@@ -261,7 +263,9 @@ def test_swap_accounting_and_sealed_bytes_roundtrip(setup):
         eng.step()
     assert req.status == DONE
     assert eng.pool.stats() == {"swapped_pages": 0, "swap_outs": 1,
-                                "swap_ins": 1}
+                                "swap_ins": 1, "pending_transfers": 0,
+                                "transfers_in": 0,
+                                "transfer_demotions": 0}
 
 
 # ---------------------------------------------------------------------------
