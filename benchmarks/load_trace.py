@@ -79,6 +79,17 @@ PRESETS = {
                          max_new_min=6, max_new_max=12,
                          slots=4, page_size=4,
                          page_policy="demand", disagg=True),
+    # the swap-pressure herd replayed with the chaos fault plane armed:
+    # tampered swap payloads (integrity-tag fallbacks), pool-exhaustion
+    # storms, and a mid-trace device death — the replay must still finish
+    # every request with every injected fault accounted to a recovery
+    # counter (DESIGN.md §Fault injection & recovery)
+    "chaos": dict(pattern="bursty", mean_gap=2.0, burst_size=6,
+                  shared_ratio=0.3, eos_prob=0.0,
+                  max_new_min=8, max_new_max=16,
+                  slots=4, page_size=4, num_pages=14,
+                  page_policy="demand", chaos=True, chaos_death=0.3,
+                  telemetry_interval=6),
 }
 
 
@@ -199,6 +210,13 @@ def main(argv=None):
     ap.add_argument("--disagg", action="store_true",
                     help="replay through the disaggregated prefill/decode "
                          "orchestrator instead of one engine")
+    ap.add_argument("--chaos", action="store_true",
+                    help="arm the seeded chaos fault plane for the replay "
+                         "(FaultConfig.chaos(seed=--seed))")
+    ap.add_argument("--chaos-death", type=float, default=0.0, metavar="P",
+                    help="with --chaos: per-telemetry-tick device-death "
+                         "probability (capped at one death)")
+    ap.add_argument("--telemetry-interval", type=int, default=64)
     ap.add_argument("--preset", default=None, choices=sorted(PRESETS),
                     help="named workload preset (overrides matching args)")
     ap.add_argument("--json", default="",
@@ -247,7 +265,12 @@ def main(argv=None):
                       page_size=args.page_size,
                       num_pages=args.num_pages, page_policy=args.page_policy,
                       preempt_policy=args.preempt_policy,
-                      telemetry_interval=64)
+                      telemetry_interval=args.telemetry_interval)
+    if args.chaos:
+        from repro.serving import FaultConfig
+        ec = dataclasses.replace(
+            ec, faults=FaultConfig.chaos(seed=args.seed,
+                                         device_death=args.chaos_death))
     if args.disagg:
         from repro.serving import build_disagg
         eng = build_disagg(api, params=params, config=ec, backend="local")
@@ -275,6 +298,24 @@ def main(argv=None):
             "disagg-burst preset produced no sealed handoffs"
         assert st["trace_completed"] == st["trace_requests"], \
             "disagg-burst replay left requests unfinished"
+    if args.chaos and not args.disagg:
+        inj, rec, pend = st["faults"], st["recovery"], st["faults_pending"]
+        print(f"chaos: injected={inj} "
+              f"recovery={ {k: v for k, v in rec.items() if v} } "
+              f"failed={st['failed_requests']}")
+        # never a silent drop: every request completed or explicitly failed
+        assert st["trace_completed"] + len(st["failed_requests"]) \
+            == st["trace_requests"], "requests silently lost under chaos"
+        # every injected fault accounted to a recovery rung or a marker
+        assert inj["corrupt_swap"] + inj["truncate_swap"] \
+            == rec["unseal_fallback_swap"], (inj, rec)
+        assert inj["device_death"] \
+            == rec["device_loss_replans"] + (1 if pend["death"] else 0)
+        assert inj["pool_storm"] \
+            == rec["storm_reclaims"] + (1 if pend["storm"] else 0)
+    if args.preset == "chaos":
+        assert eng.faults.total_injected() > 0, \
+            "chaos preset injected nothing: nothing verified"
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"config": dataclasses.asdict(tcfg),

@@ -13,8 +13,25 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops as K
+
+
+class SealIntegrityError(Exception):
+    """A sealed payload failed integrity verification.
+
+    The page cipher (``seal_bits``/``unseal_bits``) is a keystream XOR — a
+    *malleable* construction: flipping bit ``i`` of the ciphertext flips bit
+    ``i`` of the recovered plaintext, and truncation silently shortens it.
+    Without an independent integrity check a tampered swap or transfer
+    payload would unseal "successfully" and scatter garbage KV into the
+    pool, corrupting the token stream with no error. ``payload_digest`` /
+    ``verify_payload`` close that gap: the digest commits to the sealed
+    bits, shape, and dtype host-side, and any mismatch raises this typed
+    error so the engine can fall back to recompute instead of emitting
+    corrupt output.
+    """
 
 
 def _leaf_counter(step, leaf_idx: int):
@@ -120,6 +137,78 @@ def unseal_pages(cipher: jax.Array, key, swap_seq, out_dtype, *,
                  part: int = 0, use_kernel: bool = False):
     return K.unseal_bits(cipher, key, _swap_counter(swap_seq, part),
                          out_dtype=out_dtype, use_kernel=use_kernel)
+
+
+def payload_structure(payload: Any) -> tuple:
+    """Cheap structural commitment: (shape, dtype) per leaf, O(#leaves).
+
+    Split out from the byte hash so the engine can reject truncated or
+    reshaped payloads BEFORE handing them to a compiled executable — a
+    wrong shape there would be a hard error (or worse, a fresh XLA
+    compile keyed on the tampered signature), not a recoverable fault.
+    """
+    return tuple((np.asarray(leaf).shape, np.asarray(leaf).dtype.str)
+                 for leaf in jax.tree.leaves(payload))
+
+
+def payload_digest(payload: Any) -> Tuple[tuple, bytes]:
+    """``(structure, sha256)`` over a sealed host payload.
+
+    ``payload`` is any pytree of host-fetchable arrays (the swap/transfer
+    manifests carry ``(cipher_k, cipher_v)`` tuples). The structure half
+    commits to every leaf's shape and dtype (so truncation — not just bit
+    flips — fails verification, cheaply); the SHA-256 half commits to the
+    raw sealed bits. Computed host-side over the *sealed* bits, so
+    verification never touches the keystream and adds no device work —
+    and the expensive hash half can overlap asynchronously dispatched
+    device work (see ``ServingEngine._swap_in``).
+    """
+    h = hashlib.sha256()
+    leaves = [np.asarray(leaf) for leaf in jax.tree.leaves(payload)]
+    for arr in leaves:
+        h.update(repr((arr.shape, arr.dtype.str)).encode())
+        # hashlib consumes the buffer protocol directly — no tobytes() copy
+        h.update(arr if arr.flags.c_contiguous else np.ascontiguousarray(arr))
+    return (tuple((a.shape, a.dtype.str) for a in leaves), h.digest())
+
+
+def verify_structure(payload: Any, digest: Any, *,
+                     context: str = "sealed payload") -> None:
+    """Raise ``SealIntegrityError`` unless ``payload``'s leaf shapes and
+    dtypes match the digest's structural commitment. O(#leaves) — safe to
+    run before dispatching the payload into a warmed executable. Bit flips
+    are invisible here; ``verify_payload`` catches those with the hash.
+
+    ``digest=None`` (a manifest minted before integrity tags, or a test
+    constructing manifests by hand) verifies trivially — the tag is an
+    opt-in commitment, not a format change.
+    """
+    if digest is None:
+        return
+    structure, _ = digest
+    actual = payload_structure(payload)
+    if actual != structure:
+        raise SealIntegrityError(
+            f"{context}: sealed payload structure mismatch "
+            f"(expected {structure}, got {actual}) — "
+            f"payload was truncated or reshaped in transit")
+
+
+def verify_payload(payload: Any, digest: Any, *,
+                   context: str = "sealed payload") -> None:
+    """Raise ``SealIntegrityError`` unless ``payload`` matches ``digest``
+    in both structure and sealed bits. ``digest=None`` verifies trivially
+    (see ``verify_structure``)."""
+    if digest is None:
+        return
+    verify_structure(payload, digest, context=context)
+    _, expected = digest
+    _, actual = payload_digest(payload)
+    if actual != expected:
+        raise SealIntegrityError(
+            f"{context}: sealed payload digest mismatch "
+            f"(expected {expected.hex()[:16]}…, got {actual.hex()[:16]}…) — "
+            f"payload was tampered with in transit")
 
 
 # ---------------------------------------------------------------------------

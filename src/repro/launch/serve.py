@@ -39,6 +39,17 @@ restores them bit-exactly on resume instead of recomputing the prefix.
 undisturbed (``--num-pages 0``) and asserts all three token streams are
 identical (use with ``--f32`` — swap restore is bit-exact, so only float
 argmax ties could otherwise differ between resume paths).
+
+Chaos injection (DESIGN.md §Fault injection & recovery): ``--chaos``
+arms the deterministic seeded fault plane (`serving/faults.py`) —
+sealed-payload tampering, telemetry stage stalls, handoff drop/delay
+under ``--disagg``, pool-exhaustion storms, and (``--chaos-death P``)
+device death mid-decode. ``--verify-recovery`` reruns the same stream
+fault-free and asserts the chaotic run's token streams are identical
+AND every injected fault is attributable to a named
+``stats()["recovery"]`` counter (use with ``--f32 --no-seal``); with
+``--warmup --assert-no-recompile`` the whole recovery ladder is also
+proven compile-free.
 """
 from __future__ import annotations
 
@@ -54,7 +65,7 @@ from repro.core.privacy import LM_SIM_DELTA
 from repro.enclave.domain import sandwich_manager, two_enclave_manager
 from repro.launch.mesh import make_mesh
 from repro.models.api import build_model
-from repro.serving import (EngineConfig, ServingEngine,
+from repro.serving import (EngineConfig, FaultConfig, ServingEngine,
                            pipelined_backend_available)
 
 TOPOLOGIES = {
@@ -156,6 +167,21 @@ def build_parser() -> argparse.ArgumentParser:
                          "fallback (no prefill peer) — and assert all "
                          "three token streams are identical (use with "
                          "--f32)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="arm the seeded chaos fault plane "
+                         "(FaultConfig.chaos(seed=--seed)): sealed-"
+                         "payload corruption/truncation, stage stalls, "
+                         "handoff drops/delays (--disagg), pool storms")
+    ap.add_argument("--chaos-death", type=float, default=0.0,
+                    metavar="P",
+                    help="with --chaos: per-telemetry-tick probability "
+                         "of killing a staged device (capped at one "
+                         "death; recovery = spill + replan + swap-in)")
+    ap.add_argument("--verify-recovery", action="store_true",
+                    help="with --chaos: serve the same stream fault-free "
+                         "and assert identical token streams AND every "
+                         "injected fault accounted to a recovery "
+                         "counter (use with --f32 --no-seal)")
     ap.add_argument("--no-seal", action="store_true")
     ap.add_argument("--topology", default="two-enclave",
                     choices=sorted(TOPOLOGIES),
@@ -208,10 +234,29 @@ def _make_config(args):
         space=args.space, delta=args.delta,
         temperature=args.temperature, top_k=args.top_k,
         telemetry_interval=args.telemetry_interval,
-        warmup=args.warmup, prefill_chunk=args.prefill_chunk)
+        warmup=args.warmup, prefill_chunk=args.prefill_chunk,
+        faults=(FaultConfig.chaos(seed=args.seed,
+                                  device_death=args.chaos_death)
+                if args.chaos else None))
     backend = None if args.backend == "auto" else args.backend
     rm = TOPOLOGIES[args.topology](args.stages)
     return ec, backend, rm
+
+
+def _assert_recovery_accounted(st):
+    """Every injected fault maps to a named recovery rung or an
+    in-progress marker (the tests/test_faults.py accounting property)."""
+    inj, rec, pend = st["faults"], st["recovery"], st["faults_pending"]
+    assert inj["corrupt_swap"] + inj["truncate_swap"] \
+        == rec["unseal_fallback_swap"], (inj, rec)
+    assert inj["corrupt_transfer"] + inj["truncate_transfer"] \
+        == rec["unseal_fallback_transfer"], (inj, rec)
+    assert inj["device_death"] \
+        == rec["device_loss_replans"] + (1 if pend["death"] else 0), (inj, rec)
+    assert inj["stage_stall"] \
+        == rec["stall_replans"] + (1 if pend["stall"] else 0), (inj, rec)
+    assert inj["pool_storm"] \
+        == rec["storm_reclaims"] + (1 if pend["storm"] else 0), (inj, rec)
 
 
 def _make_engine(api, params, mesh, args) -> ServingEngine:
@@ -340,6 +385,35 @@ def _disagg_main(api, params, mesh, args, cfg):
         print(f"DISAGG-EXACT OK: {len(reqs)} token streams identical "
               f"across disaggregated / monolithic / fallback "
               f"({st['handoffs']} sealed handoffs)")
+
+    if args.chaos:
+        dst = orch.decode.stats()
+        print(f"chaos: injected={orch.decode.faults.snapshot()} "
+              f"recovery={ {k: v for k, v in dst['recovery'].items() if v} }"
+              f" in_flight={st['in_flight_handoffs']}")
+    if args.verify_recovery:
+        assert args.chaos, "--verify-recovery needs --chaos"
+        dst = orch.decode.stats()
+        total = orch.decode.faults.total_injected() + \
+            orch.eng_prefill.faults.total_injected()
+        assert total > 0, "chaos armed but no fault landed"
+        assert st["in_flight_handoffs"] == 0
+        calm = copy.copy(args)
+        calm.chaos = False
+        ec2, backend2, rm2 = _make_config(calm)
+        orch2 = build_disagg(api, params=params, config=ec2,
+                             backend=backend2, mesh=mesh, rm=rm2)
+        reqs_calm = _serve_stream_orch(orch2, calm, cfg)
+        for a, b in zip(reqs, reqs_calm):
+            assert a.generated == b.generated, \
+                f"req {a.rid} diverged under chaos:\n" \
+                f"  chaotic    {a.generated}\n  fault-free {b.generated}"
+        assert not dst["failed_requests"], dst["failed_requests"]
+        _assert_recovery_accounted(dst)
+        _assert_recovery_accounted(orch.eng_prefill.stats())
+        print(f"RECOVERY-EXACT OK: {len(reqs)} token streams identical "
+              f"under {total} injected faults across both roles "
+              f"({ {k: v for k, v in dst['recovery'].items() if v} })")
     return st
 
 
@@ -414,6 +488,11 @@ def main(argv=None):
         if eng.warmed:
             print(f"post-warmup compiles: {st['post_warmup_compiles']} "
                   f"stalls: {st['compile_stalls']}")
+        if eng.faults is not None:
+            print(f"chaos: injected={eng.faults.snapshot()} "
+                  f"recovery={ {k: v for k, v in st['recovery'].items() if v} }"
+                  f" pending={st['faults_pending']} "
+                  f"failed={st['failed_requests']}")
         return eng, reqs
 
     eng, reqs = one_run(with_inject=True)
@@ -488,6 +567,25 @@ def main(argv=None):
         print(f"PREEMPT-EXACT OK: {len(reqs)} token streams identical "
               f"across swap resume / recompute oracle / undisturbed "
               f"({st['swap_outs']} swap-outs)")
+
+    if args.verify_recovery:
+        assert args.chaos, "--verify-recovery needs --chaos"
+        total = eng.faults.total_injected()
+        assert total > 0, \
+            "chaos armed but no fault landed: nothing verified (raise " \
+            "--requests, shrink --num-pages, or set --chaos-death)"
+        calm = copy.copy(args)
+        calm.chaos = False
+        _, reqs_calm = one_run(with_inject=True, run_args=calm)
+        for a, b in zip(reqs, reqs_calm):
+            assert a.generated == b.generated, \
+                f"req {a.rid} diverged under chaos:\n" \
+                f"  chaotic    {a.generated}\n  fault-free {b.generated}"
+        assert not st["failed_requests"], st["failed_requests"]
+        _assert_recovery_accounted(st)
+        print(f"RECOVERY-EXACT OK: {len(reqs)} token streams identical "
+              f"under {total} injected faults, every fault accounted "
+              f"({ {k: v for k, v in st['recovery'].items() if v} })")
     return st
 
 

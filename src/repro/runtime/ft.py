@@ -62,6 +62,12 @@ class OnlineReplanner:
     current_spec: Optional[PlacementSpec] = None
     last_result: Optional[SolveResult] = None
     replans: int = 0
+    # failure-driven re-solves (dead domain excluded) vs deviation-driven
+    # ones, and every domain ever excluded — the chaos fault plane's
+    # property test attributes each injected device death to exactly one
+    # failure_replan whose excluded set names the corpse
+    failure_replans: int = 0
+    excluded_devices: List[str] = dataclasses.field(default_factory=list)
 
     def _adopt(self, spec: PlacementSpec) -> PlacementSpec:
         self.last_result = self.rm.last_plan
@@ -114,6 +120,9 @@ class OnlineReplanner:
         if needs_replan:
             self.replans += 1
             if dead:
+                self.failure_replans += 1
+                self.excluded_devices.extend(
+                    d for d in dead if d not in self.excluded_devices)
                 try:
                     spec = self.rm.replan_on_failure(
                         dead, profiles=self.profiles, n=self.n,

@@ -32,10 +32,18 @@ engine seals each prompt's KV pages into a ``TransferManifest`` that a
 decode-role engine unseals into its own pool, with ``DisaggOrchestrator``
 routing, back-pressure, and bit-identical streams, and
 ``plan_disagg_roles`` picking role placement across trust domains.
+
+And **faults** (DESIGN.md §Fault injection & recovery): ``FaultPlane``, a
+deterministic seeded chaos-injection plane with sites at every
+trust/failure boundary (device death, stage stalls, sealed-payload
+tampering, handoff drop/delay, pool-exhaustion storms), paired with the
+engine's recovery ladder (``stats()["recovery"]``) — every injected fault
+is absorbed bit-identically or surfaced explicitly, never silent.
 """
 from .aot import MONITOR, AotFn, AotRegistry, CompileMonitor, CompileStall
 from .disagg import (DisaggOrchestrator, PrefillEngine, RoleCandidate,
                      RolePlan, build_disagg, plan_disagg_roles)
+from .faults import FaultConfig, FaultPlane
 from .engine import (EngineConfig, EngineEvent, LocalDecodeBackend,
                      PagedLocalBackend, PagedPipelinedBackend,
                      PipelinedDecodeBackend, ServingEngine,
@@ -47,7 +55,8 @@ from .telemetry import StageTelemetry
 
 __all__ = [
     "AotFn", "AotRegistry", "CompileMonitor", "CompileStall",
-    "DisaggOrchestrator", "EngineConfig", "EngineEvent", "HANDOFF",
+    "DisaggOrchestrator", "EngineConfig", "EngineEvent", "FaultConfig",
+    "FaultPlane", "HANDOFF",
     "LocalDecodeBackend", "MONITOR", "PagePool", "PagedLocalBackend",
     "PagedPipelinedBackend", "PipelinedDecodeBackend", "PrefillEngine",
     "Request", "RoleCandidate", "RolePlan", "ServingEngine", "SlotScheduler",

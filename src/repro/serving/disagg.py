@@ -235,9 +235,29 @@ class DisaggOrchestrator:
       count); otherwise the round is skipped and counted
       (``backpressure_events``) — prompts wait in the prefill queue, and
       nothing unbounded accumulates in the decode pool's transfer ledger.
+    * **delivery ladder** — every handoff rides an in-flight queue with a
+      per-handoff deadline and bounded exponential-backoff retries. The
+      chaos fault plane (the decode engine's ``faults``) may drop a
+      delivery attempt (re-sent after ``2^attempt`` orchestrator ticks,
+      ``handoff_retries``), park it for a few ticks (``delay``, counted as
+      a ``handoff_redelivery`` when it lands), or corrupt/truncate the
+      sealed payload in transit (caught by the integrity digest at
+      ``_transfer_in``, which falls back to re-prefill). A handoff that
+      exhausts its attempts or blows its deadline demotes to decode-side
+      re-prefill (``handoff_reprefills``): the request is adopted WITHOUT
+      its manifest and rebuilds KV teacher-forced — bit-identical, never
+      dropped. ``decode.pending_external`` mirrors the in-flight count so
+      a decode stall behind an outstanding retry classifies as
+      recoverable, not permanent.
     * **fallback** — with no prefill peer, ``submit``/``step`` drive the
       decode engine directly: same streams, one engine, zero handoffs.
     """
+
+    # retry ladder bounds: attempt k is re-sent after 2^k ticks, so a
+    # handoff is abandoned to re-prefill after ~2^MAX ticks or at its
+    # delivery deadline, whichever comes first — worst-case TTFT is bounded
+    MAX_ATTEMPTS = 4
+    DEADLINE_TICKS = 24
 
     def __init__(self, decode: ServingEngine,
                  prefill: Optional[PrefillEngine] = None):
@@ -259,6 +279,12 @@ class DisaggOrchestrator:
         self.backpressure_events = 0
         self.handoffs = 0
         self.prefill_completed: List[Request] = []
+        # in-flight delivery ladder: [req, man, attempt, due, deadline,
+        # delayed] rows keyed to the orchestrator tick clock (decode.steps
+        # does not advance while decode idles, so retries need their own
+        # monotone clock)
+        self.clock = 0
+        self._in_flight: List[List[Any]] = []
 
     # -- submission --------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
@@ -293,22 +319,89 @@ class DisaggOrchestrator:
 
     # -- one orchestrator tick ---------------------------------------------
     def step(self) -> None:
-        """Pump prefill (under back-pressure), ship handoffs, tick decode."""
+        """Pump prefill (under back-pressure), drive the in-flight delivery
+        ladder, tick decode."""
+        self.clock += 1
         if self.prefill is not None and self.prefill.has_work():
             room = (len(self.decode.scheduler.queue)
+                    + len(self._in_flight)
                     < self.decode.config.num_slots)
             if room:
                 handoffs, completed = self.prefill.pump()
                 for req, man in handoffs:
-                    self.decode.ingest_transfer(req, man)
-                    self.handoffs += 1
+                    self._in_flight.append(
+                        [req, man, 0, self.clock,
+                         self.clock + self.DEADLINE_TICKS, False])
                 self.prefill_completed.extend(completed)
             else:
                 self.backpressure_events += 1
+        self._deliver_due()
+        self.decode.pending_external = len(self._in_flight)
         self.decode.step()
+
+    def _deliver_due(self) -> None:
+        """One pass over the in-flight ladder: attempt every due delivery.
+        Fault-free (no plane, or no firing) every handoff enqueued this
+        tick delivers this tick — the ladder adds zero latency and the
+        streams/stats match the pre-ladder orchestrator exactly."""
+        plane = self.decode.faults
+        rec = self.decode.recovery
+        still: List[List[Any]] = []
+        for entry in self._in_flight:
+            req, man, attempt, due, deadline, delayed = entry
+            if self.clock < due:
+                still.append(entry)
+                continue
+            if self.clock > deadline:
+                # deadline blown (pathological drop/delay streak): demote
+                # to decode-side re-prefill rather than retry forever
+                self._demote_to_reprefill(req, man, "deadline")
+                continue
+            fate, d = plane.handoff_fate() if plane is not None \
+                else ("deliver", 0)
+            if fate == "drop":
+                attempt += 1
+                if attempt >= self.MAX_ATTEMPTS:
+                    self._demote_to_reprefill(req, man, "retries")
+                    continue
+                rec["handoff_retries"] += 1
+                entry[2] = attempt
+                entry[3] = self.clock + (1 << attempt)   # exponential backoff
+                still.append(entry)
+                continue
+            if fate == "delay":
+                entry[3] = self.clock + d
+                entry[5] = True
+                still.append(entry)
+                continue
+            if plane is not None:
+                # in-transit tamper site: the damage travels with the
+                # manifest; the decode engine's integrity check at
+                # _transfer_in catches it and falls back to re-prefill
+                tampered, mode = plane.maybe_tamper_transfer(man.payload)
+                if mode is not None:
+                    man.payload = tampered
+            self.decode.ingest_transfer(req, man)
+            self.handoffs += 1
+            if attempt > 0 or delayed:
+                rec["handoff_redeliveries"] += 1
+        self._in_flight = still
+
+    def _demote_to_reprefill(self, req: Request, man: TransferManifest,
+                             why: str) -> None:
+        """Retry exhaustion: abandon the sealed handoff and adopt the bare
+        request into the decode queue. ``_prefill_slot`` finds no manifest
+        and re-prefills prompt + the prefill role's first token
+        teacher-forced — the stream is still bit-identical, the request is
+        never lost; only the handoff's O(pages) resume is forfeited."""
+        del man      # the sealed payload is abandoned with the delivery
+        self.decode.recovery["handoff_reprefills"] += 1
+        self.decode.scheduler.adopt(req)
+        self.decode._emit("handoff_reprefill", {"rid": req.rid, "why": why})
 
     def has_work(self) -> bool:
         return ((self.prefill is not None and self.prefill.has_work())
+                or bool(self._in_flight)
                 or self.decode.scheduler.has_work())
 
     def run(self, max_steps: Optional[int] = None) -> List[Request]:
@@ -362,6 +455,7 @@ class DisaggOrchestrator:
         out = dict(self.decode.stats())
         out["disagg"] = self.prefill is not None
         out["handoffs"] = self.handoffs
+        out["in_flight_handoffs"] = len(self._in_flight)
         out["backpressure_events"] = self.backpressure_events
         out["prefill_completed"] = len(self.prefill_completed)
         if self.prefill is not None:

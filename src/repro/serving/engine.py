@@ -62,6 +62,7 @@ from repro.enclave.domain import ResourceManager, two_enclave_manager
 from repro.runtime.ft import HeartbeatMonitor, OnlineReplanner
 from repro.runtime.pipeline import PipelinedDecoder, pipeline_applicable
 from repro.serving.aot import MONITOR, AotRegistry
+from repro.serving.faults import FaultPlane
 from repro.serving.sampling import TokenSampler
 from repro.serving.scheduler import (QUEUED, RUNNING, PagePool, Request,
                                      SlotScheduler, TransferManifest)
@@ -162,6 +163,12 @@ class EngineConfig:
     finished_cap: int = 4096
     step_times_cap: int = 4096
     admission_cap: int = 4096
+    # chaos-injection fault plane (serving/faults.py): a FaultConfig, or
+    # None to serve fault-free. Injection counters surface in
+    # stats()["faults"], the recovery ladder in stats()["recovery"] —
+    # every injected fault is either absorbed by a named recovery rung or
+    # surfaced as an explicit per-request failure, never a silent drop.
+    faults: Any = None
 
 
 # ---------------------------------------------------------------------------
@@ -982,6 +989,23 @@ class ServingEngine:
         # so handoff seals never collide with swap or activation seals
         self._transfer_seq = 0
         self.transfers_out = 0
+        # chaos fault plane + request-level recovery ladder (DESIGN.md
+        # §Fault injection & recovery): every injected fault must land in
+        # one of the named self.recovery counters or in self.failed as an
+        # explicit per-request failure — never a silent drop or corrupt
+        # token. pending_external is set by an orchestrator holding
+        # in-flight handoff retries for this engine, so a head-of-line
+        # stall while a retry is pending classifies as recoverable.
+        self.faults = FaultPlane(cfg.faults) if cfg.faults is not None \
+            else None
+        self.recovery = self._fresh_recovery()
+        self.failed: Dict[int, str] = {}
+        self.pending_external = 0
+        self.stall_reason: Optional[str] = None
+        self._storm_pages: List[int] = []
+        self._storm_left = 0
+        self._death_pending = False
+        self._stall_stage: Optional[int] = None
 
         # --- decode backend ----------------------------------------------
         if backend is None:
@@ -1224,16 +1248,22 @@ class ServingEngine:
             if self.pool.has_transfer(req.rid):
                 # disaggregated handoff: restore the peer-sealed pages in
                 # one warmed scatter — no prefill, no logits, no sample
-                # (the prefill engine already sampled the first token)
-                self._transfer_in(slot, req, t0)
-                return
-            if self.pool.has_swap(req.rid):
+                # (the prefill engine already sampled the first token).
+                # A payload that fails integrity verification drops the
+                # manifest and falls through to teacher-forced re-prefill
+                # (prompt + the first token the prefill role sampled).
+                if self._transfer_in(slot, req, t0):
+                    return
+            elif self.pool.has_swap(req.rid):
                 # two-tier resume: restore the sealed pages instead of
                 # re-prefilling — no logits, no new token (the token the
                 # victim sampled just before preemption rides along in
-                # req.generated and becomes the next decode input)
-                self._swap_in(slot, req, t0)
-                return
+                # req.generated and becomes the next decode input). A
+                # tampered payload drops the manifest and falls through
+                # to the recompute path below, which rebuilds the same KV
+                # bit-identically from prompt + generated.
+                if self._swap_in(slot, req, t0):
+                    return
             C = self.config.prefill_chunk
             if C > 0 and len(self._prompt_tokens(req)) > C:
                 self._begin_chunked(slot, req, t0)
@@ -1536,6 +1566,8 @@ class ServingEngine:
             # COW index, so the retry usually adopts them back for free)
             detail["mid_prefill"] = True
             detail["prefilled"] = cs.pos
+        if self._storm_pages:
+            self.recovery["storm_preemptions"] += 1
         self._emit("preempt", detail)
 
     def _preempt_swap(self, slot: int, req: Request) -> None:
@@ -1571,18 +1603,41 @@ class ServingEngine:
         # fetch to host: the swap tier is host memory — device pages free
         # the moment release() drops their last reference below
         payload = (np.asarray(ck), np.asarray(cv))
-        self.pool.swap_out(req.rid, entries, payload, n_tokens, seq)
+        # integrity tag over the sealed bits: the XOR page cipher is
+        # malleable, so swap-in verifies this digest before adopting the
+        # unsealed rows (the re-hash overlaps the async scatter dispatch)
+        self.pool.swap_out(req.rid, entries, payload, n_tokens, seq,
+                           digest=sealing.payload_digest(payload))
         self.pool.release(pages)        # manifest pins outlive slot refs
         self.backend.clear_slot(slot)
         self.scheduler.preempt(slot, swapped=True)
         self.pending[slot] = 0
+        if self._storm_pages:
+            self.recovery["storm_preemptions"] += 1
         self._emit("preempt", {
             "rid": req.rid, "slot": slot, "policy": "swap",
             "generated": len(req.generated),
             "sealed_pages": sum(1 for t, _ in entries if t == "sealed"),
             "shared_pages": sum(1 for t, _ in entries if t == "shared")})
 
-    def _swap_in(self, slot: int, req: Request, t0: float) -> None:
+    def _integrity_reject(self, req: Request, path: str,
+                          fresh: List[int], e: Exception) -> bool:
+        """Common failure arm for both verification phases of swap-in and
+        transfer-in: return any freshly allocated pages (whose scattered
+        contents, if the dispatch already ran, no block table will ever
+        reference), drop the tampered manifest, and count the fallback —
+        the caller reverts to teacher-forced recompute/re-prefill."""
+        self.pool.release(fresh)
+        if path == "swap":
+            self.pool.drop_swap(req.rid)
+        else:
+            self.pool.drop_transfer(req.rid)
+        self.recovery[f"unseal_fallback_{path}"] += 1
+        self._emit("unseal_fallback", {"rid": req.rid, "path": path,
+                                       "error": str(e)})
+        return False
+
+    def _swap_in(self, slot: int, req: Request, t0: float) -> bool:
         """Resume a swapped-out request: allocate one fresh device page per
         sealed manifest row, unseal+scatter the host payload into them in
         one warmed call, re-adopt shared pages in place (the manifest's pin
@@ -1590,10 +1645,37 @@ class ServingEngine:
         block table at the saved seq_len. No recompute, no logits, no new
         sample: the pre-preemption token (generated[-1]) was never written
         to KV — it is the next decode input, exactly as in the undisturbed
-        run, so the stream continues bit-identically."""
-        man = self.pool.swap_in(req.rid)
+        run, so the stream continues bit-identically.
+
+        Returns False when the payload fails integrity verification (the
+        fault plane's tamper site, or a real man-in-the-middle on the host
+        swap tier): the manifest is dropped and the caller falls back to
+        teacher-forced recompute prefill — the same KV is rebuilt from
+        prompt + generated, so the stream is still bit-identical.
+
+        The unseal+scatter is dispatched BEFORE the host-side digest check:
+        XLA dispatch is asynchronous, so the device unseals while the host
+        re-hashes the sealed bits, hiding the verification cost behind
+        device work instead of adding it to the resume latency. Nothing is
+        adopted until the digest matches — the block table only commits
+        after verification, and on a mismatch the freshly allocated pages
+        are released before any table references them, so the scattered
+        plaintext of a tampered payload is unreachable garbage."""
+        man = self.pool.swap_manifest[req.rid]
+        if self.faults is not None and not self._in_warmup:
+            tampered, mode = self.faults.maybe_tamper_swap(man.payload)
+            if mode is not None:
+                man.payload = tampered
+                self._emit("fault_tamper", {"rid": req.rid, "path": "swap",
+                                            "mode": mode})
+        try:
+            sealing.verify_structure(man.payload, man.digest,
+                                     context=f"swap-in rid {req.rid}")
+        except sealing.SealIntegrityError as e:
+            return self._integrity_reject(req, "swap", [], e)
         MP, N = self.pages_per_slot, self.pool.num_pages
         pages: List[int] = []
+        fresh: List[int] = []
         scatter_vec = np.full(MP, N, np.int32)
         restored = 0
         for i, (tag, val) in enumerate(man.entries):
@@ -1603,12 +1685,19 @@ class ServingEngine:
                 pg = self.pool.alloc_one()
                 assert pg is not None, "gated by _fits/_swap_budget"
                 pages.append(pg)
+                fresh.append(pg)
                 scatter_vec[i] = pg
                 restored += 1
         ck, cv = man.payload
         self.backend.scatter_pages(
             jnp.asarray(ck), jnp.asarray(cv), jnp.asarray(scatter_vec),
             self._key, jnp.uint32(man.counter))
+        try:
+            sealing.verify_payload(man.payload, man.digest,
+                                   context=f"swap-in rid {req.rid}")
+        except sealing.SealIntegrityError as e:
+            return self._integrity_reject(req, "swap", fresh, e)
+        man = self.pool.swap_in(req.rid)
         bt_row = np.zeros(MP, np.int32)
         bt_row[:len(pages)] = pages
         self.backend.commit_slot(slot, jnp.asarray(bt_row), man.n_tokens)
@@ -1622,6 +1711,7 @@ class ServingEngine:
                              "resumed": "swap", "pages": len(pages),
                              "restored": restored,
                              "shared": len(pages) - restored, "ms": ms})
+        return True
 
     # -- disaggregated handoff: sealed cross-engine KV transfer ------------
     def export_transfer(self, slot: int) -> Tuple[Request, "TransferManifest"]:
@@ -1658,7 +1748,8 @@ class ServingEngine:
         ck, cv = self.backend.gather_pages(
             jnp.asarray(gather_vec), self._key, jnp.uint32(seq))
         payload = (np.asarray(ck), np.asarray(cv))
-        man = TransferManifest(req.rid, n_tokens, entries, payload, seq)
+        man = TransferManifest(req.rid, n_tokens, entries, payload, seq,
+                               sealing.payload_digest(payload))
         self.pool.release(pages)
         self.backend.clear_slot(slot)
         self.scheduler.handoff(slot, step=self.steps)
@@ -1697,13 +1788,14 @@ class ServingEngine:
                     entries[i] = ("shared", (key, pg))
                     adopted += 1
         self.pool.register_transfer(req.rid, entries, man.payload,
-                                    man.n_tokens, man.counter)
+                                    man.n_tokens, man.counter,
+                                    digest=man.digest)
         self.scheduler.adopt(req)
         self._emit("handoff_in", {"rid": req.rid,
                                   "sealed": len(entries) - adopted,
                                   "shared": adopted})
 
-    def _transfer_in(self, slot: int, req: Request, t0: float) -> None:
+    def _transfer_in(self, slot: int, req: Request, t0: float) -> bool:
         """Admit an ingested handoff: allocate one fresh device page per
         sealed row, unseal+scatter the peer's payload in ONE warmed call
         (the same ``scatter_pages`` executable swap-in uses — the counter
@@ -1712,10 +1804,27 @@ class ServingEngine:
         freshly landed prompt pages in this pool's prefix index (the same
         freezing one-shot admission performs). No sample: the prefill
         engine's first token (generated[-1]) is the next decode input, so
-        the stream continues bit-identically to the monolithic engine."""
-        man = self.pool.transfer_in(req.rid)
+        the stream continues bit-identically to the monolithic engine.
+
+        Returns False when the payload fails integrity verification (a
+        handoff corrupted or truncated in transit): the manifest is
+        dropped and the caller falls back to teacher-forced re-prefill of
+        prompt + the prefill role's first token — still bit-identical.
+
+        Same dispatch-then-verify overlap as ``_swap_in``: the scatter is
+        dispatched asynchronously, the host re-hashes the sealed bits while
+        the device unseals, and the block table only commits after the
+        digest matches — a tampered handoff's scattered plaintext lands in
+        pages that are released before anything references them."""
+        man = self.pool.transfer_manifest[req.rid]
+        try:
+            sealing.verify_structure(man.payload, man.digest,
+                                     context=f"transfer-in rid {req.rid}")
+        except sealing.SealIntegrityError as e:
+            return self._integrity_reject(req, "transfer", [], e)
         MP, N = self.pages_per_slot, self.pool.num_pages
         pages: List[int] = []
+        fresh: List[int] = []
         scatter_vec = np.full(MP, N, np.int32)
         fresh_keys: List[Tuple[tuple, int]] = []
         restored = 0
@@ -1727,6 +1836,7 @@ class ServingEngine:
                 pg = self.pool.alloc_one()
                 assert pg is not None, "gated by _fits/_transfer_budget"
                 pages.append(pg)
+                fresh.append(pg)
                 scatter_vec[row] = pg
                 restored += 1
                 if key is not None:
@@ -1735,6 +1845,12 @@ class ServingEngine:
         self.backend.scatter_pages(
             jnp.asarray(ck), jnp.asarray(cv), jnp.asarray(scatter_vec),
             self._key, jnp.uint32(man.counter))
+        try:
+            sealing.verify_payload(man.payload, man.digest,
+                                   context=f"transfer-in rid {req.rid}")
+        except sealing.SealIntegrityError as e:
+            return self._integrity_reject(req, "transfer", fresh, e)
+        man = self.pool.transfer_in(req.rid)
         bt_row = np.zeros(MP, np.int32)
         bt_row[:len(pages)] = pages
         self.backend.commit_slot(slot, jnp.asarray(bt_row), man.n_tokens)
@@ -1752,6 +1868,7 @@ class ServingEngine:
                              "resumed": "transfer", "pages": len(pages),
                              "restored": restored,
                              "shared": len(pages) - restored, "ms": ms})
+        return True
 
     def _maybe_break_swap_deadlock(self, nxt: Request) -> bool:
         """Pin-deadlock breaker: with nothing active and nothing chunking,
@@ -1765,11 +1882,21 @@ class ServingEngine:
         (its sealed payload is discarded, its shared pins released),
         restoring PR 6's progress guarantee. Returns True when the head
         now fits."""
-        if self.kv_layout != "paged" or not (self.pool.swap_manifest
-                                             or self.pool.transfer_manifest):
+        if self.kv_layout != "paged":
             return False
         if self.scheduler.active() or self.chunking:
             return False                # completions can still free pages
+        if self._storm_pages:
+            # an injected pool-exhaustion storm wedged admission with
+            # nothing left to complete: reclaim the seized pages before
+            # sacrificing any manifest (the storm is transient noise;
+            # manifests are requests' KV)
+            self._release_storm(reason="deadlock")
+            self.recovery["storm_reclaims"] += 1
+            if self._fits(nxt):
+                return True
+        if not (self.pool.swap_manifest or self.pool.transfer_manifest):
+            return False
         for rid in sorted(self.pool.transfer_manifest):
             if self._fits(nxt):
                 break
@@ -1786,6 +1913,131 @@ class ServingEngine:
                     q.status = QUEUED   # back to the recompute resume path
             self._emit("swap_fallback", {"rid": rid})
         return self._fits(nxt)
+
+    # -- chaos fault plane: injection ticks + recovery ladder --------------
+    @staticmethod
+    def _fresh_recovery() -> Dict[str, int]:
+        """Named rungs of the recovery ladder (stats()["recovery"]): the
+        fault-schedule property test demands every injected fault be
+        attributable to one of these or to an explicit entry in
+        stats()["failed_requests"]."""
+        return {
+            # sealed-payload integrity failure -> recompute fallback
+            "unseal_fallback_swap": 0,
+            "unseal_fallback_transfer": 0,
+            # device loss: surviving slots spilled to sealed host
+            # manifests, then the placement re-solved around the corpse
+            "device_loss_spills": 0,
+            "device_loss_replans": 0,
+            # injected straggler absorbed by a telemetry-driven replan
+            "stall_replans": 0,
+            # pool-exhaustion storm: slots preempted under storm pressure,
+            # seized pages reclaimed (timer expiry or deadlock breaker)
+            "storm_preemptions": 0,
+            "storm_reclaims": 0,
+            # disagg handoff ladder (bumped by DisaggOrchestrator on the
+            # decode engine): re-sends after drops, late deliveries, and
+            # retry-exhaustion demotions to decode-side re-prefill
+            "handoff_retries": 0,
+            "handoff_redeliveries": 0,
+            "handoff_reprefills": 0,
+        }
+
+    def _release_storm(self, reason: str) -> None:
+        if not self._storm_pages:
+            return
+        self._emit("storm_release", {"pages": len(self._storm_pages),
+                                     "reason": reason})
+        self.pool.release(self._storm_pages)
+        self._storm_pages = []
+        self._storm_left = 0
+
+    def _fault_storm_tick(self) -> None:
+        """Pool-exhaustion storm site, drawn once per step: seize a chunk
+        of the free list for a few steps (forcing growth/admission through
+        the preemption machinery), then hand it back. The deadlock breaker
+        may reclaim the pages early — a storm is never allowed to cost a
+        request, only latency."""
+        if self.faults is None or self._in_warmup \
+                or self.kv_layout != "paged":
+            return
+        if self._storm_pages:
+            self._storm_left -= 1
+            if self._storm_left <= 0:
+                self._release_storm(reason="timer")
+                self.recovery["storm_reclaims"] += 1
+            return
+        n = self.faults.storm_pages(self.pool.free_pages)
+        if n:
+            pages = self.pool.alloc(n)
+            assert pages is not None, "storm sized from the free list"
+            self._storm_pages = pages
+            self._storm_left = self.faults.config.storm_steps
+            self._emit("fault_storm", {"pages": n,
+                                       "steps": self._storm_left})
+
+    def _fault_telemetry_tick(self) -> None:
+        """Stall + device-death sites, drawn once per telemetry interval.
+        Runs AFTER record_stage_times (whose heartbeat pass marks every
+        staged device healthy — injecting earlier would be instantly
+        resurrected) and BEFORE maybe_observe, so the replanner's very
+        next observation sees the fault exactly as a real heartbeat loss
+        or straggler would surface."""
+        if self._stall_stage is None:    # one outstanding straggler at a time
+            hit = self.faults.pick_stage_stall(self.config.num_stages)
+            if hit is not None:
+                stage, factor = hit
+                self.telemetry.inject(stage, factor)
+                self._stall_stage = stage
+                self._emit("fault_stall",
+                           {"stage": stage, "factor": factor})
+        cur = self.replanner.current
+        healthy = {d.name for d in self.rm.healthy_domains()}
+        used = sorted({s.device for s in cur.placement.stages
+                       if s.device in healthy}) if cur is not None else []
+        # never kill the last healthy domain: the plane makes recovery
+        # expensive, not impossible
+        candidates = used if len(healthy) > 1 else []
+        victim = self.faults.pick_device_death(candidates)
+        if victim is not None:
+            self._recover_device_loss(victim)
+
+    def _recover_device_loss(self, victim: str) -> None:
+        """Rung 1 of the device-loss ladder: mark the domain dead and
+        spill every active slot's KV off the device tier before the
+        replanner restages — swap-policy slots seal their private pages
+        into host manifests (O(pages) resume, PR 8), recompute-policy
+        slots requeue for teacher-forced re-prefill — so no in-flight
+        request depends on state the dead device held. Rung 2 fires in
+        this same step's maybe_observe: ``replan_on_failure`` excludes
+        the corpse and restages through the memoized AOT pairs (zero
+        compiles). Rung 3 is the ordinary admission path swapping every
+        victim back in bit-identically."""
+        self._emit("fault_device_death", {"device": victim})
+        self.rm.mark_unhealthy(victim)
+        self._death_pending = True
+        if self.kv_layout == "paged" \
+                and self.config.page_policy == "demand":
+            for slot, req in sorted(self.scheduler.active(),
+                                    key=lambda t: t[1].rid, reverse=True):
+                if self.scheduler.slots[slot] is not req:
+                    continue        # already evicted by a cascade
+                self._preempt(slot, req)
+                self.recovery["device_loss_spills"] += 1
+
+    def _stall_recoverable(self) -> bool:
+        """Satellite bugfix: a head-of-line stall is *recoverable* while
+        some pending mechanism can still free the blocking pages or
+        re-deliver the blocked request — parked swap/transfer manifests
+        (the deadlock breaker can demote or drop them), an active
+        injected storm (its pages come back), or in-flight handoff
+        retries an orchestrator still holds. Only with none of those is
+        the engine permanently stalled."""
+        if self.pending_external > 0 or self._storm_pages:
+            return True
+        return (self.kv_layout == "paged" and self.pool is not None
+                and bool(self.pool.swap_manifest
+                         or self.pool.transfer_manifest))
 
     def _alloc_or_preempt(self, requester: Request) -> Optional[int]:
         """One page for ``requester``, preempting the lowest-priority
@@ -1959,6 +2211,7 @@ class ServingEngine:
     # -- one decode step ---------------------------------------------------
     def step(self) -> List[EngineEvent]:
         self._step_events = []
+        self._fault_storm_tick()
         with self._mesh_ctx():
             self._admit()
             # chunked prefill: at most ONE prompt chunk per engine step,
@@ -1981,16 +2234,17 @@ class ServingEngine:
                 # head-of-line blocked with nothing running: no completion
                 # can ever free the resource it waits on -> permanently
                 # stalled (callers stop driving; requests stay queued) —
-                # UNLESS swap-manifest pins remain: _grow_active may have
-                # just swap-preempted the last active slots, and the next
-                # _admit's deadlock breaker can still drop pins to make
-                # the head fit, so the stall is not permanent yet
-                recoverable = (self.kv_layout == "paged"
-                               and self.pool is not None
-                               and bool(self.pool.swap_manifest))
+                # UNLESS a pending mechanism can still unblock the head
+                # (_stall_recoverable: manifest pins the deadlock breaker
+                # can demote/drop, an active storm, in-flight handoff
+                # retries), so the stall is not permanent yet
+                recoverable = self._stall_recoverable()
                 self.stalled = bool(self.scheduler.queue) and not recoverable
+                self.stall_reason = None if not self.scheduler.queue else \
+                    ("recoverable" if recoverable else "permanent")
                 return self._step_events
             self.stalled = False
+            self.stall_reason = None
             self.peak_running = max(self.peak_running, len(active))
             if self.kv_layout == "timeline":
                 # unreachable: _fits() only admits requests whose worst-case
@@ -2036,8 +2290,20 @@ class ServingEngine:
                         times = [wall * s for s in shares]
                     if times:
                         self.telemetry.record_stage_times(times)
+                    if self.faults is not None:
+                        self._fault_telemetry_tick()
                 new_spec = self.telemetry.maybe_observe(self.steps)
                 if new_spec is not None:
+                    if self._death_pending:
+                        self.recovery["device_loss_replans"] += 1
+                        self._death_pending = False
+                    if self._stall_stage is not None:
+                        # the replan absorbed the injected straggler;
+                        # clear the factor so the new placement measures
+                        # clean
+                        self.telemetry.inject(self._stall_stage, 1.0)
+                        self._stall_stage = None
+                        self.recovery["stall_replans"] += 1
                     self._emit("replan",
                                {"blocks": new_spec.stage_sizes(),
                                 "placement": new_spec.describe()})
@@ -2386,6 +2652,18 @@ class ServingEngine:
         self.chunk_steps = 0
         self.events.clear()
         self._step_events = []
+        # fault plane: re-seed so the post-warmup serve replays the exact
+        # schedule a cold engine would see (storm pages died with the pool)
+        if self.faults is not None:
+            self.faults.reset()
+        self.recovery = self._fresh_recovery()
+        self.failed.clear()
+        self.pending_external = 0
+        self.stall_reason = None
+        self._storm_pages = []
+        self._storm_left = 0
+        self._death_pending = False
+        self._stall_stage = None
         self.telemetry.reset_measurements()
         self.backend.reset_state()
 
@@ -2436,7 +2714,12 @@ class ServingEngine:
         """Assert the PagePool's refcount/partition invariants against the
         engine's live block tables (property-test hook; no device work)."""
         if self.kv_layout == "paged":
-            self.pool.check_invariants(self.slot_pages)
+            tables: Dict[Any, Any] = dict(self.slot_pages)
+            if self._storm_pages:
+                # storm-seized pages are live references held by the fault
+                # plane, not a leak — audit them like a block table
+                tables["storm"] = self._storm_pages
+            self.pool.check_invariants(tables)
 
     def stats(self) -> Dict[str, Any]:
         out = dict(self.scheduler.stats())
@@ -2445,6 +2728,8 @@ class ServingEngine:
             "steps": self.steps,
             "swaps": self.swaps,
             "replans": self.replanner.replans,
+            "failure_replans": self.replanner.failure_replans,
+            "excluded_devices": list(self.replanner.excluded_devices),
             "backend": self.backend_kind,
             "kv_layout": self.kv_layout,
             "stage_blocks": self.stage_blocks,
@@ -2460,7 +2745,27 @@ class ServingEngine:
             "post_warmup_compiles": self.aot.post_freeze_compiles,
             "compile_stalls": [s.describe()
                                for s in self.aot.post_freeze_stalls],
+            # chaos fault plane: the recovery ladder's named rungs, the
+            # per-request failure ledger, and the stall classification
+            # (satellite: a retry-in-progress is NOT a permanent stall)
+            "stalled": self.stalled,
+            "stall_reason": self.stall_reason,
+            "pending_external": self.pending_external,
+            "recovery": dict(self.recovery),
+            "failed_requests": dict(self.failed),
         })
+        if self.faults is not None:
+            out["faults"] = self.faults.snapshot()
+            # injections whose recovery rung has not completed yet (a
+            # drained engine may end with a stall injected after the last
+            # replan tick, a storm mid-lifetime, …): the accounting
+            # property charges each injected fault to a recovery counter
+            # OR one of these in-progress markers — nothing vanishes
+            out["faults_pending"] = {
+                "death": self._death_pending,
+                "stall": self._stall_stage is not None,
+                "storm": bool(self._storm_pages),
+            }
         if self.admission_ms:
             arr = np.asarray(self.admission_ms)
             out["admission_p50_ms"] = float(np.percentile(arr, 50))

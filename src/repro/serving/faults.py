@@ -1,0 +1,220 @@
+"""Chaos-injection fault plane (DESIGN.md §Fault injection & recovery).
+
+``FaultPlane`` is a deterministic, seeded source of injected faults at
+every trust/failure boundary the serving stack crosses:
+
+* **device death mid-decode** — a stage-hosting trust domain is marked
+  unhealthy between the heartbeat pass and the replanner's observe tick,
+  exactly where a real heartbeat loss would surface;
+* **stage stall / heartbeat loss** — a straggler factor injected through
+  ``StageTelemetry.inject`` (the existing test hook, now driven by the
+  plane), so the deviation detector and derate ladder fire;
+* **sealed-payload corruption and truncation** — bit flips or row
+  truncation applied to a swap/transfer manifest's host payload, which the
+  malleable XOR page cipher would otherwise unseal into garbage KV; the
+  integrity digest (``enclave.sealing.payload_digest``) turns these into a
+  typed ``SealIntegrityError`` and a recompute fallback;
+* **disagg handoff drop/delay** — a delivery attempt from the prefill role
+  to the decode role is lost or parked for a few steps, exercising the
+  orchestrator's deadline + exponential-backoff retry ladder;
+* **pool-exhaustion storms** — a fraction of the free page list is seized
+  for a few steps, forcing the preemption/swap machinery under pressure.
+
+Everything is host-side and derived from one ``random.Random(seed)``
+stream consumed in engine-event order: for a fixed workload the fault
+schedule replays exactly, fault handling dispatches only already-warmed
+executables (payload tampering is numpy on host buffers; recovery rides
+the swap/transfer/restage paths warmup compiled), and the recovered token
+streams can be compared bit-for-bit against a fault-free oracle run —
+the invariant tests/test_faults.py proves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    """Per-site injection probabilities (0.0 disables a site).
+
+    All sites are independent Bernoulli draws from one seeded stream; the
+    per-site knobs below shape what a firing does. ``EngineConfig.faults``
+    carries one of these (or None); ``serve --chaos`` builds the
+    ``chaos()`` mix.
+    """
+
+    seed: int = 0
+    # device death: per-telemetry-tick probability of killing one healthy
+    # stage-hosting domain, capped at max_device_deaths for the lifetime
+    # (the plan must keep at least one survivor)
+    device_death: float = 0.0
+    max_device_deaths: int = 1
+    # stage stall / heartbeat loss: per-telemetry-tick probability of
+    # multiplying one stage's measured time by stall_factor until the
+    # replanner absorbs it
+    stage_stall: float = 0.0
+    stall_factor: float = 8.0
+    # sealed-payload tampering, drawn once per swap-in / handoff delivery:
+    # corrupt flips one payload bit, truncate drops trailing payload rows
+    corrupt_swap: float = 0.0
+    truncate_swap: float = 0.0
+    corrupt_transfer: float = 0.0
+    truncate_transfer: float = 0.0
+    # disagg handoff transit: per-delivery-attempt probabilities
+    drop_handoff: float = 0.0
+    delay_handoff: float = 0.0
+    delay_steps: int = 3
+    # pool-exhaustion storm: per-step probability of seizing
+    # storm_fraction of the free list for storm_steps engine steps
+    pool_storm: float = 0.0
+    storm_fraction: float = 0.6
+    storm_steps: int = 4
+
+    @classmethod
+    def chaos(cls, seed: int = 0, **overrides) -> "FaultConfig":
+        """The default chaotic mix ``serve --chaos`` runs: every site armed
+        at rates that fire several times over a short trace without
+        drowning the engine in back-to-back faults."""
+        base = dict(
+            seed=seed,
+            stage_stall=0.10,
+            corrupt_swap=0.20, truncate_swap=0.10,
+            corrupt_transfer=0.20, truncate_transfer=0.10,
+            drop_handoff=0.15, delay_handoff=0.15,
+            pool_storm=0.05,
+        )
+        base.update(overrides)
+        return cls(**base)
+
+
+class FaultPlane:
+    """Seeded decision engine for one serving engine's (or orchestrator's)
+    injected faults. Each ``maybe_*``/``pick_*`` site draws from the one
+    RNG stream and bumps a named counter in ``injected`` when it fires, so
+    the property test can demand that every injected fault is accounted
+    for by a recovery-ladder counter on the engine side."""
+
+    def __init__(self, config: FaultConfig):
+        self.config = config
+        self.rng = random.Random(config.seed)
+        self.injected: Dict[str, int] = {
+            "device_death": 0,
+            "stage_stall": 0,
+            "corrupt_swap": 0,
+            "truncate_swap": 0,
+            "corrupt_transfer": 0,
+            "truncate_transfer": 0,
+            "drop_handoff": 0,
+            "delay_handoff": 0,
+            "pool_storm": 0,
+        }
+        self.device_deaths = 0
+
+    def reset(self) -> None:
+        """Re-seed the stream and zero the ledger (engine warmup reset:
+        warmed and cold engines must replay the same fault schedule)."""
+        self.rng = random.Random(self.config.seed)
+        for k in self.injected:
+            self.injected[k] = 0
+        self.device_deaths = 0
+
+    def _fire(self, p: float) -> bool:
+        return p > 0.0 and self.rng.random() < p
+
+    def total_injected(self) -> int:
+        return sum(self.injected.values())
+
+    def snapshot(self) -> Dict[str, int]:
+        return dict(self.injected)
+
+    # -- site: device death (telemetry tick) ----------------------------
+    def pick_device_death(self, candidates: Sequence[str]) -> Optional[str]:
+        """One healthy stage-hosting domain to kill, or None. ``candidates``
+        must already exclude domains whose loss would leave no survivor —
+        the plane never makes recovery impossible, only expensive."""
+        if not candidates \
+                or self.device_deaths >= self.config.max_device_deaths \
+                or not self._fire(self.config.device_death):
+            return None
+        self.device_deaths += 1
+        self.injected["device_death"] += 1
+        return sorted(candidates)[self.rng.randrange(len(candidates))]
+
+    # -- site: stage stall / heartbeat loss (telemetry tick) ------------
+    def pick_stage_stall(self, num_stages: int
+                         ) -> Optional[Tuple[int, float]]:
+        if num_stages < 2 or not self._fire(self.config.stage_stall):
+            return None
+        self.injected["stage_stall"] += 1
+        return (self.rng.randrange(num_stages), self.config.stall_factor)
+
+    # -- site: sealed-payload tampering ---------------------------------
+    def _tamper(self, payload: Any, corrupt_p: float, truncate_p: float,
+                kind: str) -> Tuple[Any, Optional[str]]:
+        """Return ``(payload', mode)`` where mode is None (untouched),
+        "corrupt" (one bit flipped) or "truncate" (one trailing row cut).
+        Operates on copies — the manifest holder swaps the tampered
+        payload in, exactly as a man-in-the-middle would."""
+        mode = None
+        if self._fire(corrupt_p):
+            mode = "corrupt"
+        elif self._fire(truncate_p):
+            mode = "truncate"
+        if mode is None:
+            return payload, None
+        parts = [np.asarray(p) for p in payload]
+        if mode == "corrupt":
+            which = self.rng.randrange(len(parts))
+            arr = np.array(parts[which], copy=True)
+            flat = arr.reshape(-1).view(np.uint8)
+            byte = self.rng.randrange(flat.size)
+            flat[byte] ^= np.uint8(1 << self.rng.randrange(8))
+            parts[which] = arr
+        else:
+            rows = max(1, parts[0].shape[0] - 1)
+            parts = [np.array(p[:rows], copy=True) for p in parts]
+        self.injected[f"{mode}_{kind}"] += 1
+        return tuple(parts), mode
+
+    def maybe_tamper_swap(self, payload: Any) -> Tuple[Any, Optional[str]]:
+        return self._tamper(payload, self.config.corrupt_swap,
+                            self.config.truncate_swap, "swap")
+
+    def maybe_tamper_transfer(self, payload: Any
+                              ) -> Tuple[Any, Optional[str]]:
+        return self._tamper(payload, self.config.corrupt_transfer,
+                            self.config.truncate_transfer, "transfer")
+
+    # -- site: disagg handoff transit -----------------------------------
+    def handoff_fate(self) -> Tuple[str, int]:
+        """Fate of ONE delivery attempt: ("deliver", 0), ("drop", 0) —
+        the attempt is lost and the sender must retry — or
+        ("delay", steps) — the manifest arrives ``steps`` decode steps
+        late. Drawn per attempt, so a retried delivery can fail again
+        (the backoff ladder is bounded, not the fault source)."""
+        if self._fire(self.config.drop_handoff):
+            self.injected["drop_handoff"] += 1
+            return ("drop", 0)
+        if self._fire(self.config.delay_handoff):
+            self.injected["delay_handoff"] += 1
+            return ("delay", 1 + self.rng.randrange(
+                max(1, self.config.delay_steps)))
+        return ("deliver", 0)
+
+    # -- site: pool-exhaustion storm (per engine step) -------------------
+    def storm_pages(self, free_pages: int) -> int:
+        """Pages to seize this step (0 = no storm). Never takes the whole
+        free list — admission of a minimal request must stay possible once
+        active slots are preempted, so recovery is expensive, not wedged."""
+        if free_pages < 4 or not self._fire(self.config.pool_storm):
+            return 0
+        n = int(free_pages * self.config.storm_fraction)
+        n = min(n, free_pages - 2)
+        if n <= 0:
+            return 0
+        self.injected["pool_storm"] += 1
+        return n

@@ -255,6 +255,10 @@ class SwapManifest:
     ``payload`` is opaque to the pool: host-resident (device-fetched) sealed
     buffers the engine's backend produced; ``counter`` is the swap sequence
     number that keys the cipher keystream; ``n_tokens`` restores slot_len.
+    ``digest`` (optional) commits to the sealed payload bits
+    (enclave.sealing.payload_digest) — the engine verifies it before
+    unsealing, because the XOR keystream cipher is malleable and would
+    otherwise scatter tampered bits straight into the KV pool.
     """
 
     rid: int
@@ -262,6 +266,7 @@ class SwapManifest:
     entries: List[Tuple[str, Any]]
     payload: Any
     counter: int
+    digest: Any = None
 
     @property
     def sealed_pages(self) -> int:
@@ -292,6 +297,11 @@ class TransferManifest:
     the payload at admission. Because the payload always retains every row,
     demoting a shared entry back to sealed (``demote_transfer``, the
     deadlock-breaker's pin-release path) is lossless.
+
+    ``digest`` mirrors ``SwapManifest.digest``: a host-side commitment to
+    the sealed payload, verified by the decode engine before any row is
+    unsealed — a handoff crosses trust domains, so in-transit tampering is
+    exactly the threat the tag exists for.
     """
 
     rid: int
@@ -299,6 +309,7 @@ class TransferManifest:
     entries: List[Tuple[str, Any]]
     payload: Any
     counter: int
+    digest: Any = None
 
     @property
     def sealed_pages(self) -> int:
@@ -482,14 +493,16 @@ class PagePool:
         return sum(m.sealed_pages for m in self.swap_manifest.values())
 
     def swap_out(self, rid: int, entries: Sequence[Tuple[str, Any]],
-                 payload: Any, n_tokens: int, counter: int) -> SwapManifest:
+                 payload: Any, n_tokens: int, counter: int,
+                 digest: Any = None) -> SwapManifest:
         """Record a victim's sealed spill. The caller has already gathered
         and sealed the private pages into ``payload`` (and will release the
         slot's page references afterwards); this pins every shared page with
         one manifest reference so the prefix index cannot evict it while the
         request is swapped out — re-adoption at swap-in is guaranteed."""
         assert rid not in self.swap_manifest, rid
-        man = SwapManifest(rid, n_tokens, list(entries), payload, counter)
+        man = SwapManifest(rid, n_tokens, list(entries), payload, counter,
+                           digest)
         for tag, val in man.entries:
             if tag == "shared":
                 key, page = val
@@ -534,7 +547,8 @@ class PagePool:
 
     def register_transfer(self, rid: int, entries: Sequence[Tuple[str, Any]],
                           payload: Any, n_tokens: int,
-                          counter: int) -> TransferManifest:
+                          counter: int, digest: Any = None
+                          ) -> TransferManifest:
         """Park an incoming handoff manifest until the scheduler admits its
         request. Shared entries were resolved against this pool's prefix
         index by the caller — ``lookup_prefix`` already took the manifest's
@@ -542,7 +556,8 @@ class PagePool:
         with ``swap_out``, which increfs itself, is deliberate: resolution
         and pinning are one atomic lookup here)."""
         assert rid not in self.transfer_manifest, rid
-        man = TransferManifest(rid, n_tokens, list(entries), payload, counter)
+        man = TransferManifest(rid, n_tokens, list(entries), payload, counter,
+                               digest)
         for tag, val in man.entries:
             if tag == "shared":
                 key, page = val
